@@ -1,0 +1,51 @@
+"""Fig. 15 — layer-aware loss vs contrastive vs cross-entropy under early
+termination.  Paper claims: layer-aware achieves (a) higher accuracy and
+(b) fewer executed units than both baselines when early exit is active."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import agile, dataset, emit
+
+LOSSES = ("layer_aware", "contrastive", "cross_entropy")
+
+
+def evaluate(name: str, loss: str) -> dict:
+    ds = dataset(name)
+    model = agile(name, loss)
+    profs = model.profile_batch(ds.x_test, ds.y_test)
+    mand = np.array([p.mandatory_units() for p in profs])
+    acc_exit = float(np.mean([p.correct[m - 1] for p, m in zip(profs, mand)]))
+    acc_full = float(np.mean([p.correct[p.n_units - 1] for p in profs]))
+    return {
+        "dataset": name,
+        "loss": loss,
+        "acc_early_exit": round(acc_exit, 4),
+        "acc_full": round(acc_full, 4),
+        "mean_units": round(float(mand.mean()), 3),
+        "n_units": profs[0].n_units,
+        "exit_time_saving": round(1.0 - mand.mean() / profs[0].n_units, 4),
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    datasets = ("mnist", "esc10") if quick else (
+        "mnist", "esc10", "cifar100", "vww"
+    )
+    rows = [evaluate(d, l) for d in datasets for l in LOSSES]
+    for d in datasets:
+        by = {r["loss"]: r for r in rows if r["dataset"] == d}
+        rows.append({
+            "dataset": d,
+            "claim_layer_aware_acc_ge_cross_entropy":
+                by["layer_aware"]["acc_early_exit"]
+                >= by["cross_entropy"]["acc_early_exit"] - 0.02,
+            "claim_layer_aware_fewer_units_than_ce":
+                by["layer_aware"]["mean_units"]
+                <= by["cross_entropy"]["mean_units"] + 0.25,
+        })
+    return emit("loss_functions_fig15", rows)
+
+
+if __name__ == "__main__":
+    run(quick=False)

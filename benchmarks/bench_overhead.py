@@ -1,0 +1,87 @@
+"""Fig. 14 — component overheads (wall time per call on this host; the
+paper's absolute MSP430 numbers do not transfer, the *structure* does:
+classifier + utility test ≪ one DNN layer ≪ whole DNN)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy, kmeans as km
+from repro.core.scheduler import SimConfig, TaskSpec, simulate
+from repro.kernels import ops
+
+from .common import agile, dataset, emit, profiles, timeit
+
+
+def run(quick: bool = True) -> list[dict]:
+    ds = dataset("esc10")
+    model = agile("esc10")
+    x1 = jnp.asarray(ds.x_test[:1])
+
+    # one DNN unit (first conv layer) vs whole DNN vs classifier
+    state = model._initial_state(x1)
+
+    def one_unit():
+        s, f = model._run_unit(state, 0)
+        jax.block_until_ready(f)
+
+    def whole_dnn():
+        s = state
+        for u in range(model.n_units):
+            s, f = model._run_unit(s, u)
+        jax.block_until_ready(f)
+
+    uc = model.bank[0]
+    feats0 = model._run_unit(state, 0)[1]
+    classify_jit = jax.jit(km.classify)
+    adapt_jit = jax.jit(km.adapt, static_argnames=("weight",))
+
+    def classify():
+        out = classify_jit(uc, feats0)
+        jax.block_until_ready(out[0])
+
+    def classify_adapt():
+        pred, d1, d2, idx, margin = classify_jit(uc, feats0)
+        new = adapt_jit(uc, feats0, idx, weight=32.0)
+        jax.block_until_ready(new.centroids)
+
+    # scheduler pick overhead: one simulated 3-job decision point
+    prof = list(profiles("esc10"))[:3]
+    task = TaskSpec(
+        0, 1.0, 2.0, np.full(model.n_units, 0.1),
+        np.full(model.n_units, 1e-3), prof,
+    )
+    harv = energy.Harvester("battery", 1.0, 0.0, 1.0)
+
+    def sched():
+        simulate([task], harv, 1.0, sim=SimConfig(policy="zygarde",
+                                                  horizon=3.0))
+
+    cap = energy.Capacitor()
+
+    def energy_manager():
+        cap.charge(1e-3)
+        cap.discharge(5e-4)
+
+    rows = [
+        {"component": "dnn_unit0", "us": timeit(one_unit)},
+        {"component": "dnn_whole", "us": timeit(whole_dnn, repeats=8)},
+        {"component": "kmeans_classify", "us": timeit(classify)},
+        {"component": "classify_plus_adapt", "us": timeit(classify_adapt)},
+        {"component": "scheduler_3jobs", "us": timeit(sched, repeats=5)},
+        {"component": "energy_manager", "us": timeit(energy_manager,
+                                                     repeats=200)},
+    ]
+    by = {r["component"]: r["us"] for r in rows}
+    rows.append({
+        "component": "claim_classifier_much_cheaper_than_dnn",
+        "value": by["kmeans_classify"] < 0.5 * by["dnn_whole"],
+        "detail": f"{by['dnn_whole'] / max(by['kmeans_classify'], 1e-9):.1f}x",
+    })
+    return emit("overhead_fig14", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+"""Figs. 17-20 — real-time scheduling across the seven energy systems
+(Table 4) and policies {EDF, EDF-M, Zygarde}.
+
+Paper claims reproduced here:
+  * EDF-M schedules ~9-34% more jobs than EDF under intermittent power;
+  * Zygarde matches EDF-M's schedule count and raises the number of
+    correct results by executing optional units when eta*E is high;
+  * Solar systems (more power) schedule more jobs than RF at equal eta.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import energy
+from repro.core.scheduler import SimConfig, TaskSpec, simulate
+
+from .common import emit, profiles
+
+# Table 4: (system id, source, eta, average power W) — power rescaled to the
+# simulated workload's per-unit energy budget.
+SYSTEMS = (
+    (1, "battery", 1.00, None),
+    (2, "solar", 0.71, 0.60),
+    (3, "solar", 0.51, 0.42),
+    (4, "solar", 0.38, 0.31),
+    (5, "rf", 0.71, 0.058),
+    (6, "rf", 0.51, 0.071),
+    (7, "rf", 0.38, 0.080),
+)
+
+POLICIES = ("edf", "edf-m", "zygarde")
+
+
+def make_harvester(source: str, eta: float, power: float | None):
+    if source == "battery":
+        return energy.Harvester("battery", 1.0, 0.0, 1.0)
+    # power numbers from Table 4 are mW-scale; normalise so that the solar
+    # systems comfortably power the workload and RF is marginal, as in the
+    # paper's setups.
+    return energy.calibrate_harvester(eta, power, name=source)
+
+
+def run(quick: bool = True) -> list[dict]:
+    datasets = ("mnist", "esc10") if quick else (
+        "mnist", "esc10", "cifar100", "vww"
+    )
+    rows = []
+    for name in datasets:
+        # separability 1.2: utility tests are imperfect, so deeper (optional)
+        # units genuinely improve correctness — the regime of Figs 17-20
+        profs = list(profiles(name, separability=1.2))
+        n_units = profs[0].n_units
+        # full execution just fits on persistent power (U = 0.9); energy
+        # outages push the *effective* utilisation past 1 on systems 2-7,
+        # which is where early termination buys schedulability (Figs 17-20)
+        unit_t = 0.27 / n_units
+        period, deadline = 0.3, 0.72
+        task_args = dict(
+            period=period, deadline=deadline,
+            unit_time=np.full(n_units, unit_t),
+            unit_energy=np.full(n_units, 2.5e-3),
+        )
+        horizon = len(profs) * period + 3.0
+        for sysid, source, eta, power in SYSTEMS:
+            harv = make_harvester(source, eta, power)
+            for policy in POLICIES:
+                task = TaskSpec(task_id=0, profiles=profs, **task_args)
+                res = simulate(
+                    [task], harv, eta,
+                    sim=SimConfig(policy=policy, horizon=horizon, seed=7),
+                )
+                rows.append({
+                    "dataset": name, "system": sysid, "source": source,
+                    "eta": eta, "policy": policy,
+                    "released": res.released,
+                    "scheduled": res.scheduled,
+                    "correct": res.correct,
+                    "optional_units": res.optional_units,
+                    "reboots": res.reboots,
+                })
+
+        def get(sysid, policy, field):
+            for r in rows:
+                if (r.get("dataset") == name and r.get("system") == sysid
+                        and r.get("policy") == policy):
+                    return r[field]
+            return None
+
+        inter = [s for s, *_ in SYSTEMS if s != 1]
+        gains = [
+            (get(s, "edf-m", "scheduled") - get(s, "edf", "scheduled"))
+            / max(get(s, "edf", "scheduled"), 1)
+            for s in inter
+        ]
+        zyg_extra = [
+            get(s, "zygarde", "correct") - get(s, "edf-m", "correct")
+            for s in inter
+        ]
+        rows.append({
+            "dataset": name,
+            "claim_edfm_schedules_more_than_edf": min(gains) >= 0.0,
+            "mean_edfm_gain_pct": round(100 * float(np.mean(gains)), 1),
+            "claim_zygarde_correct_ge_edfm": sum(zyg_extra) >= 0,
+            "zygarde_extra_correct_total": int(sum(zyg_extra)),
+            "claim_zygarde_runs_optional": any(
+                get(s, "zygarde", "optional_units") > 0 for s in (1, 2, 5)
+            ),
+        })
+    return emit("scheduler_figs17_20", rows)
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,106 @@
+"""§Roofline (assignment deliverable g) — aggregate the dry-run records in
+``experiments/dryrun/`` into the per-(arch x shape) roofline table:
+the three terms in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and a one-line "what would move the dominant term" note."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import OUT_DIR, emit
+
+DRYRUN_DIR = OUT_DIR / "dryrun"
+
+NOTES = {
+    ("compute",): "compute-bound: raise MXU utilisation (larger per-chip "
+                  "tiles, bf16 accumulation where safe)",
+    ("memory",): "memory-bound: fuse attention (flash-style Pallas kernel), "
+                 "keep softmax intermediates in VMEM, fewer f32 round-trips",
+    ("collective",): "collective-bound: reduce-scatter instead of all-reduce "
+                     "for grads, overlap all-to-all with expert compute",
+}
+
+
+def load_records(multi_pod: bool = False) -> list[dict]:
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        is_multi = f.stem.endswith("__multipod")
+        if is_multi != multi_pod:
+            continue
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def table_rows(multi_pod: bool = False) -> list[dict]:
+    rows = []
+    for rec in load_records(multi_pod):
+        if rec.get("status") == "skip":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"],
+                "status": "skip", "reason": rec.get("reason", "")[:70],
+            })
+            continue
+        r = rec["roofline"]
+        mem_gb = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+        arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "step": rec["step_kind"],
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(rec["useful_flops_ratio"], 3),
+            "hbm_args_GiB": round(arg_gb, 2),
+            "hbm_temp_GiB": round(mem_gb, 2),
+            "fits_16GiB": bool(arg_gb + mem_gb < 16.0),
+            "note": NOTES[(r["dominant"],)],
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    cols = ["arch", "shape", "step", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_flops_ratio",
+            "hbm_args_GiB", "hbm_temp_GiB", "fits_16GiB"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join(["---"] * len(cols)) + "|"]
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP — "
+                       f"{r['reason']} |" + " |" * (len(cols) - 3))
+            continue
+        out.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = table_rows(multi_pod=False)
+    if not rows:
+        return emit("roofline", [{
+            "error": "no dry-run records; run python -m repro.launch.dryrun "
+                     "--all first"
+        }])
+    (OUT_DIR / "roofline_table.md").write_text(markdown_table(rows))
+    multi = table_rows(multi_pod=True)
+    if multi:
+        (OUT_DIR / "roofline_table_multipod.md").write_text(
+            markdown_table(multi)
+        )
+    ok = [r for r in rows if r.get("status") != "skip"]
+    summary = [{
+        "n_single_pod_records": len(rows),
+        "n_multi_pod_records": len(multi),
+        "n_skips": len(rows) - len(ok),
+        "dominant_memory": sum(r["dominant"] == "memory" for r in ok),
+        "dominant_collective": sum(r["dominant"] == "collective"
+                                   for r in ok),
+        "dominant_compute": sum(r["dominant"] == "compute" for r in ok),
+        "all_fit_hbm": all(r["fits_16GiB"] for r in ok),
+        "table": "experiments/roofline_table.md",
+    }]
+    return emit("roofline", summary + rows)
+
+
+if __name__ == "__main__":
+    run()

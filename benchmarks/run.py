@@ -1,0 +1,65 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (see DESIGN.md §6); each prints
+``bench,key=value,...`` CSV rows and appends to
+``experiments/bench_results.json``.  ``--full`` runs the 4-dataset variants.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (
+    bench_adaptation,
+    bench_capacitor,
+    bench_classifiers,
+    bench_clock,
+    bench_early_termination,
+    bench_eta,
+    bench_loss_functions,
+    bench_overhead,
+    bench_scheduler,
+    roofline,
+)
+
+BENCHES = (
+    ("overhead_fig14", bench_overhead),
+    ("loss_functions_fig15", bench_loss_functions),
+    ("early_termination_fig16", bench_early_termination),
+    ("scheduler_figs17_20", bench_scheduler),
+    ("capacitor_fig21", bench_capacitor),
+    ("clock_table5", bench_clock),
+    ("adaptation_fig24", bench_adaptation),
+    ("eta_validation_fig25", bench_eta),
+    ("classifiers_table7", bench_classifiers),
+    ("roofline", roofline),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all four datasets (slower)")
+    ap.add_argument("--only", nargs="*", help="subset of benchmark names")
+    args = ap.parse_args()
+
+    failures = []
+    for name, mod in BENCHES:
+        if args.only and name not in args.only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---")
+        try:
+            mod.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+    print("# all benchmarks complete -> experiments/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper §9.1 — six real-life acoustic event-detection applications.
+
+Each application is a binary acoustic event detector (target class vs
+background) served by the Zygarde engine on its own harvester setup from
+the paper's Table 6:
+
+    app              source  placement/intermittence        eta
+    car-detector     solar   roadside, passing clouds       0.80
+    dog-monitor      solar   backyard, people block sun     0.60
+    people-detector  solar   window, evening falloff        0.70
+    baby-monitor     rf      bedroom, distance varies       0.65
+    laundry-monitor  rf      utility room                   0.55
+    printer-monitor  rf      office, heavy interference     0.40
+
+Reproduced observations (paper Fig. 22): more intermittence => more missed
+events and deadline misses; classification errors come from the classifier
+and the utility test, event/deadline misses from the harvested energy.
+
+    PYTHONPATH=src python examples/acoustic_applications.py
+"""
+import numpy as np
+
+from repro.core import energy
+from repro.core.agile import AgileCNN
+from repro.data import make_dataset
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.train import train_agile_cnn
+
+APPS = (
+    ("car-detector", "solar", 0.80, 0.50),
+    ("dog-monitor", "solar", 0.60, 0.22),
+    ("people-detector", "solar", 0.70, 0.38),
+    ("baby-monitor", "rf", 0.65, 0.080),
+    ("laundry-monitor", "rf", 0.55, 0.055),
+    ("printer-monitor", "rf", 0.40, 0.040),
+)
+
+N_EVENTS = 30
+
+
+def main() -> None:
+    # one shared acoustic frontend: ESC-10-shaped binary event detector
+    ds = make_dataset("vww", n_train=384, n_test=256, separability=1.2)
+    print("training the acoustic event detector ...")
+    trained = train_agile_cnn(ds, epochs=3, n_pairs=768)
+    print(f"\n{'application':17s} {'src':5s} {'eta':4s} "
+          f"sched  correct  misses  reboots")
+    rows = []
+    for i, (app, source, eta, power) in enumerate(APPS):
+        model = AgileCNN(trained.cfg, trained.params, list(trained.bank))
+        harv = energy.calibrate_harvester(eta, power, name=source)
+        reqs = [
+            Request(ds.x_test[j], int(ds.y_test[j]), release=j * 2.0)
+            for j in range(N_EVENTS)
+        ]
+        engine = ServeEngine(
+            [model], harv, eta,
+            config=ServeConfig(
+                policy="zygarde", period=2.0, deadline=3.0,
+                horizon=N_EVENTS * 2.0 + 5.0, seed=100 + i,
+                unit_time=np.full(model.n_units, 0.4),
+                unit_energy=np.full(model.n_units, 8e-3),
+            ),
+        )
+        res = engine.run([reqs])
+        rows.append((app, eta, res))
+        print(f"{app:17s} {source:5s} {eta:.2f} "
+              f"{res.scheduled:3d}/{res.released:<3d} {res.correct:7d} "
+              f"{res.deadline_misses:7d} {res.reboots:8d}")
+
+    # paper Fig 22 observation: lower-eta / weaker harvesters miss more
+    by_eta = sorted(rows, key=lambda r: r[1])
+    worst, best = by_eta[0][2], by_eta[-1][2]
+    print(f"\nmost intermittent app misses {worst.deadline_misses} vs "
+          f"{best.deadline_misses} for the steadiest "
+          f"(paper: shorter continuous energy => more deadline misses)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver (assignment deliverable b): intermittent multi-task
+serving with batched requests — the paper's §9.2 visual-sensing experiment,
+reproduced with the live ServeEngine.
+
+Two visual tasks share one batteryless device: "sign recognition" (bigger
+CNN, longer deadline) and "shape recognition" (smaller CNN, tighter
+deadline).  Requests arrive as a camera stream; a solar harvester powers
+the device.  Zygarde's unit-granular imprecise scheduling is compared with
+SONIC-style EDF and round-robin — the paper's claims:
+
+  * EDF starves the longer task; RR wastes time and schedules very little;
+  * Zygarde re-prioritises at unit boundaries and schedules the most jobs,
+    with accuracy within ~2% of end-to-end execution.
+
+    PYTHONPATH=src python examples/intermittent_serving.py
+"""
+import numpy as np
+
+from repro.core import energy
+from repro.core.agile import AgileCNN
+from repro.data import make_dataset
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.train import train_agile_cnn
+
+N_REQ = 25
+
+
+def build(name: str, seed: int):
+    ds = make_dataset(name, n_train=384, n_test=128, seed=seed)
+    t = train_agile_cnn(ds, epochs=3, n_pairs=768, seed=seed)
+    return ds, AgileCNN(t.cfg, t.params, t.bank)
+
+
+def main() -> None:
+    print("training the two visual tasks ...")
+    # cifar100 (5-way) plays the sign recogniser; vww (2-way) the shapes
+    sign_ds, sign = build("cifar100", seed=0)
+    shape_ds, shape = build("vww", seed=1)
+
+    harvester = energy.calibrate_harvester(0.71, 0.35, name="solar")
+
+    def requests(ds, n=N_REQ, period=1.0):
+        return [
+            Request(ds.x_test[i], int(ds.y_test[i]), release=i * period)
+            for i in range(n)
+        ]
+
+    print(f"\nserving 2 tasks x {N_REQ} requests on solar (eta=0.71)")
+    print("policy      scheduled  correct  optional  reboots  idle-s")
+    results = {}
+    for policy in ("edf", "rr", "zygarde"):
+        engine = ServeEngine(
+            [sign, shape], harvester, eta=0.71,
+            config=ServeConfig(
+                policy=policy, period=1.0, deadline=2.0,
+                horizon=N_REQ + 5.0, adapt=(policy == "zygarde"),
+                unit_time=np.full(max(sign.n_units, shape.n_units), 0.22),
+                unit_energy=np.full(max(sign.n_units, shape.n_units), 7e-3),
+                seed=3,
+            ),
+        )
+        res = engine.run([requests(sign_ds), requests(shape_ds)])
+        results[policy] = res
+        print(f"{policy:10s} {res.scheduled:6d}/{res.released:<4d} "
+              f"{res.correct:7d} {res.optional_units:9d} "
+              f"{res.reboots:8d} {res.idle_no_energy:7.1f}")
+
+    zyg, edf, rr = results["zygarde"], results["edf"], results["rr"]
+    print(f"\nZygarde schedules {zyg.scheduled - edf.scheduled:+d} jobs vs "
+          f"EDF and {zyg.scheduled - rr.scheduled:+d} vs RR "
+          f"(paper §9.2: 93% vs 55% vs 11% of entered jobs)")
+
+
+if __name__ == "__main__":
+    main()

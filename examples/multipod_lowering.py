@@ -1,0 +1,52 @@
+"""Programmatic multi-pod dry-run: lower dbrx-132b's train step onto the
+2 x 16 x 16 production mesh and print the roofline terms.
+
+This is the library API behind ``python -m repro.launch.dryrun`` — useful
+when embedding the lowering/analysis into notebooks or CI.
+
+    PYTHONPATH=src python examples/multipod_lowering.py [--arch dbrx-132b]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.lowering import analyze, lower_step  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dbrx-132b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--single-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=not args.single_pod)
+    print(f"lowering {cfg.name} x {args.shape} on mesh "
+          f"{dict(mesh.shape)} ({mesh.size} chips) ...")
+    result = lower_step(cfg, args.shape, mesh)
+    record = analyze(result)
+
+    r = record["roofline"]
+    print(json.dumps({k: record[k] for k in (
+        "arch", "shape", "step_kind", "n_devices",
+        "hlo_flops_per_device", "hlo_bytes_per_device",
+        "useful_flops_ratio",
+    )}, indent=2))
+    print(f"roofline: compute {r['compute_s']:.3e}s | "
+          f"memory {r['memory_s']:.3e}s | "
+          f"collective {r['collective_s']:.3e}s  "
+          f"-> bound by {r['dominant']}")
+    print("collectives:", json.dumps(record["collectives"]["counts"]))
+    mem = record["memory"]
+    print(f"per-device HBM: args "
+          f"{mem['argument_size_in_bytes'] / 2**30:.2f} GiB + temps "
+          f"{mem['temp_size_in_bytes'] / 2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

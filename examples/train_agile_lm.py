@@ -1,0 +1,84 @@
+"""Train an assigned-architecture transformer as an *agile* model.
+
+Shows the framework's transformer path end to end on CPU:
+1. LM-pretrain a reduced qwen1.5-0.5b for a few hundred steps
+   (``repro.launch.train`` machinery, single host device).
+2. Fit the per-unit k-means bank over mean-pooled hidden states on a
+   synthetic sequence-classification task; calibrate utility thresholds.
+3. Run early-exit inference through AgileTransformer — the same imprecise
+   execution the serving engine schedules.
+
+    PYTHONPATH=src python examples/train_agile_lm.py [--steps 200]
+"""
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import kmeans as km
+from repro.core import utility as util
+from repro.core.agile import AgileTransformer
+from repro.data import make_lm_tokens, make_token_dataset
+from repro.models import transformer as T
+from repro.train import make_train_step
+from repro.train.optimizer import adamw_init
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt = adamw_init(params)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} (reduced) — {n / 1e6:.2f}M params, "
+          f"{cfg.n_layers} layers, {cfg.n_units} Zygarde units")
+
+    # 1. LM pre-training
+    step = jax.jit(make_train_step(cfg, lr=1e-3))
+    stream = make_lm_tokens(cfg.vocab, args.seq, args.batch * args.steps)
+    for i in range(args.steps):
+        batch = {"tokens": jnp.asarray(
+            stream[i * args.batch:(i + 1) * args.batch]
+        )}
+        params, opt, metrics = step(params, opt, batch)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d}  lm-loss {float(metrics['loss']):.4f}")
+
+    # 2. classifier bank on a 4-way sequence-classification task
+    all_toks, all_y = make_token_dataset(cfg.vocab, args.seq, 4, 240,
+                                         separability=3.0)
+    toks, y = all_toks[:192], all_y[:192]
+    test_toks, test_y = all_toks[192:], all_y[192:]
+    feats = []
+    x, enc = T.embed_inputs(cfg, params, {"tokens": jnp.asarray(toks)})
+    for u in range(cfg.n_units):
+        x, pooled = T.unit_forward(cfg, params, x, u, enc_out=enc)
+        feats.append(np.asarray(pooled))
+    bank = km.fit_bank(feats, y, n_sel=64)
+    bank = util.calibrate_bank_thresholds(bank, feats, y, min_accuracy=0.9)
+    accs = km.bank_accuracy(bank, feats, y)
+    print("per-unit bank accuracy:", [round(a, 3) for a in accs])
+
+    # 3. early-exit inference (held-out split of the same task)
+    model = AgileTransformer(cfg, params, bank)
+    units, correct = [], []
+    for i in range(len(test_y)):
+        r = model.infer(test_toks[i:i + 1], adapt=False)
+        units.append(r.units_executed)
+        correct.append(r.prediction == int(test_y[i]))
+    print(f"early-exit: acc {np.mean(correct):.2%}, "
+          f"mean units {np.mean(units):.2f}/{cfg.n_units} "
+          f"({1 - np.mean(units) / cfg.n_units:.0%} compute saved)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Zygarde core: the paper's contributions C1-C6.
+
+energy       — eta-factor, harvester/capacitor models, schedulability (C1, C5)
+losses       — layer-aware contrastive loss + baselines (C2)
+kmeans       — semi-supervised k-means classifier bank (C3)
+utility      — utility test + threshold calibration (C3)
+scheduler    — imprecise real-time scheduler + event simulator (C4)
+intermittent — atomic-fragment execution substrate (C6)
+agile        — unit-wise early-exit execution engine (C2+C3 glue)
+"""
+from . import energy, losses, kmeans, utility, scheduler, intermittent, agile  # noqa: F401

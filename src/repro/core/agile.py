@@ -1,0 +1,195 @@
+"""Agile DNN execution (paper §4): unit-wise inference with cluster-based
+classification, the utility test, runtime centroid adaptation, and centroid
+propagation past early exits.
+
+Two frontends share one engine:
+  * :class:`AgileCNN`         — the paper's CNNs (unit = one layer)
+  * :class:`AgileTransformer` — assigned architectures (unit = block group)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cnn as cnn_mod
+from repro.models import transformer as tfm
+
+from . import kmeans as km
+from .scheduler import JobProfile
+
+
+@dataclass
+class InferenceResult:
+    prediction: int
+    exit_unit: int                # unit at which the utility test passed
+    units_executed: int
+    margin: float
+    adapted: bool
+
+
+class _AgileBase:
+    """Shared unit-wise inference over a classifier bank."""
+
+    bank: list[km.UnitClassifier]
+
+    # subclasses: _initial_state(x), _run_unit(state, u) -> (state, feats)
+    # and unit_apply_flat(u, flat_feats) for centroid propagation.
+
+    @property
+    def n_units(self) -> int:
+        return len(self.bank)
+
+    def profile_batch(
+        self, xs, labels: np.ndarray
+    ) -> list[JobProfile]:
+        """Full forward for a batch; returns per-sample JobProfiles for the
+        scheduler simulator."""
+        feats = self._all_features(xs)  # list of (B, d_u)
+        B = len(labels)
+        margins = np.zeros((B, self.n_units))
+        passes = np.zeros((B, self.n_units), bool)
+        correct = np.zeros((B, self.n_units), bool)
+        for u, f in enumerate(feats):
+            uc = self.bank[u]
+            pred, d1, d2, idx, margin = km.classify(uc, f)
+            margins[:, u] = np.asarray(margin)
+            passes[:, u] = np.asarray(margin > uc.threshold)
+            correct[:, u] = np.asarray(pred) == labels
+        return [
+            JobProfile(margins[i], passes[i], correct[i]) for i in range(B)
+        ]
+
+    def infer(
+        self, x, *, adapt: bool = True, unit_budget: Optional[int] = None,
+        adapt_weight: float = 32.0,
+    ) -> InferenceResult:
+        """Sequential unit-wise inference with early exit (+ adaptation and
+        centroid propagation when the utility test passes)."""
+        state = self._initial_state(x)
+        budget = unit_budget or self.n_units
+        pred, margin, exit_u = -1, 0.0, -1
+        for u in range(min(budget, self.n_units)):
+            state, feats = self._run_unit(state, u)
+            uc = self.bank[u]
+            p, d1, d2, idx, m = km.classify(uc, feats)
+            pred, margin = int(p[0]), float(m[0])
+            if margin > float(uc.threshold):
+                exit_u = u
+                if adapt:
+                    self.bank[u] = km.adapt(uc, feats, idx,
+                                            weight=adapt_weight)
+                    self._propagate_from(u, idx)
+                break
+        return InferenceResult(
+            prediction=pred,
+            exit_unit=exit_u,
+            units_executed=(exit_u + 1) if exit_u >= 0 else min(
+                budget, self.n_units),
+            margin=margin,
+            adapted=adapt and exit_u >= 0,
+        )
+
+    def _propagate_from(self, u: int, cluster_idx) -> None:
+        """Propagate adapted centroids to the skipped deeper units."""
+        for v in range(u, self.n_units - 1):
+            self.bank[v + 1] = km.propagate(
+                self.bank[v], self.bank[v + 1],
+                lambda f, v=v: self.unit_apply_flat(v + 1, f),
+                cluster_idx,
+            )
+
+
+# --------------------------------------------------------------------------- #
+# CNN frontend.
+# --------------------------------------------------------------------------- #
+
+
+class AgileCNN(_AgileBase):
+    def __init__(self, cfg: cnn_mod.CNNConfig, params: dict,
+                 bank: Sequence[km.UnitClassifier]):
+        self.cfg, self.params = cfg, params
+        self.bank = list(bank)
+        # activation shape entering each unit (for flat->NHWC propagation)
+        self._entry_shapes = self._trace_shapes()
+
+    def _trace_shapes(self):
+        x = jnp.zeros((1, *self.cfg.input_shape))
+        shapes = []
+        h = x
+        for u in range(self.cfg.n_units):
+            shapes.append(h.shape[1:])
+            h, _ = cnn_mod.cnn_unit_forward(self.cfg, self.params, h, u)
+        return shapes
+
+    def _initial_state(self, x):
+        if x.ndim == len(self.cfg.input_shape):
+            x = x[None]
+        return jnp.asarray(x)
+
+    def _run_unit(self, state, u):
+        h, feats = cnn_mod.cnn_unit_forward(self.cfg, self.params, state, u)
+        return h, feats
+
+    def _all_features(self, xs):
+        return cnn_mod.cnn_forward_all(self.cfg, self.params, jnp.asarray(xs))
+
+    def unit_apply_flat(self, u: int, flat: jax.Array) -> jax.Array:
+        """Apply unit u to flattened unit-(u-1) features (for propagation)."""
+        shape = self._entry_shapes[u]
+        x = flat.reshape(flat.shape[0], *shape).astype(jnp.float32)
+        _, feats = cnn_mod.cnn_unit_forward(self.cfg, self.params, x, u)
+        return feats
+
+
+# --------------------------------------------------------------------------- #
+# Transformer frontend (assigned architectures).
+# --------------------------------------------------------------------------- #
+
+
+class AgileTransformer(_AgileBase):
+    """Unit = ``cfg.exit_every`` transformer blocks; features = mean-pooled
+    hidden states.  Used for sequence-classification style Zygarde tasks on
+    the assigned architectures (see examples/intermittent_serving.py)."""
+
+    def __init__(self, cfg, params, bank: Sequence[km.UnitClassifier]):
+        self.cfg, self.params = cfg, params
+        self.bank = list(bank)
+
+    def _initial_state(self, batch):
+        if isinstance(batch, dict):
+            x, enc_out = tfm.embed_inputs(self.cfg, self.params, batch)
+        else:
+            x, enc_out = tfm.embed_inputs(
+                self.cfg, self.params, {"tokens": jnp.asarray(batch)}
+            )
+        return (x, enc_out)
+
+    def _run_unit(self, state, u):
+        x, enc_out = state
+        x, pooled = tfm.unit_forward(self.cfg, self.params, x, u,
+                                     enc_out=enc_out)
+        return (x, enc_out), pooled
+
+    def _all_features(self, batches):
+        state = self._initial_state(batches)
+        feats = []
+        for u in range(self.n_units):
+            state, f = self._run_unit(state, u)
+            feats.append(f)
+        return feats
+
+    def unit_apply_flat(self, u: int, flat: jax.Array) -> jax.Array:
+        """Propagation for pooled features: treat the centroid as a length-1
+        sequence hidden state and push it through unit u."""
+        x = flat[:, None, :].astype(tfm.dtype_of(self.cfg))
+        x, pooled = tfm.unit_forward(self.cfg, self.params, x, u)
+        return pooled
+
+    @property
+    def n_units_model(self) -> int:
+        return self.cfg.n_units

@@ -1,0 +1,220 @@
+"""Semi-supervised k-means classifier bank (paper §4.3).
+
+One classifier per Zygarde unit.  Offline construction: per-unit features
+from the trained agile DNN -> SelectKBest-style feature selection -> k-means
+seeded at class means -> cluster labels by majority vote.  Online: L1
+classify (Pallas `l1_topk2` kernel), weighted-average centroid adaptation,
+and centroid *propagation* to deeper layers after early exit
+(c^{i+1} = (1/r) sigma(W^{i+1} r c^i)).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class UnitClassifier(NamedTuple):
+    """Pytree classifier state for one unit."""
+
+    centroids: jax.Array      # (k, d_full) f32 — full-dim (for propagation)
+    labels: jax.Array         # (k,) int32 — class label per cluster
+    feature_idx: jax.Array    # (n_sel,) int32 — SelectKBest dims
+    counts: jax.Array         # (k,) f32 — cluster sizes (the paper's r)
+    threshold: jax.Array      # () f32 — utility threshold
+
+
+# --------------------------------------------------------------------------- #
+# Offline construction (network-trainer side; numpy).
+# --------------------------------------------------------------------------- #
+
+
+def select_k_best(
+    feats: np.ndarray, labels: np.ndarray, n_sel: int
+) -> np.ndarray:
+    """ANOVA-F-style scoring (stand-in for the paper's chi^2 SelectKBest,
+    which requires non-negative counts): between-class variance over
+    within-class variance, top n_sel dims."""
+    feats = np.asarray(feats, np.float64)
+    classes = np.unique(labels)
+    overall = feats.mean(0)
+    between = np.zeros(feats.shape[1])
+    within = np.zeros(feats.shape[1])
+    for c in classes:
+        sub = feats[labels == c]
+        between += len(sub) * (sub.mean(0) - overall) ** 2
+        within += ((sub - sub.mean(0)) ** 2).sum(0)
+    score = between / (within + 1e-9)
+    n_sel = min(n_sel, feats.shape[1])
+    return np.sort(np.argsort(-score)[:n_sel]).astype(np.int32)
+
+
+def fit_unit_classifier(
+    feats: np.ndarray,
+    labels: np.ndarray,
+    *,
+    n_clusters: int | None = None,
+    n_sel: int = 150,
+    n_iter: int = 10,
+    threshold: float = 0.1,
+    seed: int = 0,
+) -> UnitClassifier:
+    """Semi-supervised fit: seed centroids at class means, Lloyd-iterate with
+    L1 assignment, label clusters by member majority."""
+    feats = np.asarray(feats, np.float32)
+    labels = np.asarray(labels)
+    classes = np.unique(labels)
+    k = n_clusters or len(classes)
+    per = max(1, k // len(classes))
+    rng = np.random.default_rng(seed)
+
+    idx = select_k_best(feats, labels, n_sel)
+    fsel = feats[:, idx]
+
+    cents = []
+    for c in classes:
+        sub = fsel[labels == c]
+        cents.append(sub.mean(0))
+        for _ in range(per - 1):  # extra seeds: jittered class means
+            cents.append(sub[rng.integers(len(sub))])
+    cents = np.stack(cents)[:k] if len(cents) >= k else np.stack(
+        cents + [fsel[rng.integers(len(fsel))] for _ in range(k - len(cents))]
+    )
+    k = len(cents)
+
+    for _ in range(n_iter):
+        d = np.abs(fsel[:, None, :] - cents[None]).sum(-1)
+        assign = d.argmin(1)
+        for j in range(k):
+            members = fsel[assign == j]
+            if len(members):
+                cents[j] = members.mean(0)
+
+    d = np.abs(fsel[:, None, :] - cents[None]).sum(-1)
+    assign = d.argmin(1)
+    clabels = np.zeros(k, np.int32)
+    counts = np.zeros(k, np.float32)
+    for j in range(k):
+        member_labels = labels[assign == j]
+        counts[j] = max(1.0, len(member_labels))
+        clabels[j] = (
+            np.bincount(member_labels).argmax() if len(member_labels)
+            else classes[j % len(classes)]
+        )
+
+    # store FULL-dim centroids (mean of members in full space) for propagation
+    cents_full = np.zeros((k, feats.shape[1]), np.float32)
+    for j in range(k):
+        members = feats[assign == j]
+        cents_full[j] = members.mean(0) if len(members) else feats.mean(0)
+    cents_full[:, idx] = cents  # selected dims exactly as fitted
+
+    return UnitClassifier(
+        centroids=jnp.asarray(cents_full),
+        labels=jnp.asarray(clabels),
+        feature_idx=jnp.asarray(idx),
+        counts=jnp.asarray(counts),
+        threshold=jnp.float32(threshold),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Online operations (device side).
+# --------------------------------------------------------------------------- #
+
+
+def classify(uc: UnitClassifier, feats: jax.Array):
+    """feats: (B, d_full) -> (pred (B,), d1, d2, cluster_idx, margin)."""
+    fsel = feats[:, uc.feature_idx].astype(jnp.float32)
+    csel = uc.centroids[:, uc.feature_idx]
+    d1, d2, idx = ops.l1_topk2(fsel, csel)
+    pred = uc.labels[idx]
+    margin = (d2 - d1) / jnp.maximum(d1 + d2, 1e-9)  # scale-free margin
+    return pred, d1, d2, idx, margin
+
+
+def utility_test(uc: UnitClassifier, margin: jax.Array) -> jax.Array:
+    """True = confident enough to exit (|Delta2 - Delta1| above threshold)."""
+    return margin > uc.threshold
+
+
+def adapt(
+    uc: UnitClassifier, feats: jax.Array, cluster_idx: jax.Array,
+    weight: float = 32.0,
+) -> UnitClassifier:
+    """Weighted-average centroid update (runs when the utility test passes).
+
+    ``weight`` is the mass assigned to the current centroid — large values
+    make adaptation gradual and outlier-robust (paper §11.3).
+    """
+    new_c = ops.centroid_update(
+        uc.centroids, feats.astype(jnp.float32), cluster_idx, weight
+    )
+    new_counts = uc.counts + jnp.bincount(
+        cluster_idx, length=uc.counts.shape[0]
+    ).astype(jnp.float32)
+    return uc._replace(centroids=new_c, counts=new_counts)
+
+
+def propagate(
+    uc_from: UnitClassifier,
+    uc_to: UnitClassifier,
+    unit_apply: Callable[[jax.Array], jax.Array],
+    cluster_idx: jax.Array,
+) -> UnitClassifier:
+    """Paper §4.3 "updating centroids beyond mandatory layers":
+
+        c^{i+1} = (1/r) * sigma(W^{i+1} (r * c^i))
+
+    ``unit_apply`` maps full-dim unit-i features through layer i+1 (weights
+    and bias included); sigma is ReLU ((x+|x|)/2).  Only the clusters that
+    actually absorbed new examples (``cluster_idx``) are refreshed.
+    """
+    r = uc_from.counts[:, None]
+    img = jax.nn.relu(unit_apply(r * uc_from.centroids)) / r
+    mask = jnp.zeros(uc_from.counts.shape[0], bool).at[cluster_idx].set(True)
+    new_c = jnp.where(mask[:, None], img, uc_to.centroids)
+    return uc_to._replace(centroids=new_c)
+
+
+# --------------------------------------------------------------------------- #
+# Bank helpers.
+# --------------------------------------------------------------------------- #
+
+
+def fit_bank(
+    per_unit_feats: Sequence[np.ndarray],
+    labels: np.ndarray,
+    *,
+    n_clusters: int | None = None,
+    n_sel: int = 150,
+    thresholds: Sequence[float] | None = None,
+    seed: int = 0,
+) -> list[UnitClassifier]:
+    bank = []
+    for u, feats in enumerate(per_unit_feats):
+        thr = thresholds[u] if thresholds is not None else 0.1
+        bank.append(
+            fit_unit_classifier(
+                feats, labels, n_clusters=n_clusters, n_sel=n_sel,
+                threshold=thr, seed=seed + u,
+            )
+        )
+    return bank
+
+
+def bank_accuracy(
+    bank: Sequence[UnitClassifier],
+    per_unit_feats: Sequence[np.ndarray],
+    labels: np.ndarray,
+) -> list[float]:
+    accs = []
+    for uc, feats in zip(bank, per_unit_feats):
+        pred, *_ = classify(uc, jnp.asarray(feats))
+        accs.append(float((np.asarray(pred) == labels).mean()))
+    return accs

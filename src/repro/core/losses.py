@@ -1,0 +1,79 @@
+"""Loss functions (paper §4.2): contrastive (Eq. 5), layer-aware (Eq. 4),
+plus the cross-entropy baseline compared against in Fig. 15.
+
+The layer-aware loss is a convex combination of per-layer contrastive losses
+computed on siamese (paired) forward passes — it forces *every* hidden layer
+to produce classification-ready (cluster-separable) features, which is what
+makes early exit accurate.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def l1_distance(f1: jax.Array, f2: jax.Array) -> jax.Array:
+    """Mean (dimension-normalised) L1 distance — matches the classifier's
+    metric so the learned geometry and the k-means geometry agree."""
+    return jnp.mean(jnp.abs(f1.astype(jnp.float32) - f2.astype(jnp.float32)),
+                    axis=-1)
+
+
+def contrastive_loss(
+    f1: jax.Array, f2: jax.Array, different: jax.Array, margin: float = 1.0
+) -> jax.Array:
+    """Eq. 5.  different (Y): 0 = same class (pull), 1 = different (push)."""
+    d = l1_distance(f1, f2)
+    y = different.astype(jnp.float32)
+    pull = 0.5 * (1.0 - y) * d
+    push = 0.5 * y * jnp.maximum(0.0, margin - d)
+    return jnp.mean(pull + push)
+
+
+def layer_aware_loss(
+    feats1: Sequence[jax.Array],
+    feats2: Sequence[jax.Array],
+    different: jax.Array,
+    coeffs: Sequence[float] | None = None,
+    margin: float = 1.0,
+) -> jax.Array:
+    """Eq. 4: LA = sum_i a_i * LC(layer i), sum a_i = 1.
+
+    Default coefficients weight layers uniformly; the network trainer tunes
+    them (exhaustive search) in `repro.train.trainer`.
+    """
+    L = len(feats1)
+    if coeffs is None:
+        coeffs = [1.0 / L] * L
+    c = jnp.asarray(coeffs, jnp.float32)
+    c = c / jnp.sum(c)
+    losses = jnp.stack(
+        [contrastive_loss(f1, f2, different, margin)
+         for f1, f2 in zip(feats1, feats2)]
+    )
+    return jnp.sum(c * losses)
+
+
+def final_layer_contrastive(
+    feats1: Sequence[jax.Array],
+    feats2: Sequence[jax.Array],
+    different: jax.Array,
+    margin: float = 1.0,
+) -> jax.Array:
+    """Baseline [71]: contrastive loss at the last layer only."""
+    return contrastive_loss(feats1[-1], feats2[-1], different, margin)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Baseline [142] (and the LM training loss for the big archs)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token LM loss: predict tokens[:, 1:] from logits[:, :-1]."""
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])

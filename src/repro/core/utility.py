@@ -1,0 +1,73 @@
+"""Utility functions (paper §4.1, §11.2): the early-exit confidence test and
+per-unit threshold calibration (the Fig. 8 accuracy/latency trade-off).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .kmeans import UnitClassifier, classify
+
+
+def margin_utility(d1: np.ndarray, d2: np.ndarray) -> np.ndarray:
+    """Scale-free cluster margin |Delta2 - Delta1| / (Delta1 + Delta2)."""
+    return (d2 - d1) / np.maximum(d1 + d2, 1e-9)
+
+
+def entropy_utility(probs: np.ndarray) -> np.ndarray:
+    """Generic utility for probabilistic classifiers (paper §11.2):
+    U = -sum p log2 p; low entropy = confident."""
+    p = np.clip(probs, 1e-12, 1.0)
+    return -(p * np.log2(p)).sum(-1)
+
+
+def calibrate_threshold(
+    uc: UnitClassifier,
+    feats: np.ndarray,
+    labels: np.ndarray,
+    *,
+    min_accuracy: float = 0.85,
+    grid: int = 50,
+):
+    """Sweep the utility threshold on held-out features; return the smallest
+    threshold whose *exited* samples have accuracy >= min_accuracy (relative
+    to this unit's achievable accuracy), plus the full trade-off curve.
+    """
+    pred, d1, d2, _, margin = classify(uc, jnp.asarray(feats))
+    pred, margin = np.asarray(pred), np.asarray(margin)
+    correct = pred == labels
+    base_acc = max(correct.mean(), 1e-9)
+
+    thresholds = np.quantile(margin, np.linspace(0.0, 0.98, grid))
+    curve = []  # (threshold, exit_fraction, exit_accuracy)
+    for t in thresholds:
+        exited = margin > t
+        frac = exited.mean()
+        acc = correct[exited].mean() if exited.any() else 1.0
+        curve.append((float(t), float(frac), float(acc)))
+
+    chosen = curve[-1][0]
+    for t, frac, acc in curve:
+        if acc >= min_accuracy * base_acc:
+            chosen = t
+            break
+    return float(chosen), curve
+
+
+def calibrate_bank_thresholds(
+    bank: Sequence[UnitClassifier],
+    per_unit_feats: Sequence[np.ndarray],
+    labels: np.ndarray,
+    *,
+    min_accuracy: float = 0.85,
+) -> list[UnitClassifier]:
+    out = []
+    for uc, feats in zip(bank, per_unit_feats):
+        thr, _ = calibrate_threshold(
+            uc, feats, labels, min_accuracy=min_accuracy
+        )
+        out.append(uc._replace(threshold=jnp.float32(thr)))
+    return out

@@ -1,0 +1,8 @@
+from .synthetic import (  # noqa: F401
+    Dataset,
+    make_dataset,
+    make_lm_tokens,
+    make_siamese_pairs,
+    make_token_dataset,
+)
+from .pipeline import batches, siamese_batches  # noqa: F401

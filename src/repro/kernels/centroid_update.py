@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: semi-supervised k-means centroid adaptation (paper §4.3).
+
+Batched weighted-average update: for a batch of features with hard cluster
+assignments, each centroid moves toward the mean of its assigned features
+
+    c_j <- (w * c_j + sum_{i: a_i = j} x_i) / (w + count_j)
+
+``w`` (the paper's "weight of the current centroid") guards against outliers.
+Formulated as a one-hot matmul so the MXU does the scatter-reduce; grid tiles
+the feature dim (centroid table is small and stays resident).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _centroid_update_kernel(x_ref, onehot_ref, c_ref, w_ref, o_ref):
+    x = x_ref[...]           # (B, bd)
+    oh = onehot_ref[...]     # (B, k)
+    c = c_ref[...]           # (k, bd)
+    w = w_ref[0]
+    sums = jnp.dot(oh.T, x, preferred_element_type=jnp.float32)  # (k, bd)
+    counts = jnp.sum(oh, axis=0)[:, None]  # (k, 1)
+    o_ref[...] = (w * c + sums) / (w + counts)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def centroid_update(
+    centroids: jax.Array,
+    x: jax.Array,
+    assign: jax.Array,
+    weight: jax.Array | float,
+    *,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    """centroids: (k, d), x: (B, d), assign: (B,) int32 -> new (k, d)."""
+    k, d = centroids.shape
+    B = x.shape[0]
+    bd = min(block_d, d)
+    while d % bd:
+        bd //= 2
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+    w = jnp.asarray([weight], jnp.float32)
+    return pl.pallas_call(
+        _centroid_update_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((B, bd), lambda i: (0, i)),
+            pl.BlockSpec((B, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, bd), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, d), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), onehot, centroids.astype(jnp.float32), w)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: single-token GQA attention against a ring-buffer KV
+cache (the serving hot loop for decode_32k / long_500k).
+
+Online-softmax accumulation over KV-cache tiles: the cache's sequence axis is
+the innermost (sequential) grid axis; running max / denominator / accumulator
+live in VMEM scratch.  Slot validity (ring buffer occupancy + sliding window)
+is applied as a mask per tile.  Query heads are grouped per KV head (GQA) so
+each cache tile is read once for all G query heads that share it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30  # python scalar: jnp constants would be captured consts in pallas
+
+
+def _decode_gqa_kernel(
+    q_ref, k_ref, v_ref, slot_ref, pos_ref, o_ref,
+    m_scr, l_scr, acc_scr, *, n_kv_blocks, window,
+):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]        # (bB, KV, G, hd)
+    k = k_ref[...]        # (bB, bC, KV, hd)
+    v = v_ref[...]
+    slot = slot_ref[...]  # (bB, bC)
+    pos = pos_ref[...]    # (bB,)
+
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgh,bckh->bkgc", q, k) * hd ** -0.5
+    valid = (slot >= 0) & (slot <= pos[:, None])
+    if window:
+        valid &= pos[:, None] - slot <= window
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * alpha[..., None] + jnp.einsum("bkgc,bckh->bkgh", p, v)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(c_idx == n_kv_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_new / jnp.maximum(l_new[..., None], 1e-30)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_b", "block_c", "interpret")
+)
+def decode_gqa(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_pos: jax.Array,
+    my_pos: jax.Array,
+    *,
+    window: int = 0,
+    block_b: int = 8,
+    block_c: int = 512,
+    interpret: bool = False,
+):
+    """q: (B, H, hd); caches: (B, C, KV, hd); slot_pos: (B, C); my_pos: (B,).
+
+    Returns (B, H, hd) f32 attention output.
+    """
+    B, H, hd = q.shape
+    C, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bB, bC = min(block_b, B), min(block_c, C)
+    while B % bB:
+        bB //= 2
+    while C % bC:
+        bC //= 2
+    n_kv_blocks = C // bC
+
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_gqa_kernel, n_kv_blocks=n_kv_blocks, window=window
+        ),
+        grid=(B // bB, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((bB, KV, G, hd), lambda i, c: (i, 0, 0, 0)),
+            pl.BlockSpec((bB, bC, KV, hd), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((bB, bC, KV, hd), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((bB, bC), lambda i, c: (i, c)),
+            pl.BlockSpec((bB,), lambda i, c: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bB, KV, G, hd), lambda i, c: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bB, KV, G), jnp.float32),
+            pltpu.VMEM((bB, KV, G), jnp.float32),
+            pltpu.VMEM((bB, KV, G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        qg,
+        k_cache.astype(jnp.float32),
+        v_cache.astype(jnp.float32),
+        slot_pos,
+        my_pos,
+    )
+    return out.reshape(B, H, hd)

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: flash (fused online-softmax) GQA attention forward.
+
+This is the §Perf P1 traffic target: the pure-XLA chunked attention
+materialises ~S^2/2-sized f32 score/probability tensors in HBM per layer;
+this kernel keeps the whole softmax in VMEM, touching HBM only for
+q/k/v/o — the memory roofline drops from O(S^2) to O(S·d) per head.
+
+Grid: (batch·kv-head, q-block, kv-block) with the kv axis innermost
+(sequential), running max / denominator / accumulator in VMEM scratch.
+Causal + sliding-window masking is applied per tile from block offsets;
+fully-masked tiles still execute (the grid is static) but cost no HBM.
+Q heads sharing a KV head (GQA) are processed together so each k/v tile
+loads once per group.
+
+Block shapes default to (128, 128) — MXU-aligned on the (q, kv) dims; the
+head dim rides along unblocked (<= 256 for all assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, n_kv_blocks, block_q, block_k, causal, window, q_offset,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]  # (1, block_q, G, hd)
+    k = k_ref[...]  # (1, block_k, hd)
+    v = v_ref[...]
+    hd = q.shape[-1]
+    s = jnp.einsum(
+        "bqgh,bkh->bqgk", q, k, preferred_element_type=jnp.float32
+    ) * hd ** -0.5
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    ) + q_offset
+    kpos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos <= window
+    s = jnp.where(mask[None, :, None, :], s, NEG)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * alpha[..., None] + jnp.einsum(
+        "bqgk,bkh->bqgh", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_new / jnp.maximum(l_new[..., None], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: (B, S, H, hd); k/v: (B, Skv, KV, hd) -> (B, S, H, hd) f32.
+
+    GQA: H query heads grouped over KV heads.  ``q_offset`` shifts query
+    positions (cross-attention prefix / continued decode)."""
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bQ, bK = min(block_q, S), min(block_k, Skv)
+    while S % bQ:
+        bQ //= 2
+    while Skv % bK:
+        bK //= 2
+    n_kv_blocks = Skv // bK
+
+    # (B*KV, S, G, hd) so one grid axis covers batch x kv-head
+    qg = (
+        q.reshape(B, S, KV, G, hd).transpose(0, 2, 1, 3, 4)
+        .reshape(B * KV, S, G, hd)
+    )
+    kg = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, n_kv_blocks=n_kv_blocks, block_q=bQ, block_k=bK,
+            causal=causal, window=window, q_offset=q_offset,
+        ),
+        grid=(B * KV, S // bQ, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bQ, G, hd), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, bK, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bK, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bQ, G, hd), lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, S, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, bQ, G), jnp.float32),
+            pltpu.VMEM((1, bQ, G), jnp.float32),
+            pltpu.VMEM((1, bQ, G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return (
+        out.reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4)
+        .reshape(B, S, H, hd)
+    )

@@ -1,0 +1,51 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced JAX ops — which validates tiling/indexing
+logic against the pure-jnp oracles in :mod:`repro.kernels.ref`.  On a real
+TPU backend the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from .centroid_update import centroid_update as _centroid_update
+from .decode_gqa import decode_gqa as _decode_gqa
+from .flash_attn import flash_attention as _flash_attention
+from .l1_topk2 import l1_topk2 as _l1_topk2
+from .pairwise_l1 import pairwise_l1 as _pairwise_l1
+from .rglru_scan import rglru_scan as _rglru_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def l1_topk2(x, centroids, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _l1_topk2(x, centroids, **kw)
+
+
+def pairwise_l1(x, y, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _pairwise_l1(x, y, **kw)
+
+
+def centroid_update(centroids, x, assign, weight, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _centroid_update(centroids, x, assign, weight, **kw)
+
+
+def rglru_scan(a, b, h0, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _rglru_scan(a, b, h0, **kw)
+
+
+def decode_gqa(q, k_cache, v_cache, slot_pos, my_pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _decode_gqa(q, k_cache, v_cache, slot_pos, my_pos, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash_attention(q, k, v, **kw)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: all-pairs L1 distance matrix.
+
+Used by siamese/contrastive training (layer-aware loss, paper Eq. 4-5) and by
+k-means (re)initialisation.  Grid tiles (B1, B2, d); the d axis is innermost
+and accumulated into the output block, which stays VMEM-resident across the
+d iterations (standard reduce-into-output pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_l1_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (b1, bd)
+    y = y_ref[...]  # (b2, bd)
+    o_ref[...] += jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b1", "block_b2", "block_d", "interpret")
+)
+def pairwise_l1(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_b1: int = 128,
+    block_b2: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    """x: (B1, d), y: (B2, d) -> (B1, B2) L1 distances, f32."""
+    B1, d = x.shape
+    B2 = y.shape[0]
+    b1, b2, bd = min(block_b1, B1), min(block_b2, B2), min(block_d, d)
+    while B1 % b1:
+        b1 //= 2
+    while B2 % b2:
+        b2 //= 2
+    while d % bd:
+        bd //= 2
+    grid = (B1 // b1, B2 // b2, d // bd)
+    return pl.pallas_call(
+        _pairwise_l1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b1, bd), lambda i, j, l: (i, l)),
+            pl.BlockSpec((b2, bd), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((b1, b2), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B1, B2), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l1_topk2_ref(x: jax.Array, centroids: jax.Array):
+    d = jnp.sum(
+        jnp.abs(x[:, None, :].astype(jnp.float32) -
+                centroids[None, :, :].astype(jnp.float32)),
+        axis=-1,
+    )
+    d1 = jnp.min(d, axis=1)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    masked = jnp.where(jax.nn.one_hot(idx, d.shape[1], dtype=bool), 1e30, d)
+    d2 = jnp.min(masked, axis=1)
+    return d1, d2, idx
+
+
+def pairwise_l1_ref(x: jax.Array, y: jax.Array):
+    return jnp.sum(
+        jnp.abs(x[:, None, :].astype(jnp.float32) -
+                y[None, :, :].astype(jnp.float32)),
+        axis=-1,
+    )
+
+
+def centroid_update_ref(centroids, x, assign, weight):
+    k = centroids.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+    sums = onehot.T @ x.astype(jnp.float32)
+    counts = onehot.sum(0)[:, None]
+    return (weight * centroids.astype(jnp.float32) + sums) / (weight + counts)
+
+
+def rglru_scan_ref(a, b, h0):
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    hlast, hs = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (a.swapaxes(0, 1).astype(jnp.float32),
+         b.swapaxes(0, 1).astype(jnp.float32)),
+    )
+    return hs.swapaxes(0, 1), hlast
+
+
+def decode_gqa_ref(q, k_cache, v_cache, slot_pos, my_pos, window=0):
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bckh->bkgc", qg, k_cache.astype(jnp.float32))
+    s = s * hd ** -0.5
+    valid = (slot_pos >= 0) & (slot_pos <= my_pos[:, None])
+    if window:
+        valid &= my_pos[:, None] - slot_pos <= window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0, q_offset=0):
+    """Dense masked softmax attention (oracle for the flash kernel)."""
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos <= window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: blocked RG-LRU diagonal linear recurrence.
+
+Evaluates h_t = a_t * h_{t-1} + b_t over the sequence axis with the state
+carried in a VMEM scratch buffer across sequence-grid steps (TPU grids are
+sequential, so the scratch persists between iterations of the innermost
+axis).  The (batch, width) tile stays VREG-friendly: width is tiled in
+multiples of 128 lanes, the time loop runs inside the block.
+
+The gates a, b are precomputed by the caller (they are elementwise matmul
+products — MXU work best left to XLA); the kernel only implements the part
+XLA serialises badly: the length-S dependent scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hlast_ref, *, n_seq_blocks):
+    s_idx = pl.program_id(2)
+
+    a = a_ref[...]  # (bB, bS, bW)
+    b = b_ref[...]
+
+    @pl.when(s_idx == 0)
+    def _init():
+        hlast_ref[...] = h0_ref[...]
+
+    h = hlast_ref[...]  # carried state (bB, bW)
+
+    bS = a.shape[1]
+
+    def step(t, carry):
+        h, out = carry
+        h = a[:, t, :] * h + b[:, t, :]
+        out = jax.lax.dynamic_update_index_in_dim(out, h, t, 1)
+        return h, out
+
+    h, out = jax.lax.fori_loop(0, bS, step, (h, jnp.zeros_like(a)))
+    o_ref[...] = out
+    hlast_ref[...] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_s", "block_w", "interpret")
+)
+def rglru_scan(
+    a: jax.Array,
+    b: jax.Array,
+    h0: jax.Array,
+    *,
+    block_b: int = 8,
+    block_s: int = 256,
+    block_w: int = 512,
+    interpret: bool = False,
+):
+    """a, b: (B, S, W) f32; h0: (B, W) f32 -> (h (B, S, W), h_last (B, W))."""
+    B, S, W = a.shape
+    bB, bS, bW = min(block_b, B), min(block_s, S), min(block_w, W)
+    while B % bB:
+        bB //= 2
+    while S % bS:
+        bS //= 2
+    while W % bW:
+        bW //= 2
+    grid = (B // bB, W // bW, S // bS)  # sequence innermost (sequential)
+    out, hlast = pl.pallas_call(
+        functools.partial(_rglru_kernel, n_seq_blocks=S // bS),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, bS, bW), lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((bB, bS, bW), lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((bB, bW), lambda i, j, s: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bB, bS, bW), lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((bB, bW), lambda i, j, s: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32), h0.astype(jnp.float32))
+    return out, hlast

@@ -1,0 +1,496 @@
+"""Loop-aware HLO cost model (FLOPs / HBM bytes / collective bytes).
+
+XLA's ``compiled.cost_analysis()`` counts each called computation ONCE —
+``while`` bodies (every ``lax.scan``: the layer stack, the chunked-attention
+block loop) are NOT multiplied by their trip counts, so a scanned 40-layer
+model reports ~1-layer FLOPs.  This module re-derives the costs from the
+post-optimization HLO text with proper loop accounting:
+
+  * ``while`` body costs are multiplied by ``backend_config.known_trip_count``
+    (emitted by XLA for counted loops; default 1 when absent);
+  * ``fusion`` bodies are recursed for FLOPs (dots inside fusions count) but
+    contribute only call-site operand/output bytes (fusion-internal traffic
+    never reaches HBM);
+  * dots count 2·|result|·K FLOPs (K = product of lhs contracting dims);
+    elementwise / reduce ops count ~1 FLOP per element processed;
+  * bytes = operands + output per instruction (post-fusion, a reasonable
+    HBM-traffic model and the same convention XLA's own analysis uses);
+  * collectives are tallied with ring-transfer factors (see
+    :mod:`repro.launch.hlo_stats`) and loop multipliers applied.
+
+Used by the dry-run / roofline analysis; validated against closed-form
+matmul counts in ``tests/test_hlo_cost.py``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# bookkeeping ops: no FLOPs, no HBM traffic of their own
+_FREE_OPS = frozenset({
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "opt-barrier",
+})
+
+# pure layout / dtype ops: on the TPU target these fuse into their consumers
+# and never round-trip HBM; the CPU backend leaves many of them standalone,
+# which would inflate the memory roofline term ~5-10x if counted.
+_LAYOUT_OPS = frozenset({
+    "copy", "convert", "broadcast", "transpose", "reshape",
+    "bitcast-convert", "copy-start", "copy-done",
+})
+
+_COLLECTIVES = frozenset({
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "reduce-scatter-start",
+})
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _balanced(text: str, start: int) -> int:
+    """Index just past the parenthesis group opening at ``start``."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(text)
+
+
+@dataclass
+class Instruction:
+    name: str
+    op: str
+    type_str: str
+    operands: list[str]
+    attrs: str
+
+    @property
+    def out_elems(self) -> int:
+        return _shape_elems_bytes(self.type_str)[0]
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_elems_bytes(self.type_str)[1]
+
+
+def _parse_instruction(line: str) -> Optional[Instruction]:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    if not line.startswith("%") or " = " not in line:
+        return None
+    name, rest = line.split(" = ", 1)
+    if rest.startswith("("):
+        end = _balanced(rest, 0)
+        type_str, rest = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        type_str, rest = rest[:sp], rest[sp + 1:]
+    par = rest.find("(")
+    if par < 0:
+        return None
+    op = rest[:par].strip()
+    opend = _balanced(rest, par)
+    operand_str = rest[par + 1: opend - 1]
+    attrs = rest[opend:]
+    operands = re.findall(r"%[\w.\-]+", operand_str)
+    return Instruction(name.strip(), op, type_str, operands, attrs)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0           # total (dot + elementwise)
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    ici_bytes: float = 0.0       # ring-model ICI traffic
+    coll_counts: dict = field(default_factory=dict)
+    coll_bytes: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.dot_flops += other.dot_flops * mult
+        self.bytes += other.bytes * mult
+        self.ici_bytes += other.ici_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "dot_flops": self.dot_flops,
+            "bytes": self.bytes,
+            "ici_bytes": self.ici_bytes,
+            "coll_counts": self.coll_counts,
+            "coll_bytes": self.coll_bytes,
+        }
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, n_devices: int = 1):
+        self.n_devices = n_devices
+        self.computations: dict[str, list[Instruction]] = {}
+        self.roots: dict[str, str] = {}  # computation -> root op kind
+        self.entry: Optional[str] = None
+        self.symbols: dict[str, str] = {}  # %name -> type_str
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self._fusion_io_memo: dict[str, float] = {}
+
+    # ------------------------------------------------------------------ #
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        header_re = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{")
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if current is None:
+                m = header_re.match(line.strip())
+                if m:
+                    current = m.group(2)
+                    self.computations[current] = []
+                    if m.group(1):
+                        self.entry = current
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            inst = _parse_instruction(line)
+            if inst is not None:
+                self.computations[current].append(inst)
+                self.symbols[inst.name] = inst.type_str
+                if line.strip().startswith("ROOT "):
+                    self.roots[current] = inst.op
+        if self.entry is None and self.computations:
+            self.entry = list(self.computations)[-1]
+
+    # ------------------------------------------------------------------ #
+    def _operand_bytes(self, inst: Instruction) -> int:
+        total = 0
+        for op in inst.operands:
+            t = self.symbols.get(op)
+            if t:
+                total += _shape_elems_bytes(t)[1]
+        return total
+
+    def _dot_flops(self, inst: Instruction) -> float:
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+        k = 1
+        if m and inst.operands:
+            lhs_t = self.symbols.get(inst.operands[0], "")
+            sm = _SHAPE_RE.search(lhs_t)
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        return 2.0 * inst.out_elems * k
+
+    def _conv_flops(self, inst: Instruction) -> float:
+        # rhs (kernel) elems / output-feature dim ~ per-output MACs
+        if len(inst.operands) < 2:
+            return float(inst.out_elems)
+        rhs_t = self.symbols.get(inst.operands[1], "")
+        k_elems = _shape_elems_bytes(rhs_t)[0]
+        m = re.search(r"dim_labels=\S*_\S*o(\d*)", inst.attrs)
+        out_feat = 1
+        sm = _SHAPE_RE.search(inst.type_str)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            out_feat = dims[-1] if dims else 1
+        per_out = max(k_elems // max(out_feat, 1), 1)
+        return 2.0 * inst.out_elems * per_out
+
+    def _collective(self, inst: Instruction, cost: Cost) -> None:
+        kind = inst.op.replace("-start", "")
+        size = inst.out_bytes
+        m = _GROUPS_IOTA_RE.search(inst.attrs)
+        if m:
+            G = int(m.group(2))
+        else:
+            m = _GROUPS_BRACE_RE.search(inst.attrs)
+            G = (m.group(1).count(",") + 1) if m else self.n_devices
+        G = max(G, 1)
+        if kind == "all-gather":
+            moved = size * (G - 1) / G
+        elif kind == "reduce-scatter":
+            moved = size * (G - 1)
+        elif kind == "all-reduce":
+            moved = 2.0 * size * (G - 1) / G
+        elif kind == "all-to-all":
+            moved = size * (G - 1) / G
+        else:
+            moved = float(size)
+        cost.ici_bytes += moved
+        cost.coll_counts[kind] = cost.coll_counts.get(kind, 0) + 1
+        cost.coll_bytes[kind] = cost.coll_bytes.get(kind, 0.0) + moved
+
+    # ------------------------------------------------------------------ #
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        cost = Cost()
+        self._memo[name] = cost  # break cycles defensively
+        for inst in self.computations.get(name, []):
+            op = inst.op
+            if op in _FREE_OPS or op in _LAYOUT_OPS:
+                continue
+            if op in _COLLECTIVES:
+                self._collective(inst, cost)
+                cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+                continue
+            if op == "while":
+                trip = 1
+                m = _TRIP_RE.search(inst.attrs)
+                if m:
+                    trip = int(m.group(1))
+                bm = re.search(r"body=(%[\w.\-]+)", inst.attrs)
+                if bm:
+                    cost.add(self.computation_cost(bm.group(1)), trip)
+                continue
+            if op == "fusion":
+                cm = re.search(r"calls=(%[\w.\-]+)", inst.attrs)
+                if cm:
+                    inner = self.computation_cost(cm.group(1))
+                    cost.flops += inner.flops
+                    cost.dot_flops += inner.dot_flops
+                    cost.ici_bytes += inner.ici_bytes
+                    cost.bytes += self._fusion_io_bytes(cm.group(1), inst)
+                else:
+                    cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                cost.flops += inst.out_elems
+                cost.bytes += 2.0 * inst.out_bytes  # read slice, write result
+                continue
+            if op == "dynamic-update-slice":
+                # in place: read the update (+ indices), write the slice
+                upd = 0
+                if len(inst.operands) > 1:
+                    upd = _shape_elems_bytes(
+                        self.symbols.get(inst.operands[1], "")
+                    )[1]
+                cost.bytes += 2.0 * upd
+                continue
+            if op in ("call", "async-start", "custom-call"):
+                cm = re.search(r"(?:to_apply|calls|called_computation)="
+                               r"(%[\w.\-]+)", inst.attrs)
+                if cm:
+                    cost.add(self.computation_cost(cm.group(1)), 1.0)
+                cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+                continue
+            if op == "conditional":
+                # branches are rare in our models; count the call site only
+                cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+                continue
+            if op == "dot":
+                f = self._dot_flops(inst)
+                cost.flops += f
+                cost.dot_flops += f
+                cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+                continue
+            if op == "convolution":
+                f = self._conv_flops(inst)
+                cost.flops += f
+                cost.dot_flops += f
+                cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+                continue
+            if op in ("reduce", "reduce-window"):
+                cost.flops += self._operand_elems(inst)
+                cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+                continue
+            # generic elementwise / data movement
+            cost.flops += inst.out_elems
+            cost.bytes += inst.out_bytes + self._operand_bytes(inst)
+        return cost
+
+    def _fusion_io_bytes(self, comp: str, call: Instruction) -> float:
+        """Exact HBM traffic of one fusion execution.
+
+        A fused computation's HBM footprint is what crosses its boundary:
+        * a parameter consumed *only by* ``dynamic-slice`` ops contributes
+          the slice bytes, not the (possibly GB-sized while-carried) buffer;
+        * a parameter consumed only as the in-place target of a
+          ``dynamic-update-slice`` contributes nothing (aliased);
+        * a ``dynamic-update-slice`` inside the fusion writes update-sized
+          bytes; a fusion without DUS writes its full output.
+        Everything else contributes its full size.  Memoised per computation
+        (slice sizes are static), so loop trip multipliers stay cheap.
+        """
+        if comp in self._fusion_io_memo:
+            return self._fusion_io_memo[comp]
+        insts = self.computations.get(comp, [])
+        params = {i.name for i in insts if i.op == "parameter"}
+        # a fusion computing ONLY layout/dtype changes never exists on the
+        # TPU target (it fuses into its consumer's MXU/VPU feed): 0 bytes
+        if all(i.op == "parameter" or i.op in _LAYOUT_OPS or i.op in _FREE_OPS
+               for i in insts):
+            self._fusion_io_memo[comp] = 0.0
+            return 0.0
+        # Single-operand layout ops (convert/bitcast/...) are transparent:
+        # the CPU backend legalises bf16 dots/scatters by upconverting whole
+        # buffers to f32, which the TPU MXU does for free in-flight — a
+        # param read "through" a convert into a dynamic-slice is still a
+        # slice-sized read.
+        alias: dict[str, str] = {}
+        for i in insts:
+            if i.op in _LAYOUT_OPS and len(i.operands) == 1:
+                src = i.operands[0]
+                root = alias.get(src, src)
+                if root in params:
+                    alias[i.name] = root
+
+        def root_param(o: str):
+            r = alias.get(o, o)
+            return r if r in params else None
+
+        consumers: dict[str, set] = {p: set() for p in params}
+        slice_reads: dict[str, float] = {p: 0.0 for p in params}
+        inplace_update_bytes = 0.0
+        has_inplace = False
+        for i in insts:
+            if i.op in ("dynamic-update-slice", "scatter"):
+                # in place on operand 0: only update-sized traffic
+                has_inplace = True
+                if len(i.operands) > 1:
+                    upd = i.operands[-1]  # DUS: update; scatter: updates
+                    inplace_update_bytes += _shape_elems_bytes(
+                        self.symbols.get(upd, "")
+                    )[1]
+            for pos, o in enumerate(i.operands):
+                p = root_param(o)
+                if p is not None and i.op not in _LAYOUT_OPS:
+                    role = i.op
+                    if i.op in ("dynamic-update-slice", "scatter") and pos != 0:
+                        role = "update-operand"  # small operand, read fully
+                    consumers[p].add(role)
+                    if i.op in ("dynamic-slice", "slice", "gather") \
+                            and pos == 0:
+                        slice_reads[p] += i.out_bytes
+        in_bytes = 0.0
+        for i in insts:
+            if i.op != "parameter":
+                continue
+            roles = consumers.get(i.name, set())
+            if not roles:
+                continue  # dead parameter
+            if roles <= {"dynamic-slice", "slice", "gather"}:
+                in_bytes += slice_reads[i.name]
+            elif roles <= {"dynamic-update-slice", "scatter"}:
+                # in-place target: touched rows re-read, update-sized
+                in_bytes += inplace_update_bytes
+            else:
+                in_bytes += i.out_bytes
+        out_bytes = inplace_update_bytes if has_inplace else call.out_bytes
+        total = in_bytes + out_bytes
+        self._fusion_io_memo[comp] = total
+        return total
+
+    def _operand_elems(self, inst: Instruction) -> int:
+        total = 0
+        for op in inst.operands:
+            t = self.symbols.get(op)
+            if t:
+                total += _shape_elems_bytes(t)[0]
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.computation_cost(self.entry)
+
+
+def analyze_hlo(hlo_text: str, n_devices: int = 1) -> dict:
+    model = HloCostModel(hlo_text, n_devices)
+    return model.entry_cost().as_dict()
+
+
+def top_cost_items(model: HloCostModel, n: int = 25,
+                   by: str = "bytes") -> list[dict]:
+    """Per-instruction cost list (loop multipliers applied) — the dry-run
+    'profile' used by the §Perf hillclimb."""
+    items: list[dict] = []
+
+    def walk(name: str, mult: float) -> None:
+        for inst in model.computations.get(name, []):
+            op = inst.op
+            if op in _FREE_OPS or op in _LAYOUT_OPS:
+                continue
+            if op == "while":
+                trip = 1
+                m = _TRIP_RE.search(inst.attrs)
+                if m:
+                    trip = int(m.group(1))
+                bm = re.search(r"body=(%[\w.\-]+)", inst.attrs)
+                if bm:
+                    walk(bm.group(1), mult * trip)
+                continue
+            if op == "fusion":
+                cm = re.search(r"calls=(%[\w.\-]+)", inst.attrs)
+                inner = (model.computation_cost(cm.group(1))
+                         if cm else Cost())
+                b = model._fusion_io_bytes(cm.group(1), inst) if cm else 0.0
+                items.append({
+                    "name": inst.name, "op": op, "mult": mult,
+                    "bytes": b * mult, "flops": inner.flops * mult,
+                    "type": inst.type_str[:48],
+                })
+                continue
+            if op == "dot":
+                f = model._dot_flops(inst)
+                b = inst.out_bytes + model._operand_bytes(inst)
+                items.append({
+                    "name": inst.name, "op": op, "mult": mult,
+                    "bytes": b * mult, "flops": f * mult,
+                    "type": inst.type_str[:48],
+                })
+                continue
+            if op == "dynamic-slice":
+                b = 2.0 * inst.out_bytes
+            elif op == "dynamic-update-slice":
+                upd = (_shape_elems_bytes(
+                    model.symbols.get(inst.operands[1], ""))[1]
+                    if len(inst.operands) > 1 else 0)
+                b = 2.0 * upd
+            else:
+                b = inst.out_bytes + model._operand_bytes(inst)
+            items.append({
+                "name": inst.name, "op": op, "mult": mult,
+                "bytes": b * mult, "flops": inst.out_elems * mult,
+                "type": inst.type_str[:48],
+            })
+
+    walk(model.entry, 1.0)
+    items.sort(key=lambda r: -r[by])
+    return items[:n]

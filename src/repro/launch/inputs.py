@@ -1,0 +1,89 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+For a training / prefill step this is the token batch (plus the stubbed
+modality-frontend embeddings for the VLM / audio architectures, per the
+assignment carve-out).  For a decode step it is the single-token batch plus
+the full decode state (KV caches / recurrent states) sized for the shape's
+``seq_len``.  Nothing here allocates device memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import transformer as tfm
+
+
+class ShapeSkip(Exception):
+    """Raised for documented (arch, shape) skips (see DESIGN.md §4)."""
+
+
+@dataclass(frozen=True)
+class LoweringSpec:
+    """Everything the dry-run needs for one (arch, shape) combination."""
+
+    cfg: ModelConfig
+    shape: InputShape
+    step_kind: str                 # "train" | "prefill" | "decode"
+    window: Optional[int]          # attention-window override (long_500k)
+    args: tuple                    # ShapeDtypeStruct pytrees for the step
+
+
+def resolve_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    """long_500k needs sub-quadratic attention: native configs run as-is,
+    dense archs take the sanctioned sliding-window override, ``skip``
+    raises."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.long_context == "native":
+        return None
+    if cfg.long_context == "window":
+        return cfg.long_window
+    raise ShapeSkip(
+        f"{cfg.name} skips long_500k ({cfg.long_context}; see DESIGN.md §4)"
+    )
+
+
+def batch_structs(cfg: ModelConfig, global_batch: int, seq_len: int) -> dict:
+    """Token (+ frontend) ShapeDtypeStructs for a full-sequence pass."""
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    }
+    if cfg.is_encoder_decoder:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_enc_tokens, cfg.d_model), jnp.float32
+        )
+    elif cfg.n_frontend_tokens:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str) -> LoweringSpec:
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    window = resolve_window(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind in ("train", "prefill"):
+        # VLM: frontend patches prepend to the sequence — keep total length
+        # at the assigned seq_len so the workload matches the assignment.
+        S_tok = S - cfg.n_frontend_tokens if cfg.n_frontend_tokens else S
+        batch = batch_structs(cfg, B, S_tok)
+        kind = "train" if shape.kind == "train" else "prefill"
+        return LoweringSpec(cfg, shape, kind, window, (batch,))
+
+    # decode: ONE new token against a seq_len-sized cache.  The serving
+    # configuration unrolls layers (stacked=False) so cache scatters update
+    # in place instead of round-tripping a scan-carry slice (§Perf P3-H3).
+    state = jax.eval_shape(
+        lambda: tfm.init_decode_state(cfg, B, S, window=window,
+                                      stacked=False)
+    )
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return LoweringSpec(cfg, shape, "decode", window, (state, token))

@@ -1,0 +1,206 @@
+"""Parameter / optimizer / decode-state / batch sharding specs.
+
+Specs are inferred *by leaf name* (the last dict key on the pytree path) so
+one rule table covers all six architecture families, the stacked-scan layer
+layout (leading ``n_scan`` dim), and the mirrored AdamW ``mu``/``nu`` trees.
+Logical axis names resolve through :func:`repro.launch.mesh.logical_rules`
+and are dropped per-dim when the dimension is not divisible by the mesh axis
+(e.g. 8 KV heads on a 16-way model axis fall back to replication) via
+:func:`repro.models.common.sanitize_dim`.
+
+Layout summary (single pod, ("data", "model")):
+  * weights: FSDP — the d_model ("embed") dim shards over ``data``; the
+    heads / d_ff / vocab / experts dim shards over ``model``.
+  * activations: batch over ``data`` (and ``pod``), vocab/heads/ff over
+    ``model`` (annotated inside the model code via ``common.shard``).
+  * KV caches: kv-heads over ``model`` when divisible, otherwise the cache
+    *length* shards over ``model`` (GQA with few KV heads — glm4's kv=2 —
+    would otherwise replicate a multi-GB cache per device).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.models.common import sanitize_dim
+
+from .mesh import logical_rules
+
+# --------------------------------------------------------------------------- #
+# Leaf-name -> logical axes of the *trailing* dims.  Leading dims (layer
+# stacking) are padded with None.  Names not listed replicate.
+# --------------------------------------------------------------------------- #
+
+PARAM_SPECS: Mapping[str, tuple] = {
+    # embeddings / head
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "frontend_proj": ("embed", None),
+    # attention
+    "wq": ("embed", "heads", None),
+    "wk": ("embed", "kv_heads", None),
+    "wv": ("embed", "kv_heads", None),
+    "wo": ("heads", None, "embed"),
+    "bq": ("heads", None),
+    "bk": ("kv_heads", None),
+    "bv": ("kv_heads", None),
+    # dense FFN
+    "w1": ("embed", "ff"),
+    "w3": ("embed", "ff"),
+    "w2": ("ff", "embed"),
+    # recurrent (Griffin) block
+    "gate_proj": ("embed", "ff"),
+    "rec_proj": ("embed", "ff"),
+    "out_proj": ("ff", "embed"),
+    # RG-LRU gate weights are block-diagonal (Griffin appendix A): one
+    # (w/H, w/H) block per head, blocks sharded over `model` so the gate
+    # matmuls are TP-local — removing the dominant per-layer all-reduce
+    # for recurrentgemma (§Perf P2-H3).
+    "wa": ("heads", None, None),
+    "wx": ("heads", None, None),
+    "ba": ("ff",),
+    "bx": ("ff",),
+    "lam": ("ff",),
+    # xLSTM cell
+    "up": ("embed", "ff"),
+    "wz": ("embed", "ff"),
+    "wi": ("embed", "ff"),
+    "wf": ("embed", "ff"),
+    "down": ("ff", "embed"),
+}
+
+# leaves under a "moe" subtree (expert-stacked weights)
+MOE_SPECS: Mapping[str, tuple] = {
+    "router": ("embed", None),
+    "w1": ("experts", "embed", None),
+    "w3": ("experts", "embed", None),
+    "w2": ("experts", None, "embed"),
+}
+
+
+def _path_names(path) -> list[str]:
+    return [k.key for k in path if isinstance(k, DictKey)]
+
+
+def _leaf_spec(path, leaf, rules, axis_sizes) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    table = MOE_SPECS if "moe" in names else PARAM_SPECS
+    base = table.get(name)
+    if base is None or leaf.ndim < len(base):
+        return P()
+    pad = leaf.ndim - len(base)
+    phys = [None] * pad
+    for dim, logical in zip(leaf.shape[pad:], base):
+        axes = rules.get(logical) if logical else None
+        phys.append(sanitize_dim(axes, dim, axis_sizes))
+    return P(*phys)
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(mesh.shape)  # works for Mesh and AbstractMesh alike
+
+
+def param_specs(mesh: Mesh, params: Any) -> Any:
+    """PartitionSpec tree for a params (or AdamW state) shape-tree."""
+    rules = logical_rules(mesh)
+    sizes = _axis_sizes(mesh)
+    return tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, rules, sizes), params
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Decode-state specs.
+# --------------------------------------------------------------------------- #
+
+_STATE_4D = ("k", "v", "xk", "xv")  # (..., B, C, KV, hd)
+
+
+def _state_leaf_spec(path, leaf, rules, sizes, model_axis: str) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    batch_axes = rules.get("batch")
+    model_size = sizes.get(model_axis, 1)
+
+    if name in _STATE_4D:
+        pad = leaf.ndim - 4
+        B, C, KV, hd = leaf.shape[pad:]
+        batch = sanitize_dim(batch_axes, B, sizes)
+        if KV % model_size == 0:
+            return P(*([None] * pad), batch, None, model_axis, None)
+        if C % model_size == 0:
+            # few KV heads: shard the cache length instead (see module doc)
+            return P(*([None] * pad), batch, model_axis, None, None)
+        return P(*([None] * pad), batch, None, None, None)
+    if name == "h":  # RG-LRU hidden state (..., B, W)
+        pad = leaf.ndim - 2
+        B, W = leaf.shape[pad:]
+        batch = sanitize_dim(batch_axes, B, sizes)
+        width = model_axis if W % model_size == 0 else None
+        return P(*([None] * pad), batch, width)
+    if name == "buf":  # conv ring buffer (..., B, k-1, W)
+        pad = leaf.ndim - 3
+        B, _, W = leaf.shape[pad:]
+        batch = sanitize_dim(batch_axes, B, sizes)
+        width = model_axis if W % model_size == 0 else None
+        return P(*([None] * pad), batch, None, width)
+    if name == "pos":
+        return P(sanitize_dim(batch_axes, leaf.shape[0], sizes))
+    if name == "enc_out":
+        batch = sanitize_dim(batch_axes, leaf.shape[0], sizes)
+        return P(batch, None, None)
+    # xLSTM cell tuples and anything unnamed: batch is the dim right after
+    # any stacking dims; find the first dim divisible by the batch axes.
+    for i, dim in enumerate(leaf.shape):
+        batch = sanitize_dim(batch_axes, dim, sizes)
+        if batch is not None:
+            return P(*([None] * i), batch, *([None] * (leaf.ndim - i - 1)))
+    return P()
+
+
+def state_specs(mesh: Mesh, state: Any) -> Any:
+    rules = logical_rules(mesh)
+    sizes = _axis_sizes(mesh)
+    model_axis = "model" if "model" in mesh.axis_names else None
+    return tree_map_with_path(
+        lambda path, leaf: _state_leaf_spec(
+            path, leaf, rules, sizes, model_axis
+        ),
+        state,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Batch / token / logits specs.
+# --------------------------------------------------------------------------- #
+
+
+def batch_specs(mesh: Mesh, batch: Any) -> Any:
+    """Input batch: leading dim is the global batch -> data axes."""
+    rules = logical_rules(mesh)
+    sizes = _axis_sizes(mesh)
+
+    def spec(leaf):
+        b = sanitize_dim(rules.get("batch"), leaf.shape[0], sizes)
+        return P(b, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def logits_spec(mesh: Mesh, batch_dim: int, vocab_dim: int, ndim: int) -> P:
+    rules = logical_rules(mesh)
+    sizes = _axis_sizes(mesh)
+    b = sanitize_dim(rules.get("batch"), batch_dim, sizes)
+    v = sanitize_dim(rules.get("vocab"), vocab_dim, sizes)
+    return P(b, *([None] * (ndim - 2)), v)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,23 @@
+"""Composable model zoo (pure JAX pytrees, no flax).
+
+Six architecture families — dense GQA, MoE, hybrid RG-LRU (Griffin),
+xLSTM, VLM (stubbed frontend), audio enc-dec (stubbed codec) — plus the
+paper's four small CNNs.  All models expose:
+
+    init_params(cfg, key)                  -> params pytree
+    forward(cfg, params, batch)            -> logits (+ per-unit features)
+    prefill(cfg, params, tokens)           -> logits, DecodeState
+    decode_step(cfg, params, state, token) -> logits, DecodeState
+
+Early-exit ("agile") execution additionally uses
+:func:`repro.models.transformer.unit_forward` to run one Zygarde unit
+(a group of ``cfg.exit_every`` blocks) at a time.
+"""
+from . import common, transformer, cnn  # noqa: F401
+from .transformer import (  # noqa: F401
+    init_params,
+    forward,
+    prefill,
+    decode_step,
+    init_decode_state,
+)

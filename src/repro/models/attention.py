@@ -1,0 +1,184 @@
+"""GQA attention: block-sparse chunked prefill + single-token decode.
+
+The prefill path enumerates the (query-chunk, kv-chunk) block pairs that are
+actually inside the causal / sliding-window footprint *statically* and scans
+over that pair list with an online-softmax accumulator.  This keeps HBM
+footprint at O(S * chunk) and — importantly for the roofline analysis — makes
+``compiled.cost_analysis()`` count only the useful lower-triangle (or window
+band) FLOPs instead of the dense S^2 rectangle.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _use_flash_kernel() -> bool:
+    return (
+        os.environ.get("REPRO_FLASH_ATTENTION", "0") == "1"
+        and jax.default_backend() == "tpu"
+    )
+
+
+def _block_pairs(n_chunks: int, chunk: int, window: int) -> np.ndarray:
+    """Static (i, j) list of blocks inside the causal/window footprint."""
+    pairs = []
+    for i in range(n_chunks):
+        if window:
+            # query positions in chunk i attend back at most `window` tokens
+            j_lo = max(0, (i * chunk + chunk - 1 - window) // chunk)
+        else:
+            j_lo = 0
+        for j in range(j_lo, i + 1):
+            pairs.append((i, j))
+    return np.asarray(pairs, dtype=np.int32)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """q: (B, S, H, hd), k/v: (B, Skv, KV, hd) -> (B, S, H, hd).
+
+    ``q_offset`` shifts query positions (cross-attention uses causal=False).
+
+    On a TPU backend with REPRO_FLASH_ATTENTION=1 this dispatches to the
+    fused Pallas flash kernel (``kernels/flash_attn.py``) — the §Perf P1
+    answer to the O(S^2) f32 softmax HBM traffic of the XLA path.  The
+    dry-run keeps the XLA path (Pallas cannot lower on the CPU host).
+    """
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    if _use_flash_kernel():
+        from repro.kernels import ops as kops
+
+        o = kops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+        return o.astype(q.dtype)
+    if not causal and not window:
+        # encoder / cross-attention: dense (Skv is small for our shapes)
+        return _dense_attention(q, k, v)
+
+    chunk = min(chunk, S, Skv)
+    while S % chunk or Skv % chunk:
+        chunk //= 2
+    nq, nkv = S // chunk, Skv // chunk
+    assert nq == nkv, "causal chunked attention expects S == Skv"
+    G = H // KV
+    scale = hd ** -0.5
+
+    pairs = jnp.asarray(_block_pairs(nq, chunk, window))
+
+    qb = q.reshape(B, nq, chunk, KV, G, hd)
+    kb = k.reshape(B, nkv, chunk, KV, hd)
+    vb = v.reshape(B, nkv, chunk, KV, hd)
+
+    o0 = jnp.zeros((B, nq, chunk, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, nq, chunk, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, chunk, KV, G), jnp.float32)
+
+    pos_in_chunk = jnp.arange(chunk)
+
+    def step(carry, pair):
+        o, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        # scores: (B, chunk_q, KV, G, chunk_k)
+        s = jnp.einsum(
+            "bqkgh,bckh->bqkgc",
+            qi.astype(jnp.float32),
+            kj.astype(jnp.float32),
+        ) * scale
+        qpos = i * chunk + pos_in_chunk + q_offset
+        kpos = j * chunk + pos_in_chunk
+        mask = qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] <= window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(o, i, 1, keepdims=False)
+
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        alpha = jnp.exp(mi - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = li * alpha + p.sum(axis=-1)
+        o_new = oi * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p, vj.astype(jnp.float32)
+        )
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, i, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        return (o, m, l), None
+
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), pairs)
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _dense_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum(
+        "bqkgh,bckh->bqkgc", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_pos: jax.Array,
+    my_pos: jax.Array,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention against a (ring-buffer) KV cache.
+
+    q: (B, H, hd); k_cache/v_cache: (B, C, KV, hd);
+    slot_pos: (B, C) absolute position stored in each slot (-1 = empty);
+    my_pos: (B,) the query token's position.
+    """
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    # bf16 operands with f32 accumulation: avoids materialising an f32 copy
+    # (and its layout transpose) of the whole KV cache each step (§Perf
+    # P3-H2); scores/softmax stay f32.
+    s = jnp.einsum(
+        "bkgh,bckh->bkgc", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= my_pos[:, None])
+    if window:
+        valid &= my_pos[:, None] - slot_pos <= window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgc,bckh->bkgh", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, H, hd).astype(q.dtype)

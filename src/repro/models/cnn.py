@@ -1,0 +1,133 @@
+"""The paper's four agile CNNs (Table 3), one per dataset.
+
+Each network is a feature extractor: every layer is one Zygarde *unit*, and
+the flattened activation after each unit feeds the per-unit semi-supervised
+k-means classifier (after SelectKBest-style feature selection — see
+``repro.core.kmeans``).  There is no softmax head: classification is
+cluster-based, as in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    input_shape: Tuple[int, int, int]  # (H, W, C)
+    convs: Tuple[Tuple[int, int, bool], ...]  # (out_ch, kernel, maxpool?)
+    fcs: Tuple[int, ...]
+    n_classes: int
+
+    @property
+    def n_units(self) -> int:
+        return len(self.convs) + len(self.fcs)
+
+
+# Table 3 of the paper (conv dims are out x in x k x k; FC dims out x in).
+PAPER_CNNS = {
+    "mnist": CNNConfig(
+        "mnist", (28, 28, 1), ((20, 5, True), (100, 5, True)), (200, 500), 10
+    ),
+    "esc10": CNNConfig(
+        "esc10", (32, 32, 1),
+        ((16, 5, True), (32, 5, True), (64, 5, True)), (95,), 10,
+    ),
+    "cifar100": CNNConfig(
+        "cifar100", (32, 32, 3), ((32, 5, True), (64, 5, True)), (384, 192), 5
+    ),
+    "vww": CNNConfig(
+        "vww", (32, 32, 3),
+        ((16, 5, True), (32, 5, True), (64, 5, True), (64, 5, True)), (192,), 2,
+    ),
+}
+
+
+def _feature_sizes(cfg: CNNConfig) -> List[int]:
+    """Flattened feature size after each unit."""
+    h, w, c = cfg.input_shape
+    sizes = []
+    for out_ch, k, pool in cfg.convs:
+        if pool:
+            h, w = h // 2, w // 2
+        c = out_ch
+        sizes.append(h * w * c)
+    flat = sizes[-1]
+    for out in cfg.fcs:
+        sizes.append(out)
+        flat = out
+    return sizes
+
+
+def init_cnn_params(cfg: CNNConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_units)
+    params = {"convs": [], "fcs": []}
+    c_in = cfg.input_shape[2]
+    for i, (out_ch, k, _) in enumerate(cfg.convs):
+        fan = c_in * k * k
+        params["convs"].append(
+            {
+                "w": jax.random.normal(keys[i], (k, k, c_in, out_ch))
+                * (2.0 / fan) ** 0.5,
+                "b": jnp.zeros((out_ch,)),
+            }
+        )
+        c_in = out_ch
+    in_dim = _feature_sizes(cfg)[len(cfg.convs) - 1]
+    for j, out in enumerate(cfg.fcs):
+        kidx = len(cfg.convs) + j
+        params["fcs"].append(
+            {
+                "w": jax.random.normal(keys[kidx], (in_dim, out))
+                * (2.0 / in_dim) ** 0.5,
+                "b": jnp.zeros((out,)),
+            }
+        )
+        in_dim = out
+    return params
+
+
+def _conv_unit(p: dict, x: jax.Array, pool: bool) -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + p["b"]
+    y = jax.nn.relu(y)
+    if pool:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    return y
+
+
+def cnn_unit_forward(cfg: CNNConfig, params: dict, x: jax.Array, unit: int):
+    """Run one unit.  Conv units take/return NHWC; FC units take/return (B, d).
+
+    Returns (activation, flattened feature (B, feat) f32).
+    """
+    n_conv = len(cfg.convs)
+    if unit < n_conv:
+        out_ch, k, pool = cfg.convs[unit]
+        y = _conv_unit(params["convs"][unit], x, pool)
+        feat = y.reshape(y.shape[0], -1)
+        if unit == n_conv - 1:
+            y = feat  # next unit is FC
+        return y, feat.astype(jnp.float32)
+    j = unit - n_conv
+    p = params["fcs"][j]
+    y = jax.nn.relu(x @ p["w"] + p["b"])
+    return y, y.astype(jnp.float32)
+
+
+def cnn_forward_all(cfg: CNNConfig, params: dict, x: jax.Array):
+    """Run every unit; returns list of per-unit flattened features."""
+    feats = []
+    h = x
+    for u in range(cfg.n_units):
+        h, f = cnn_unit_forward(cfg, params, h, u)
+        feats.append(f)
+    return feats

@@ -1,0 +1,221 @@
+"""Shared building blocks: sharding hooks, norms, RoPE, initializers."""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Mapping, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------- #
+# Logical-axis sharding.
+#
+# Model code annotates intermediates with *logical* axis names; the launcher
+# installs a rule-set mapping logical names to physical mesh axes.  On CPU
+# (tests, smoke runs) no rules are installed and ``shard`` is a no-op, so the
+# same model code runs everywhere.
+# --------------------------------------------------------------------------- #
+
+_RULES: contextvars.ContextVar[Optional[tuple[Mesh, Mapping[str, Any]]]] = (
+    contextvars.ContextVar("logical_axis_rules", default=None)
+)
+
+# Default logical->physical mapping for the production meshes.  ``batch`` maps
+# to every data-like axis (("pod","data") on the multi-pod mesh); ``embed`` is
+# the FSDP dimension; ``model``-group names map to the tensor axis.
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "embed": ("data",),  # FSDP: weight d_model dim sharded over data
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "seq": None,
+    "qseq": None,
+}
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Mapping[str, Any]):
+    token = _RULES.set((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding via logical axis names (no-op w/o rules)."""
+    ctx = _RULES.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"shard(): rank {x.ndim} array annotated with {logical_axes}"
+        )
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    phys = []
+    for dim, name in zip(x.shape, logical_axes):
+        axes = rules.get(name) if name else None
+        phys.append(sanitize_dim(axes, dim, axis_sizes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*phys)))
+
+
+def sanitize_dim(axes, dim: int, axis_sizes: Mapping[str, int]):
+    """Drop mesh axes a dim is not divisible by (e.g. 2 KV heads on a
+    16-way model axis fall back to replication)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    total, kept = 1, []
+    for a in axes:
+        sz = axis_sizes.get(a, 1)
+        if dim % (total * sz) == 0:
+            kept.append(a)
+            total *= sz
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def spec_for(*logical_axes: Optional[str], rules: Mapping[str, Any]) -> P:
+    return P(*[rules.get(a) if a else None for a in logical_axes])
+
+
+# --------------------------------------------------------------------------- #
+# Initializers (all take an explicit key; params stored in cfg dtype).
+# --------------------------------------------------------------------------- #
+
+
+def dense_init(key, in_dim: int, out_shape: Sequence[int], dtype) -> jax.Array:
+    scale = in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, *out_shape)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+def split_like(key, tree_keys: Sequence[str]) -> dict:
+    keys = jax.random.split(key, len(tree_keys))
+    return dict(zip(tree_keys, keys))
+
+
+# --------------------------------------------------------------------------- #
+# Norms and activations.
+# --------------------------------------------------------------------------- #
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layernorm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * scale + bias
+
+
+def norm_init(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ones((d,), dtype)}
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def activate(kind: str, x: jax.Array) -> jax.Array:
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    if kind == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings.
+# --------------------------------------------------------------------------- #
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate(
+        [
+            x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+            x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin,
+        ],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Gradient dtype guard (§Perf P2-H4).
+#
+# The f32 loss/softmax region promotes residual-stream cotangents to f32,
+# which doubles the bytes of every per-layer tensor-parallel backward
+# all-reduce.  Applied at block boundaries, this guard casts the incoming
+# cotangent back to the activation dtype (identity in the forward pass).
+# --------------------------------------------------------------------------- #
+
+
+@jax.custom_vjp
+def grad_dtype_guard(x: jax.Array) -> jax.Array:
+    return x
+
+
+def _gdg_fwd(x):
+    # residuals must be jax types: carry a zero-size array for the dtype
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gdg_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_dtype_guard.defvjp(_gdg_fwd, _gdg_bwd)

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN with grouped, capacity-based token dispatch.
+
+Tokens are processed in groups of ``cfg.moe_group_size``; within each group a
+top-k router assigns tokens to experts with a fixed per-expert capacity
+(``capacity_factor``).  Dispatch/combine are expressed as einsums so GSPMD
+lowers them to all-to-alls when experts are sharded over the ``model`` mesh
+axis (the dominant collective for dbrx / qwen3-moe — see EXPERIMENTS.md).
+
+Load-balance auxiliary loss follows Switch Transformer (mean gate prob x
+mean dispatch fraction per expert).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import activate, dense_init, shard
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, (e,), jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[2], (e, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = (jax.random.normal(ks[3], (e, d, f)) * d ** -0.5).astype(dtype)
+    return p
+
+
+def _capacity(group: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(group * top_k * factor / n_experts)
+    return max(4, c)
+
+
+def apply_moe(p: dict, cfg, x: jax.Array):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = min(cfg.moe_group_size, B * S)
+    while (B * S) % G:
+        G //= 2
+    n_groups = (B * S) // G
+    C = _capacity(G, K, E, cfg.capacity_factor)
+
+    xg = x.reshape(n_groups, G, D)
+    xg = shard(xg, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (g, t, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # one-hot expert assignment per routing slot: (g, t, K, E)
+    assign = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    # position of each (token, slot) within its expert's capacity buffer
+    pos = jnp.cumsum(assign.reshape(n_groups, G * K, E), axis=1).reshape(
+        n_groups, G, K, E
+    ) - assign
+    keep = (pos < C) * assign  # drop overflow tokens
+    pos = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+    # dispatch/combine tensors: (g, t, E, C).  Routing positions are exact
+    # in f32 above; the (0/1-and-gate-valued) dispatch tensors themselves
+    # are cast to the activation dtype — they are matmul operands sized
+    # tokens x E x C and dominate MoE activation traffic (§Perf P1-H4).
+    slot_onehot = jax.nn.one_hot(pos, C, dtype=jnp.float32)
+    disp = jnp.einsum("gtke,gtkec->gtec", keep, slot_onehot).astype(x.dtype)
+    combine = jnp.einsum(
+        "gtk,gtke,gtkec->gtec", gate_vals, keep, slot_onehot
+    ).astype(x.dtype)
+
+    # ---- dispatch (induces all-to-all under expert sharding) -------------- #
+    xe = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xg)
+    xe = shard(xe, "batch", "experts", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w1"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+    else:
+        h = activate(cfg.act, h)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    ye = shard(ye, "batch", "experts", None, None)
+
+    # ---- combine ----------------------------------------------------------- #
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    out = shard(out, "batch", None, None)
+
+    # Switch-style load-balance loss
+    frac_tokens = jnp.mean(assign.sum(2), axis=1)  # (g, E) fraction routed
+    frac_probs = jnp.mean(probs, axis=1)  # (g, E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

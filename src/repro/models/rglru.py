@@ -1,0 +1,112 @@
+"""Griffin-style recurrent block: causal conv1d + RG-LRU gated recurrence.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, arXiv:2402.19427):
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence is evaluated with ``jax.lax.associative_scan``
+for full sequences (train/prefill) and as a one-step update for decode.  A
+Pallas kernel (`repro.kernels.rglru_scan`) provides the TPU-tiled blocked
+variant; this module is the pure-JAX reference path used by the models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, zeros
+
+C_FACTOR = 8.0
+
+
+def init_rglru(key, width: int, dtype, n_blocks: int = 1) -> dict:
+    """Gate matrices are block-diagonal with ``n_blocks`` (w/H, w/H) blocks
+    (Griffin appendix A) — which also makes them tensor-parallel-local when
+    blocks shard over the model mesh axis (§Perf P2-H3)."""
+    ks = jax.random.split(key, 3)
+    dh = width // n_blocks
+    # Lambda initialised so that a_t in (0.9, 0.999) (Griffin appendix)
+    u = jax.random.uniform(ks[0], (width,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1((-jnp.log(u)) / C_FACTOR))  # softplus^-1
+    return {
+        "wa": (jax.random.normal(ks[1], (n_blocks, dh, dh)) * dh ** -0.5
+               ).astype(dtype),
+        "ba": zeros((width,), jnp.float32),
+        "wx": (jax.random.normal(ks[2], (n_blocks, dh, dh)) * dh ** -0.5
+               ).astype(dtype),
+        "bx": zeros((width,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def _block_mm(w: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (..., W) through block-diagonal w: (H, dh, dh) -> (..., W)."""
+    H, dh, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], H, dh)
+    yb = jnp.einsum("...hd,hde->...he", xb, w)
+    return yb.reshape(*x.shape)
+
+
+def _gates(p: dict, x: jax.Array):
+    r = jax.nn.sigmoid(_block_mm(p["wa"], x).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(_block_mm(p["wx"], x).astype(jnp.float32) + p["bx"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    return a, gated_x
+
+
+def rglru_seq(p: dict, x: jax.Array, h0: jax.Array | None = None):
+    """Full-sequence RG-LRU.  x: (B, S, W) -> (y (B, S, W), h_last (B, W))."""
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # fold the incoming state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p: dict, x: jax.Array, h: jax.Array):
+    """One decode step.  x: (B, W), h: (B, W) -> (y, h_new)."""
+    a, b = _gates(p, x)
+    h_new = a * h.astype(jnp.float32) + b
+    return h_new.astype(x.dtype), h_new
+
+
+# --------------------------------------------------------------------------- #
+# Causal depthwise conv1d (temporal mixing before the recurrence).
+# --------------------------------------------------------------------------- #
+
+
+def init_conv1d(key, width: int, kernel: int, dtype) -> dict:
+    w = (jax.random.normal(key, (kernel, width)) * kernel ** -0.5).astype(dtype)
+    return {"w": w, "b": zeros((width,), dtype)}
+
+
+def conv1d_seq(p: dict, x: jax.Array) -> jax.Array:
+    """Causal depthwise conv.  x: (B, S, W)."""
+    k = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1]] * p["w"][i] for i in range(k)
+    )
+    return out + p["b"]
+
+
+def conv1d_step(p: dict, x: jax.Array, buf: jax.Array):
+    """One decode step with rolling buffer.  x: (B, W), buf: (B, k-1, W)."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([buf, x[:, None]], axis=1)  # (B, k, W)
+    out = jnp.einsum("bkw,kw->bw", window, p["w"]) + p["b"]
+    return out, window[:, 1:] if k > 1 else buf

@@ -1,0 +1,806 @@
+"""Model assembly for all six architecture families.
+
+Layer stacks are *scanned* (``jax.lax.scan`` over pattern periods with
+stacked per-position parameters) so the lowered HLO is independent of depth —
+94-layer qwen3-moe compiles as fast as a 2-layer smoke model.  Heterogeneous
+block patterns (Griffin's rec/rec/attn, xLSTM's mlstm/slstm) unroll one
+pattern period inside each scan step; layers left over when ``n_layers`` is
+not a multiple of the period become individually-parameterised remainder
+blocks.
+
+Public entry points:
+    init_params / forward / prefill / decode_step / init_decode_state
+    unit_forward (Zygarde agile execution: one unit = ``exit_every`` blocks)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_mod
+from . import rglru as rg
+from . import xlstm as xl
+from .attention import chunked_attention, decode_attention
+from .common import (
+    apply_norm,
+    apply_rope,
+    activate,
+    dense_init,
+    dtype_of,
+    embed_init,
+    grad_dtype_guard,
+    norm_init,
+    shard,
+    zeros,
+)
+
+# --------------------------------------------------------------------------- #
+# Block parameter initialisation.
+# --------------------------------------------------------------------------- #
+
+
+def _init_attn(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (H, hd), dtype),
+        "wk": dense_init(ks[1], d, (KV, hd), dtype),
+        "wv": dense_init(ks[2], d, (KV, hd), dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * (H * hd) ** -0.5).astype(
+            dtype
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((H, hd), dtype)
+        p["bk"] = zeros((KV, hd), dtype)
+        p["bv"] = zeros((KV, hd), dtype)
+    return p
+
+
+def _init_ffn(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(ks[0], d, (f,), dtype),
+        "w2": (jax.random.normal(ks[1], (f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = dense_init(ks[2], d, (f,), dtype)
+    return p
+
+
+def init_block(key, cfg, kind: str, *, cross: bool = False) -> dict:
+    dtype = dtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: dict = {"norm1": norm_init(cfg.norm, d, dtype)}
+    if kind == "attn":
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg.norm, d, dtype)
+        if cfg.n_experts:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        elif cfg.d_ff:
+            p["ffn"] = _init_ffn(ks[1], cfg, dtype)
+        if cross:
+            p["norm_x"] = norm_init(cfg.norm, d, dtype)
+            p["xattn"] = _init_attn(ks[2], cfg, dtype)
+    elif kind == "rec":
+        w = cfg.resolved_rglru_width
+        p["gate_proj"] = dense_init(ks[0], d, (w,), dtype)
+        p["rec_proj"] = dense_init(ks[1], d, (w,), dtype)
+        p["conv"] = rg.init_conv1d(ks[2], w, cfg.conv1d_width, dtype)
+        p["rglru"] = rg.init_rglru(ks[3], w, dtype, n_blocks=cfg.n_heads)
+        p["out_proj"] = dense_init(ks[4], w, (d,), dtype)
+        p["norm2"] = norm_init(cfg.norm, d, dtype)
+        if cfg.d_ff:
+            p["ffn"] = _init_ffn(ks[5], cfg, dtype)
+    elif kind == "mlstm":
+        p["cell"] = xl.init_mlstm(ks[0], d, cfg.n_heads, dtype)
+    elif kind == "slstm":
+        p["cell"] = xl.init_slstm(ks[0], d, cfg.n_heads, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Block application — full-sequence (train / prefill).
+# --------------------------------------------------------------------------- #
+
+
+def _qkv(p: dict, cfg, h: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dnh->bsnh", h, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", h, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", h, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def block_seq(
+    p: dict,
+    cfg,
+    kind: str,
+    x: jax.Array,
+    *,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    collect_cache: bool = False,
+):
+    """x: (B, S, D) -> (x, aux_loss, cache_kv or None)."""
+    aux = jnp.float32(0.0)
+    cache = None
+    B, S, D = x.shape
+    window = cfg.window if window is None else window
+    if kind == "attn":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q, k, v = _qkv(p["attn"], cfg, h, positions)
+        q = shard(q, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+        attn_fn = functools.partial(
+            chunked_attention, causal=causal, window=window,
+            chunk=cfg.attn_chunk,
+        )
+        if cfg.remat_attention:
+            attn_fn = jax.checkpoint(attn_fn, prevent_cse=False)
+        o = attn_fn(q, k, v)
+        x = x + jnp.einsum("bsnh,nhd->bsd", o, p["attn"]["wo"])
+        if collect_cache:
+            cache = (k, v)
+        if "xattn" in p:
+            assert enc_out is not None
+            hx = apply_norm(cfg.norm, p["norm_x"], x)
+            qx = jnp.einsum("bsd,dnh->bsnh", hx, p["xattn"]["wq"])
+            kx = jnp.einsum("bsd,dnh->bsnh", enc_out, p["xattn"]["wk"])
+            vx = jnp.einsum("bsd,dnh->bsnh", enc_out, p["xattn"]["wv"])
+            ox = chunked_attention(qx, kx, vx, causal=False, window=0)
+            x = x + jnp.einsum("bsnh,nhd->bsd", ox, p["xattn"]["wo"])
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        if "moe" in p:
+            y, aux = moe_mod.apply_moe(p["moe"], cfg, h2)
+        elif "ffn" in p:
+            y = _apply_ffn(p["ffn"], cfg, h2)
+        else:
+            y = jnp.zeros_like(x)
+        x = x + y
+    elif kind == "rec":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["gate_proj"]))
+        r = jnp.einsum("bsd,dw->bsw", h, p["rec_proj"])
+        r = rg.conv1d_seq(p["conv"], r)
+        r, _ = rg.rglru_seq(p["rglru"], r)
+        x = x + jnp.einsum("bsw,wd->bsd", gate * r, p["out_proj"])
+        if cfg.d_ff:
+            h2 = apply_norm(cfg.norm, p["norm2"], x)
+            x = x + _apply_ffn(p["ffn"], cfg, h2)
+    elif kind == "mlstm":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        y, _ = xl.mlstm_seq(p["cell"], h, cfg.n_heads)
+        x = x + y
+    elif kind == "slstm":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        y, _ = xl.slstm_seq(p["cell"], h, cfg.n_heads)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    x = shard(x, "batch", "seq", None)
+    # NOTE (§Perf P2-H4, refuted): wrapping x in common.grad_dtype_guard
+    # forces bf16 residual cotangents at block boundaries, but measured
+    # zero collective-byte change — the f32 all-reduces originate INSIDE
+    # the block backward (f32-internal gate/softmax ops feeding the dots).
+    return x, aux, cache
+
+
+def _apply_ffn(p: dict, cfg, h: jax.Array) -> jax.Array:
+    u = jnp.einsum("bsd,df->bsf", h, p["w1"])
+    u = shard(u, "batch", None, "ff")
+    if cfg.act == "swiglu":
+        u = jax.nn.silu(u) * jnp.einsum("bsd,df->bsf", h, p["w3"])
+    else:
+        u = activate(cfg.act, u)
+    return jnp.einsum("bsf,fd->bsd", u, p["w2"])
+
+
+# --------------------------------------------------------------------------- #
+# Block application — single-token decode.
+# --------------------------------------------------------------------------- #
+
+
+def _slot_positions(pos: jax.Array, capacity: int) -> jax.Array:
+    """Absolute position stored in each ring-buffer slot (-1 = empty).
+
+    pos: (B,) number of tokens already written.  Slot s holds the largest
+    p < pos with p % capacity == s.
+    """
+    s = jnp.arange(capacity)
+    last = pos[:, None] - 1
+    cand = last - jnp.mod(last - s[None, :], capacity)
+    return jnp.where((cand >= 0) & (pos[:, None] > 0), cand, -1)
+
+
+def block_step(
+    p: dict,
+    cfg,
+    kind: str,
+    x: jax.Array,
+    state: dict,
+    pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+):
+    """x: (B, D); state: per-block decode state; pos: (B,) current position."""
+    B, D = x.shape
+    window = cfg.window if window is None else window
+    new_state = dict(state)
+    if kind == "attn":
+        h = apply_norm(cfg.norm, p["norm1"], x)[:, None]  # (B, 1, D)
+        q, k, v = _qkv(p["attn"], cfg, h, pos[:, None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        C = state["k"].shape[1]
+        slot = jnp.mod(pos, C)
+        k_cache = _write_slot(state["k"], k, slot)
+        v_cache = _write_slot(state["v"], v, slot)
+        slot_pos = _slot_positions(pos + 1, C)
+        o = decode_attention(q, k_cache, v_cache, slot_pos, pos, window)
+        x = x + jnp.einsum("bnh,nhd->bd", o, p["attn"]["wo"])
+        new_state["k"], new_state["v"] = k_cache, v_cache
+        if "xattn" in p:
+            hx = apply_norm(cfg.norm, p["norm_x"], x)
+            qx = jnp.einsum("bd,dnh->bnh", hx, p["xattn"]["wq"])
+            xk, xv = state["xk"], state["xv"]
+            nenc = xk.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(nenc), (B, nenc))
+            ox = decode_attention(
+                qx, xk, xv, enc_pos, jnp.full((B,), nenc, jnp.int32), 0
+            )
+            x = x + jnp.einsum("bnh,nhd->bd", ox, p["xattn"]["wo"])
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        if "moe" in p:
+            y, _ = moe_mod.apply_moe(p["moe"], cfg, h2[:, None])
+            y = y[:, 0]
+        elif "ffn" in p:
+            y = _apply_ffn(p["ffn"], cfg, h2[:, None])[:, 0]
+        else:
+            y = jnp.zeros_like(x)
+        x = x + y
+    elif kind == "rec":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        gate = jax.nn.gelu(jnp.einsum("bd,dw->bw", h, p["gate_proj"]))
+        r = jnp.einsum("bd,dw->bw", h, p["rec_proj"])
+        r, new_state["buf"] = rg.conv1d_step(p["conv"], r, state["buf"])
+        r, new_state["h"] = rg.rglru_step(p["rglru"], r, state["h"])
+        x = x + jnp.einsum("bw,wd->bd", gate * r, p["out_proj"])
+        if cfg.d_ff:
+            h2 = apply_norm(cfg.norm, p["norm2"], x)
+            x = x + _apply_ffn(p["ffn"], cfg, h2[:, None])[:, 0]
+    elif kind in ("mlstm", "slstm"):
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        step_fn = xl.mlstm_step if kind == "mlstm" else xl.slstm_step
+        y, cell = step_fn(p["cell"], h, cfg.n_heads, state["cell"])
+        new_state["cell"] = cell
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, new_state
+
+
+def _write_slot(cache: jax.Array, val: jax.Array, slot: jax.Array) -> jax.Array:
+    """cache: (B, C, ...), val: (B, ...), slot: (B,) per-batch write index.
+
+    Batched scatter (``.at[].set``): touches only the B written slots.  The
+    earlier one-hot blend formulation read+wrote the ENTIRE cache every
+    decode step — 118 of 160 GB/step on dbrx decode_32k (§Perf P3-H1).
+    """
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), slot].set(val.astype(cache.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# Whole-model parameters.
+# --------------------------------------------------------------------------- #
+
+
+def _layer_plan(cfg) -> Tuple[int, int, list]:
+    period = cfg.pattern_period
+    n_scan = cfg.n_layers // period
+    rem_kinds = [cfg.layer_kind(n_scan * period + i)
+                 for i in range(cfg.n_layers - n_scan * period)]
+    return period, n_scan, rem_kinds
+
+
+def init_params(cfg, key) -> dict:
+    dtype = dtype_of(cfg)
+    period, n_scan, rem_kinds = _layer_plan(cfg)
+    cross = cfg.is_encoder_decoder
+    keys = jax.random.split(key, 8)
+
+    def stacked(key_q, kind):
+        ks = jax.random.split(key_q, n_scan)
+        blocks = [init_block(k, cfg, kind, cross=cross) for k in ks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    qkeys = jax.random.split(keys[0], period)
+    stack = tuple(
+        stacked(qkeys[q], cfg.layer_kind(q)) for q in range(period)
+    )
+    rkeys = jax.random.split(keys[1], max(1, len(rem_kinds)))
+    rem = tuple(
+        init_block(rkeys[i], cfg, kind, cross=cross)
+        for i, kind in enumerate(rem_kinds)
+    )
+
+    params = {
+        "embed": embed_init(keys[2], cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": {"stack": stack, "rem": rem},
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[3], cfg.d_model, (cfg.padded_vocab,), dtype
+        )
+    if cfg.n_frontend_tokens or cfg.is_encoder_decoder:
+        params["frontend_proj"] = dense_init(
+            keys[4], cfg.d_model, (cfg.d_model,), dtype
+        )
+    if cfg.is_encoder_decoder:
+        eks = jax.random.split(keys[5], cfg.n_enc_layers)
+        enc_blocks = [init_block(k, cfg, "attn") for k in eks]
+        params["enc"] = {
+            "stack": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+            "final_norm": norm_init(cfg.norm, cfg.d_model, dtype_of(cfg)),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Full-sequence forward (training / prefill).
+# --------------------------------------------------------------------------- #
+
+
+def _embed(cfg, params, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens]
+    x = shard(x, "batch", "seq", None)
+    return x
+
+
+def _encode(cfg, params, frames: jax.Array) -> jax.Array:
+    """Bidirectional encoder over stubbed frontend embeddings."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(dtype_of(cfg)),
+                   params["frontend_proj"])
+
+    def body(x, bp):
+        x, _, _ = block_seq(bp, cfg, "attn", x, causal=False, window=0)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"]["stack"])
+    return apply_norm(cfg.norm, params["enc"]["final_norm"], x)
+
+
+def _run_stack(
+    cfg,
+    params,
+    x: jax.Array,
+    *,
+    enc_out=None,
+    window: Optional[int] = None,
+    remat: bool = True,
+):
+    """Scan the layer stack in groups of ``cfg.remat_every`` period-groups,
+    checkpointing once per group: the backward pass re-runs a group's
+    forward instead of carrying one save per layer (§Perf P1-H2)."""
+    period, n_scan, rem_kinds = _layer_plan(cfg)
+    stack = params["layers"]["stack"]
+
+    def apply_periods(x, aux, bps):
+        """bps: tuple over q of trees with leading (k, ...) group dim."""
+        k = jax.tree.leaves(bps[0])[0].shape[0] if period else 0
+        for j in range(k):
+            for q in range(period):
+                bp = jax.tree.map(lambda a, j=j: a[j], bps[q])
+                x, a, _ = block_seq(
+                    bp, cfg, cfg.layer_kind(q), x,
+                    enc_out=enc_out, window=window,
+                )
+                aux = aux + a
+        return x, aux
+
+    group_fn = apply_periods
+    if remat:
+        group_fn = jax.checkpoint(apply_periods, prevent_cse=False)
+
+    k = max(1, cfg.remat_every) if remat else 1
+    n_groups, leftover = divmod(n_scan, k)
+    aux = jnp.float32(0.0)
+
+    if n_groups:
+        grouped = tuple(
+            jax.tree.map(
+                lambda a: a[: n_groups * k].reshape(
+                    n_groups, k, *a.shape[1:]
+                ),
+                stack[q],
+            )
+            for q in range(period)
+        )
+
+        def body(carry, xs):
+            x, aux = carry
+            x, aux = group_fn(x, aux, xs)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux), grouped)
+
+    if leftover:
+        tail = tuple(
+            jax.tree.map(lambda a: a[n_groups * k:], stack[q])
+            for q in range(period)
+        )
+        x, aux = group_fn(x, aux, tail)
+
+    for bp, kind in zip(params["layers"]["rem"], rem_kinds):
+        x, a, _ = block_seq(bp, cfg, kind, x, enc_out=enc_out, window=window)
+        aux = aux + a
+    return x, aux
+
+
+def _readout(cfg, params, x: jax.Array) -> jax.Array:
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return shard(logits, "batch", None, "vocab")
+
+
+def forward(
+    cfg,
+    params,
+    batch: dict,
+    *,
+    window: Optional[int] = None,
+    remat: bool = True,
+):
+    """batch: {"tokens": (B,S) int32, optional "frontend": (B,F,D)}.
+
+    Returns (logits (B, S_total, V) f32, aux_loss scalar).
+    """
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frontend"])
+    elif cfg.n_frontend_tokens and "frontend" in batch:
+        fx = jnp.einsum(
+            "bsd,de->bse", batch["frontend"].astype(x.dtype),
+            params["frontend_proj"],
+        )
+        x = jnp.concatenate([fx, x], axis=1)
+    x, aux = _run_stack(cfg, params, x, enc_out=enc_out, window=window,
+                        remat=remat)
+    return _readout(cfg, params, x), aux
+
+
+# --------------------------------------------------------------------------- #
+# Decode state and serving steps.
+# --------------------------------------------------------------------------- #
+
+
+def _block_state(cfg, kind: str, batch: int, cache_len: int, *, cross: bool):
+    dtype = dtype_of(cfg)
+    hd, KV = cfg.resolved_head_dim, cfg.n_kv_heads
+    if kind == "attn":
+        st = {
+            "k": jnp.zeros((batch, cache_len, KV, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, KV, hd), dtype),
+        }
+        if cross:
+            st["xk"] = jnp.zeros((batch, cfg.n_enc_tokens, KV, hd), dtype)
+            st["xv"] = jnp.zeros((batch, cfg.n_enc_tokens, KV, hd), dtype)
+        return st
+    if kind == "rec":
+        w = cfg.resolved_rglru_width
+        return {
+            "h": jnp.zeros((batch, w), jnp.float32),
+            "buf": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+        }
+    if kind == "mlstm":
+        return {"cell": xl.mlstm_init_state(batch, cfg.d_model, cfg.n_heads)}
+    if kind == "slstm":
+        return {"cell": xl.slstm_init_state(batch, cfg.d_model, cfg.n_heads)}
+    raise ValueError(kind)
+
+
+def cache_capacity(cfg, seq_len: int, window: Optional[int] = None) -> int:
+    """Ring-buffer KV capacity: window+1 slots (rounded up to a 128 multiple
+    so the cache-length dim stays MXU-aligned and mesh-shardable), capped at
+    the sequence length.  Extra slots simply hold older positions that the
+    window mask excludes, so any capacity >= window+1 is correct."""
+    w = cfg.window if window is None else window
+    if not w:
+        return seq_len
+    cap = -(-(w + 1) // 128) * 128
+    return min(seq_len, cap)
+
+
+def init_decode_state(
+    cfg, batch: int, seq_len: int, *, window: Optional[int] = None,
+    cache_len: Optional[int] = None, stacked: bool = True,
+) -> dict:
+    """Decode state.  ``stacked=True`` carries per-period (n_scan, ...)
+    arrays through a ``lax.scan`` over layers (small HLO, depth-independent
+    compile time).  ``stacked=False`` keeps one buffer per layer for the
+    *unrolled* decode path: caches then update fully in place (a scan carry
+    forces a slice read+write per layer per step — §Perf P3-H3)."""
+    period, n_scan, rem_kinds = _layer_plan(cfg)
+    cache_len = cache_len or cache_capacity(cfg, seq_len, window)
+    cross = cfg.is_encoder_decoder
+
+    def stacked_state(kind):
+        one = _block_state(cfg, kind, batch, cache_len, cross=cross)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_scan, *a.shape)), one
+        )
+
+    def unstacked_state(kind):
+        return tuple(
+            _block_state(cfg, kind, batch, cache_len, cross=cross)
+            for _ in range(n_scan)
+        )
+
+    make = stacked_state if stacked else unstacked_state
+    state = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "stack": tuple(make(cfg.layer_kind(q)) for q in range(period)),
+        "rem": tuple(
+            _block_state(cfg, kind, batch, cache_len, cross=cross)
+            for kind in rem_kinds
+        ),
+    }
+    if cfg.is_encoder_decoder:
+        state["enc_out"] = jnp.zeros(
+            (batch, cfg.n_enc_tokens, cfg.d_model), dtype_of(cfg)
+        )
+    return state
+
+
+def decode_step(
+    cfg,
+    params,
+    state: dict,
+    token: jax.Array,
+    *,
+    window: Optional[int] = None,
+    unroll: bool = False,
+):
+    """One serving step: token (B,) int32 -> (logits (B,V), new state).
+
+    ``unroll=True`` (with a ``stacked=False`` state) emits straight-line
+    per-layer code whose cache scatters are fully in place — the production
+    serving configuration."""
+    period, n_scan, rem_kinds = _layer_plan(cfg)
+    x = params["embed"][token]
+    pos = state["pos"]
+
+    if unroll:
+        # layer order matches the scan: r-th period group, q within group
+        new_per_q = [[None] * n_scan for _ in range(period)]
+        for r in range(n_scan):
+            for q in range(period):
+                bp = jax.tree.map(lambda a, r=r: a[r],
+                                  params["layers"]["stack"][q])
+                x, ns = block_step(
+                    bp, cfg, cfg.layer_kind(q), x, state["stack"][q][r],
+                    pos, window=window,
+                )
+                new_per_q[q][r] = ns
+        new_stack = tuple(tuple(states) for states in new_per_q)
+    else:
+        def period_body(x, xs):
+            bp_tuple, st_tuple = xs
+            new_states = []
+            for q in range(period):
+                x, ns = block_step(
+                    bp_tuple[q], cfg, cfg.layer_kind(q), x, st_tuple[q], pos,
+                    window=window,
+                )
+                new_states.append(ns)
+            return x, tuple(new_states)
+
+        x, new_stack = jax.lax.scan(
+            period_body, x, (params["layers"]["stack"], state["stack"])
+        )
+    new_rem = []
+    for bp, st, kind in zip(params["layers"]["rem"], state["rem"], rem_kinds):
+        x, ns = block_step(bp, cfg, kind, x, st, pos, window=window)
+        new_rem.append(ns)
+
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = jnp.einsum("bd,dv->bv", x, head).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+
+    new_state = dict(state)
+    new_state["pos"] = pos + 1
+    new_state["stack"] = new_stack
+    new_state["rem"] = tuple(new_rem)
+    return logits, new_state
+
+
+def prefill(
+    cfg,
+    params,
+    batch: dict,
+    *,
+    window: Optional[int] = None,
+    cache_len: Optional[int] = None,
+):
+    """Run the full prompt, returning last-position logits + decode state.
+
+    Recurrent/xLSTM states are re-derived; attention KV caches are filled
+    from the sequence path (last ``cache_len`` positions).  For
+    full-attention serving pass ``cache_len >= prompt + max_new_tokens`` —
+    the default sizes the ring buffer to the prompt, so each decoded token
+    would evict the oldest cache entry.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    period, n_scan, rem_kinds = _layer_plan(cfg)
+    cache_len = cache_len or cache_capacity(cfg, S, window)
+    x = _embed(cfg, params, tokens)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frontend"])
+    elif cfg.n_frontend_tokens and "frontend" in batch:
+        fx = jnp.einsum(
+            "bsd,de->bse", batch["frontend"].astype(x.dtype),
+            params["frontend_proj"],
+        )
+        x = jnp.concatenate([fx, x], axis=1)
+
+    state = init_decode_state(cfg, B, S, window=window, cache_len=cache_len)
+    state["pos"] = jnp.full((B,), x.shape[1], jnp.int32)
+    if enc_out is not None:
+        state["enc_out"] = enc_out
+
+    def fill_block(bp, kind, x, st):
+        if kind == "attn":
+            x, _, cache = block_seq(
+                bp, cfg, kind, x, enc_out=enc_out, window=window,
+                collect_cache=True,
+            )
+            k, v = cache
+            st = dict(st)
+            st["k"] = _ring_fill(k, cache_len)
+            st["v"] = _ring_fill(v, cache_len)
+            if "xattn" in bp:
+                st["xk"] = jnp.einsum(
+                    "bsd,dnh->bsnh", enc_out, bp["xattn"]["wk"]
+                )
+                st["xv"] = jnp.einsum(
+                    "bsd,dnh->bsnh", enc_out, bp["xattn"]["wv"]
+                )
+            return x, st
+        if kind == "rec":
+            h = apply_norm(cfg.norm, bp["norm1"], x)
+            gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, bp["gate_proj"]))
+            r = jnp.einsum("bsd,dw->bsw", h, bp["rec_proj"])
+            rc = rg.conv1d_seq(bp["conv"], r)
+            ry, hlast = rg.rglru_seq(bp["rglru"], rc)
+            x = x + jnp.einsum("bsw,wd->bsd", gate * ry, bp["out_proj"])
+            if cfg.d_ff:
+                h2 = apply_norm(cfg.norm, bp["norm2"], x)
+                x = x + _apply_ffn(bp["ffn"], cfg, h2)
+            st = dict(st)
+            st["h"] = hlast
+            kw = bp["conv"]["w"].shape[0]
+            st["buf"] = r[:, -(kw - 1):] if kw > 1 else st["buf"]
+            return x, st
+        # xLSTM kinds
+        h = apply_norm(cfg.norm, bp["norm1"], x)
+        seq_fn = xl.mlstm_seq if kind == "mlstm" else xl.slstm_seq
+        y, cell = seq_fn(bp["cell"], h, cfg.n_heads)
+        st = dict(st)
+        st["cell"] = cell
+        return x + y, st
+
+    def period_body(x, xs):
+        bp_tuple, st_tuple = xs
+        new_states = []
+        for q in range(period):
+            x, ns = fill_block(bp_tuple[q], cfg.layer_kind(q), x, st_tuple[q])
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    x, new_stack = jax.lax.scan(
+        period_body, x, (params["layers"]["stack"], state["stack"])
+    )
+    new_rem = []
+    for bp, st, kind in zip(params["layers"]["rem"], state["rem"], rem_kinds):
+        x, ns = fill_block(bp, kind, x, st)
+        new_rem.append(ns)
+    state["stack"] = new_stack
+    state["rem"] = tuple(new_rem)
+
+    logits = _readout(cfg, params, x[:, -1:])[:, 0]
+    return logits, state
+
+
+def _ring_fill(kv: jax.Array, cache_len: int) -> jax.Array:
+    """Place the last ``cache_len`` sequence positions into ring order."""
+    B, S = kv.shape[:2]
+    tail = kv[:, -cache_len:]
+    if S <= cache_len:
+        pad = jnp.zeros((B, cache_len - S, *kv.shape[2:]), kv.dtype)
+        return jnp.concatenate([tail, pad], axis=1)
+    # absolute positions S-cache_len .. S-1 go to slot p % cache_len
+    start = S - cache_len
+    slots = jnp.mod(start + jnp.arange(cache_len), cache_len)
+    return jnp.zeros_like(tail).at[:, slots].set(tail)
+
+
+# --------------------------------------------------------------------------- #
+# Zygarde agile (unit-wise) execution.
+# --------------------------------------------------------------------------- #
+
+
+def get_block(cfg, params, i: int):
+    """Return (kind, block-params) for absolute layer index ``i``."""
+    period, n_scan, rem_kinds = _layer_plan(cfg)
+    if i < n_scan * period:
+        q, r = i % period, i // period
+        bp = jax.tree.map(lambda a: a[r], params["layers"]["stack"][q])
+        return cfg.layer_kind(q), bp
+    return rem_kinds[i - n_scan * period], params["layers"]["rem"][i - n_scan * period]
+
+
+def unit_layers(cfg, unit: int) -> range:
+    lo = unit * cfg.exit_every
+    hi = min(cfg.n_layers, lo + cfg.exit_every)
+    return range(lo, hi)
+
+
+def unit_forward(
+    cfg,
+    params,
+    x: jax.Array,
+    unit: int,
+    *,
+    enc_out=None,
+    window: Optional[int] = None,
+):
+    """Run one Zygarde unit over hidden states x: (B, S, D).
+
+    Returns (x, pooled_features (B, D) f32) — the features feed the
+    per-unit k-means classifier + utility test.
+    """
+    for i in unit_layers(cfg, unit):
+        kind, bp = get_block(cfg, params, i)
+        x, _, _ = block_seq(bp, cfg, kind, x, enc_out=enc_out, window=window)
+    pooled = jnp.mean(x.astype(jnp.float32), axis=1)
+    return x, pooled
+
+
+def embed_inputs(cfg, params, batch: dict) -> Tuple[jax.Array, Any]:
+    """Embedding (+ frontend) shared by agile execution paths."""
+    x = _embed(cfg, params, batch["tokens"])
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frontend"])
+    elif cfg.n_frontend_tokens and "frontend" in batch:
+        fx = jnp.einsum(
+            "bsd,de->bse", batch["frontend"].astype(x.dtype),
+            params["frontend_proj"],
+        )
+        x = jnp.concatenate([fx, x], axis=1)
+    return x, enc_out
+
+
+def readout(cfg, params, x: jax.Array) -> jax.Array:
+    return _readout(cfg, params, x)

@@ -1,0 +1,254 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory with recurrent mixing, sequential scan).
+
+mLSTM recurrence (per head, exponential gating with log-space stabiliser):
+
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = f'_t C_{t-1} + i'_t v_t k_t^T        f' = exp(log f + m_{t-1} - m_t)
+    n_t = f'_t n_{t-1} + i'_t k_t              i' = exp(log i - m_t)
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+Training/prefill uses the chunkwise-parallel form (state carried across
+chunks, quadratic attention-like computation within a chunk) so the matrix
+memory is never materialised per time step.  Decode is the plain one-step
+recurrence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, zeros
+
+CHUNK = 128
+
+
+# --------------------------------------------------------------------------- #
+# Parameter init.  Both cells operate on an inner width w = 2 * d_model with
+# H heads; the block does d->w up-projection and w->d down-projection.
+# --------------------------------------------------------------------------- #
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    w = 2 * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], d_model, (w,), dtype),
+        "wq": dense_init(ks[1], w, (w,), dtype),
+        "wk": dense_init(ks[2], w, (w,), dtype),
+        "wv": dense_init(ks[3], w, (w,), dtype),
+        "wi": dense_init(ks[4], w, (n_heads,), jnp.float32),
+        "wf": dense_init(ks[5], w, (n_heads,), jnp.float32),
+        "bi": zeros((n_heads,), jnp.float32),
+        "bf": jnp.full((n_heads,), 3.0, jnp.float32),  # open forget gate
+        "down": dense_init(ks[6], w, (d_model,), dtype),
+    }
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    w = 2 * d_model
+    dh = w // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d_model, (w,), dtype),
+        "wz": dense_init(ks[1], w, (w,), jnp.float32),
+        "wi": dense_init(ks[2], w, (w,), jnp.float32),
+        "wf": dense_init(ks[3], w, (w,), jnp.float32),
+        "wo": dense_init(ks[4], w, (w,), jnp.float32),
+        # recurrent block-diagonal mixing, per head: (H, dh, dh)
+        "r": (jax.random.normal(ks[5], (n_heads, dh, dh)) * dh ** -0.5).astype(
+            jnp.float32
+        ),
+        "bf": jnp.full((w,), 3.0, jnp.float32),
+        "bi": zeros((w,), jnp.float32),
+        "down": dense_init(ks[6], w, (d_model,), dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM — chunkwise-parallel sequence form.
+# --------------------------------------------------------------------------- #
+
+
+def _mlstm_qkvg(p: dict, x: jax.Array, n_heads: int):
+    u = jnp.einsum("...d,dw->...w", x, p["up"])
+    u = jax.nn.silu(u)
+    w = u.shape[-1]
+    dh = w // n_heads
+
+    def heads(t):
+        return t.reshape(*t.shape[:-1], n_heads, dh)
+
+    q = heads(jnp.einsum("...w,wv->...v", u, p["wq"])) * dh ** -0.5
+    k = heads(jnp.einsum("...w,wv->...v", u, p["wk"])) * dh ** -0.5
+    v = heads(jnp.einsum("...w,wv->...v", u, p["wv"]))
+    uf = u.astype(jnp.float32)
+    log_i = jnp.einsum("...w,wh->...h", uf, p["wi"]) + p["bi"]
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("...w,wh->...h", uf, p["wf"]) + p["bf"]
+    )
+    return q, k, v, log_i, log_f
+
+
+def mlstm_seq(p: dict, x: jax.Array, n_heads: int, state=None):
+    """x: (B, S, D) -> (y (B, S, D), state)."""
+    B, S, D = x.shape
+    q, k, v, log_i, log_f = _mlstm_qkvg(p, x, n_heads)
+    w = q.shape[-2] * q.shape[-1]
+    dh = q.shape[-1]
+
+    chunk = min(CHUNK, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    def to_chunks(t):
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+
+    if state is None:
+        C0 = jnp.zeros((B, n_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, n_heads, dh), jnp.float32)
+        m0 = jnp.full((B, n_heads), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        q_, k_, v_, li, lf = xs  # (B, chunk, H, ...) / (B, chunk, H)
+        q_ = q_.astype(jnp.float32)
+        k_ = k_.astype(jnp.float32)
+        v_ = v_.astype(jnp.float32)
+        # cumulative log decay within chunk (inclusive of step t's forget)
+        F = jnp.cumsum(lf, axis=1)  # (B, chunk, H)
+        F_total = F[:, -1]
+        # stabiliser: per-chunk running max of (m + F) and (li + F offsets)
+        m_intra = jnp.max(li - lf + F, axis=1)  # bound on log i_s/f_s terms
+        m_new = jnp.maximum(m + F_total, m_intra)
+        # inter-chunk contribution: h_inter_t = q_t . C * exp(m + F_t - m_t*)
+        dec_q = jnp.exp(m[:, None] + F - m_new[:, None])  # (B, chunk, H)
+        h_inter = jnp.einsum("bthd,bhde->bthe", q_, C) * dec_q[..., None]
+        n_inter = n[:, None] * dec_q[..., None]  # (B, chunk, H, dh)
+        # intra-chunk: s<=t, weight exp(li_s + F_t - F_s - m_t*)
+        wmat = (
+            li[:, None, :] - F[:, None, :] + F[:, :, None] - m_new[:, None, None]
+        )  # (B, t, s, H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        wmat = jnp.where(mask[None, :, :, None], jnp.exp(wmat), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", q_, k_) * wmat
+        h_intra = jnp.einsum("btsh,bshd->bthd", scores, v_)
+        n_intra = jnp.einsum("btsh,bshd->bthd", scores, jnp.ones_like(k_) * 0 + k_)
+        h_num = h_inter + h_intra
+        n_vec = n_inter + n_intra
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", q_, n_vec)),
+            jnp.exp(-m_new)[:, None],
+        )
+        h = h_num / denom[..., None]
+        # state update to chunk end
+        dec_C = jnp.exp(m + F_total - m_new)  # (B, H)
+        dec_k = jnp.exp(li + F_total[:, None] - F - m_new[:, None])  # (B,chunk,H)
+        C_new = C * dec_C[..., None, None] + jnp.einsum(
+            "bshd,bsh,bshe->bhde", k_, dec_k, v_
+        )
+        n_new = n * dec_C[..., None] + jnp.einsum("bshd,bsh->bhd", k_, dec_k)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc)
+    )
+    h = hs.swapaxes(0, 1).reshape(B, S, w)
+    y = jnp.einsum("...w,wd->...d", h.astype(x.dtype), p["down"])
+    return y, (C, n, m)
+
+
+def mlstm_step(p: dict, x: jax.Array, n_heads: int, state):
+    """x: (B, D) -> (y (B, D), state)."""
+    q, k, v, log_i, log_f = _mlstm_qkvg(p, x[:, None], n_heads)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    log_i, log_f = log_i[:, 0], log_f[:, 0]
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_ = jnp.exp(log_f + m - m_new)[..., None]
+    i_ = jnp.exp(log_i - m_new)[..., None]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    C_new = C * f_[..., None] + i_[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = n * f_ + i_ * kf
+    num = jnp.einsum("bhde,bhd->bhe", C_new, qf)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf)), jnp.exp(-m_new)
+    )
+    h = (num / denom[..., None]).reshape(x.shape[0], -1)
+    y = jnp.einsum("bw,wd->bd", h.astype(x.dtype), p["down"])
+    return y, (C_new, n_new, m_new)
+
+
+def mlstm_init_state(batch: int, d_model: int, n_heads: int):
+    w = 2 * d_model
+    dh = w // n_heads
+    return (
+        jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        jnp.zeros((batch, n_heads, dh), jnp.float32),
+        jnp.full((batch, n_heads), -1e30, jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM — sequential scan (the recurrence mixes h_{t-1} through R).
+# --------------------------------------------------------------------------- #
+
+
+def _slstm_cell(p: dict, n_heads: int, u_t, carry):
+    """u_t: (B, w) pre-activations input; carry: (c, n, m, h)."""
+    c, n, m, h = carry
+    B, w = u_t.shape
+    dh = w // n_heads
+    hh = h.reshape(B, n_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r"]).reshape(B, w)
+    z = jnp.tanh(jnp.einsum("bw,wv->bv", u_t, p["wz"]) + rec)
+    o = jax.nn.sigmoid(jnp.einsum("bw,wv->bv", u_t, p["wo"]) + rec)
+    log_i = jnp.einsum("bw,wv->bv", u_t, p["wi"]) + p["bi"] + rec
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bw,wv->bv", u_t, p["wf"]) + p["bf"] + rec
+    )
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_ = jnp.exp(log_f + m - m_new)
+    i_ = jnp.exp(log_i - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_seq(p: dict, x: jax.Array, n_heads: int, state=None):
+    """x: (B, S, D) -> (y, state)."""
+    B, S, D = x.shape
+    u = jax.nn.silu(jnp.einsum("bsd,dw->bsw", x, p["up"])).astype(jnp.float32)
+    w = u.shape[-1]
+    if state is None:
+        state = slstm_init_state(B, D, n_heads)
+
+    def step(carry, u_t):
+        return _slstm_cell(p, n_heads, u_t, carry)
+
+    state, hs = jax.lax.scan(step, state, u.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)
+    y = jnp.einsum("bsw,wd->bsd", h.astype(x.dtype), p["down"])
+    return y, state
+
+
+def slstm_step(p: dict, x: jax.Array, n_heads: int, state):
+    u = jax.nn.silu(jnp.einsum("bd,dw->bw", x, p["up"])).astype(jnp.float32)
+    state, h = _slstm_cell(p, n_heads, u, state)
+    y = jnp.einsum("bw,wd->bd", h.astype(x.dtype), p["down"])
+    return y, state
+
+
+def slstm_init_state(batch: int, d_model: int, n_heads: int):
+    w = 2 * d_model
+    z = jnp.zeros((batch, w), jnp.float32)
+    return (z, z, jnp.full((batch, w), -1e30, jnp.float32), z)

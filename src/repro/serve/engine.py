@@ -1,0 +1,175 @@
+"""Serving engine: job queue + Zygarde scheduler + agile executor + energy sim.
+
+Unlike :func:`repro.core.scheduler.simulate` (which replays precomputed job
+profiles for large-scale scheduler studies), the engine *actually executes*
+the model unit-by-unit through the agile frontends, including runtime
+centroid adaptation — classification outcomes therefore depend on the order
+the scheduler chose, exactly as on the device.
+
+Job profiles are *lazy*: unit u's utility-test outcome is computed the first
+time the scheduler executes unit u (``DynamicJobProfile``), so the same
+event-driven simulator drives both the replay and live paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import kmeans as km
+from repro.core.energy import Capacitor, Harvester
+from repro.core.scheduler import (
+    Job,
+    SimConfig,
+    SimResult,
+    TaskSpec,
+    simulate,
+)
+
+
+class _LazyVec:
+    """Array-like view that materialises per-unit results on first access."""
+
+    def __init__(self, profile: "DynamicJobProfile", name: str):
+        self._p = profile
+        self._name = name
+
+    def __getitem__(self, u):
+        self._p._ensure(int(u))
+        return getattr(self._p, "_" + self._name)[int(u)]
+
+    def __len__(self):
+        return self._p.n_units
+
+
+class DynamicJobProfile:
+    """Duck-typed :class:`repro.core.scheduler.JobProfile` that runs the
+    agile model lazily (with adaptation) as units are scheduled."""
+
+    def __init__(self, model, x, label: int, *, adapt: bool = True,
+                 adapt_weight: float = 32.0):
+        self._model = model
+        self._label = int(label)
+        self._adapt = adapt
+        self._adapt_weight = adapt_weight
+        self._state = model._initial_state(x)
+        self._exec_units = 0
+        n = model.n_units
+        self._margins = np.zeros(n)
+        self._passes = np.zeros(n, bool)
+        self._correct = np.zeros(n, bool)
+        self._exited = False
+        self.margins = _LazyVec(self, "margins")
+        self.passes = _LazyVec(self, "passes")
+        self.correct = _LazyVec(self, "correct")
+
+    @property
+    def n_units(self) -> int:
+        return self._model.n_units
+
+    def _ensure(self, u: int) -> None:
+        while self._exec_units <= u:
+            i = self._exec_units
+            self._state, feats = self._model._run_unit(self._state, i)
+            uc = self._model.bank[i]
+            pred, d1, d2, idx, margin = km.classify(uc, feats)
+            self._margins[i] = float(margin[0])
+            ok = float(margin[0]) > float(uc.threshold)
+            self._passes[i] = ok
+            self._correct[i] = int(pred[0]) == self._label
+            if ok and not self._exited:
+                self._exited = True
+                if self._adapt:
+                    self._model.bank[i] = km.adapt(
+                        uc, feats, idx, weight=self._adapt_weight
+                    )
+                    self._model._propagate_from(i, idx)
+            self._exec_units += 1
+
+    def mandatory_units(self) -> int:
+        for u in range(self.n_units):
+            self._ensure(u)
+            if self._passes[u]:
+                return u + 1
+        return self.n_units
+
+
+@dataclass(frozen=True)
+class Request:
+    x: object            # model input (image / token sequence / batch dict)
+    label: int
+    release: float
+
+
+@dataclass
+class ServeConfig:
+    policy: str = "zygarde"
+    period: float = 1.0
+    deadline: float = 2.0
+    unit_time: Optional[np.ndarray] = None      # seconds per unit
+    unit_energy: Optional[np.ndarray] = None    # joules per unit
+    fragments_per_unit: int = 4
+    horizon: float = 600.0
+    queue_size: int = 3
+    adapt: bool = True
+    seed: int = 0
+    e_opt_fraction: float = 0.7
+
+
+class ServeEngine:
+    """End-to-end intermittent serving of one or more agile-model tasks."""
+
+    def __init__(
+        self,
+        models: Sequence,                 # agile frontends (one per task)
+        harvester: Harvester,
+        eta: float,
+        cap: Optional[Capacitor] = None,
+        config: Optional[ServeConfig] = None,
+    ):
+        self.models = list(models)
+        self.harvester = harvester
+        self.eta = eta
+        self.cap = cap or Capacitor()
+        self.config = config or ServeConfig()
+
+    def run(self, requests_per_task: Sequence[Sequence[Request]]) -> SimResult:
+        cfg = self.config
+        tasks = []
+        for tid, (model, reqs) in enumerate(
+            zip(self.models, requests_per_task)
+        ):
+            n_units = model.n_units
+            ut = (
+                cfg.unit_time if cfg.unit_time is not None
+                else np.full(n_units, 0.2)
+            )
+            ue = (
+                cfg.unit_energy if cfg.unit_energy is not None
+                else np.full(n_units, 5e-3)
+            )
+            profiles = [
+                DynamicJobProfile(model, r.x, r.label, adapt=cfg.adapt)
+                for r in reqs
+            ]
+            tasks.append(
+                TaskSpec(
+                    task_id=tid,
+                    period=cfg.period,
+                    deadline=cfg.deadline,
+                    unit_time=np.asarray(ut, float),
+                    unit_energy=np.asarray(ue, float),
+                    profiles=profiles,
+                    fragments_per_unit=cfg.fragments_per_unit,
+                )
+            )
+        sim = SimConfig(
+            policy=cfg.policy,
+            horizon=cfg.horizon,
+            queue_size=cfg.queue_size,
+            seed=cfg.seed,
+            e_opt_fraction=cfg.e_opt_fraction,
+        )
+        return simulate(tasks, self.harvester, self.eta, self.cap, sim)

@@ -1,0 +1,3 @@
+from .optimizer import adamw_init, adamw_update  # noqa: F401
+from .trainer import train_agile_cnn, train_step_lm, make_train_step  # noqa: F401
+from .checkpoint import save_checkpoint, load_checkpoint  # noqa: F401

@@ -1,0 +1,221 @@
+"""Training: (a) the Zygarde network-trainer pipeline for agile CNNs
+(siamese + layer-aware loss -> k-means bank -> utility thresholds, paper §6),
+and (b) the LM train_step for the assigned architectures (dry-run target).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as km
+from repro.core import losses
+from repro.core import utility as util
+from repro.data import make_siamese_pairs, siamese_batches
+from repro.models import cnn as cnn_mod
+from repro.models import transformer as tfm
+from repro.models.common import shard
+
+from .optimizer import adamw_init, adamw_update
+
+
+# --------------------------------------------------------------------------- #
+# (a) Agile-CNN network trainer (paper §6.1).
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class TrainedAgileCNN:
+    cfg: cnn_mod.CNNConfig
+    params: dict
+    bank: list
+    history: list
+
+
+def _cnn_feats(cfg, params, x):
+    return cnn_mod.cnn_forward_all(cfg, params, x)
+
+
+def train_agile_cnn(
+    dataset,
+    *,
+    loss: str = "layer_aware",          # layer_aware | contrastive | cross_entropy
+    epochs: int = 5,
+    batch_size: int = 32,
+    n_pairs: int = 2048,
+    lr: float = 1e-3,
+    margin: float = 1.0,
+    layer_coeffs: Optional[Sequence[float]] = None,
+    min_exit_accuracy: float = 0.9,
+    n_sel: int = 150,
+    seed: int = 0,
+) -> TrainedAgileCNN:
+    """Full network-trainer pipeline: train -> fit bank -> calibrate
+    thresholds.  ``loss`` selects the paper's layer-aware loss or the two
+    baselines of Fig. 15."""
+    cfg = cnn_mod.PAPER_CNNS[dataset.name]
+    key = jax.random.PRNGKey(seed)
+    params = cnn_mod.init_cnn_params(cfg, key)
+    history = []
+
+    if loss == "cross_entropy":
+        # CE baseline needs a classification head on the last feature layer
+        feat_dim = cnn_mod._feature_sizes(cfg)[-1]
+        head = {
+            "w": jax.random.normal(key, (feat_dim, dataset.n_classes)) * 0.02,
+            "b": jnp.zeros((dataset.n_classes,)),
+        }
+        full = {"net": params, "head": head}
+
+        @jax.jit
+        def step(full, opt, x, y):
+            def loss_fn(full):
+                feats = _cnn_feats(cfg, full["net"], x)
+                logits = feats[-1] @ full["head"]["w"] + full["head"]["b"]
+                return losses.cross_entropy(logits, y)
+
+            l, g = jax.value_and_grad(loss_fn)(full)
+            full, opt = adamw_update(full, g, opt, lr=lr)
+            return full, opt, l
+
+        opt = adamw_init(full)
+        from repro.data import batches as data_batches
+
+        for x, y in data_batches(
+            dataset.x_train, dataset.y_train, batch_size,
+            seed=seed, epochs=epochs,
+        ):
+            full, opt, l = step(full, opt, jnp.asarray(x), jnp.asarray(y))
+            history.append(float(l))
+        params = full["net"]
+    else:
+        x1, x2, diff = make_siamese_pairs(
+            dataset.x_train, dataset.y_train, n_pairs, seed=seed
+        )
+
+        loss_fn_sel = {
+            "layer_aware": functools.partial(
+                losses.layer_aware_loss, coeffs=layer_coeffs, margin=margin
+            ),
+            "contrastive": functools.partial(
+                losses.final_layer_contrastive, margin=margin
+            ),
+        }[loss]
+
+        @jax.jit
+        def step(params, opt, a, b, d):
+            def loss_fn(params):
+                fa = _cnn_feats(cfg, params, a)
+                fb = _cnn_feats(cfg, params, b)
+                # normalise per-layer features so losses are comparable
+                fa = [f / (jnp.abs(f).mean() + 1e-6) for f in fa]
+                fb = [f / (jnp.abs(f).mean() + 1e-6) for f in fb]
+                return loss_fn_sel(fa, fb, d)
+
+            l, g = jax.value_and_grad(loss_fn)(params)
+            params, opt = adamw_update(params, g, opt, lr=lr)
+            return params, opt, l
+
+        opt = adamw_init(params)
+        for a, b, d in siamese_batches(
+            x1, x2, diff, batch_size, seed=seed, epochs=epochs
+        ):
+            params, opt, l = step(
+                params, opt, jnp.asarray(a), jnp.asarray(b), jnp.asarray(d)
+            )
+            history.append(float(l))
+
+    # ---- k-means bank + thresholds ----------------------------------------- #
+    # Bank fitted on the fit split; utility thresholds calibrated on a
+    # HELD-OUT quarter — calibrating on the fit data makes every unit look
+    # perfect and drives thresholds to zero (premature exits at deploy).
+    n = len(dataset.x_train)
+    n_cal = max(32, n // 4)
+    fit_x, fit_y = dataset.x_train[: n - n_cal], dataset.y_train[: n - n_cal]
+    cal_x, cal_y = dataset.x_train[n - n_cal:], dataset.y_train[n - n_cal:]
+    feats = [
+        np.asarray(f) for f in _cnn_feats(cfg, params, jnp.asarray(fit_x))
+    ]
+    bank = km.fit_bank(feats, fit_y, n_sel=n_sel, seed=seed)
+    cal_feats = [
+        np.asarray(f) for f in _cnn_feats(cfg, params, jnp.asarray(cal_x))
+    ]
+    bank = util.calibrate_bank_thresholds(
+        bank, cal_feats, cal_y, min_accuracy=min_exit_accuracy
+    )
+    return TrainedAgileCNN(cfg, params, bank, history)
+
+
+# --------------------------------------------------------------------------- #
+# (b) LM training step for the assigned architectures.
+# --------------------------------------------------------------------------- #
+
+
+def train_step_lm(cfg, params, opt_state, batch, *, lr: float = 3e-4,
+                  window: Optional[int] = None,
+                  microbatches: Optional[int] = None):
+    """One LM step: next-token CE + MoE aux loss, AdamW update.
+
+    ``microbatches > 1`` scans gradient accumulation over splits of the
+    global batch — activation temps scale with the microbatch, which is how
+    the 235B/132B train_4k shapes fit 16 GiB HBM (§Perf P1-H3).  Grads
+    accumulate in f32; the result is bit-comparable to the fused step up to
+    sum-order.
+    """
+    mb = microbatches or cfg.train_microbatches
+
+    def loss_fn(params, batch):
+        logits, aux = tfm.forward(cfg, params, batch, window=window)
+        S = batch["tokens"].shape[1]
+        logits = logits[:, -S:]  # VLM: score only the text positions
+        l = losses.lm_loss(logits, batch["tokens"])
+        return l + cfg.router_aux_weight * aux, (l, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if mb <= 1:
+        (total, (l, aux)), grads = grad_fn(params, batch)
+    else:
+        B = batch["tokens"].shape[0]
+        assert B % mb == 0, (B, mb)
+        split = jax.tree.map(
+            lambda a: a.reshape(mb, B // mb, *a.shape[1:]), batch
+        )
+
+        def body(acc, mbatch):
+            g_acc, l_acc, a_acc, t_acc = acc
+            (t, (l, a)), g = grad_fn(params, mbatch)
+            g_acc = jax.tree.map(
+                lambda A, G: A + G.astype(jnp.float32), g_acc, g
+            )
+            return (g_acc, l_acc + l, a_acc + a, t_acc + t), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (g32, l, aux, total), _ = jax.lax.scan(
+            body, (zeros, 0.0, jnp.float32(0.0), 0.0), split
+        )
+        grads = jax.tree.map(
+            lambda G, p: (G / mb).astype(p.dtype), g32, params
+        )
+        l, aux, total = l / mb, aux / mb, total / mb
+
+    params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+    return params, opt_state, {"loss": l, "aux": aux, "total": total}
+
+
+def make_train_step(cfg, *, lr: float = 3e-4, window: Optional[int] = None,
+                    microbatches: Optional[int] = None):
+    """jit-able closure used by the launcher and the dry-run."""
+
+    def step(params, opt_state, batch):
+        return train_step_lm(cfg, params, opt_state, batch, lr=lr,
+                             window=window, microbatches=microbatches)
+
+    return step

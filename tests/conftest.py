@@ -1,0 +1,42 @@
+"""Shared fixtures.  Everything here runs on the single real CPU device —
+the 512-device dry-run is exercised via subprocesses in test_dryrun.py."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def mnist_tiny():
+    from repro.data import make_dataset
+
+    return make_dataset("mnist", n_train=192, n_test=96, seed=0)
+
+
+@pytest.fixture(scope="session")
+def trained_cnn(mnist_tiny):
+    """A small trained agile CNN + classifier bank (layer-aware loss)."""
+    from repro.train import train_agile_cnn
+
+    return train_agile_cnn(
+        mnist_tiny, epochs=2, n_pairs=384, batch_size=32, seed=0
+    )
+
+
+@pytest.fixture(scope="session")
+def agile_model(trained_cnn):
+    from repro.core.agile import AgileCNN
+
+    return AgileCNN(trained_cnn.cfg, trained_cnn.params, trained_cnn.bank)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,124 @@
+"""Agile execution: early exit, unit budget, adaptation, utility thresholds
+(paper §4) — on the session-trained CNN and a reduced transformer."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as km
+from repro.core import utility as util
+
+
+def test_infer_early_exit_and_budget(agile_model, mnist_tiny):
+    r = agile_model.infer(mnist_tiny.x_test[0], adapt=False)
+    assert 0 <= r.prediction < mnist_tiny.n_classes
+    assert r.units_executed <= agile_model.n_units
+    if r.exit_unit >= 0:
+        assert r.units_executed == r.exit_unit + 1
+    # a unit budget of 1 must stop after one unit
+    r1 = agile_model.infer(mnist_tiny.x_test[1], adapt=False, unit_budget=1)
+    assert r1.units_executed == 1
+
+
+def test_profile_batch_consistent_with_classifiers(agile_model, mnist_tiny):
+    profiles = agile_model.profile_batch(
+        mnist_tiny.x_test[:32], mnist_tiny.y_test[:32]
+    )
+    assert len(profiles) == 32
+    for p in profiles:
+        assert p.n_units == agile_model.n_units
+        m = p.mandatory_units()
+        assert 1 <= m <= p.n_units
+        # margins are the scale-free cluster margins: within [0, 1]
+        assert (p.margins >= 0).all() and (p.margins <= 1).all()
+
+
+def test_early_exit_happens_on_separable_data(agile_model, mnist_tiny):
+    profiles = agile_model.profile_batch(
+        mnist_tiny.x_test[:48], mnist_tiny.y_test[:48]
+    )
+    mand = np.array([p.mandatory_units() for p in profiles])
+    assert mand.mean() < agile_model.n_units  # paper: 5-26% time saving
+
+
+def test_exit_accuracy_close_to_full(agile_model, mnist_tiny):
+    """Paper Fig. 16: utility-based exit accuracy within a few points of
+    full execution."""
+    profiles = agile_model.profile_batch(
+        mnist_tiny.x_test, mnist_tiny.y_test
+    )
+    full = np.mean([p.correct[p.n_units - 1] for p in profiles])
+    exited = np.mean(
+        [p.correct[p.mandatory_units() - 1] for p in profiles]
+    )
+    assert exited >= full - 0.15
+    assert full > 1.5 / mnist_tiny.n_classes
+
+
+def test_adaptation_updates_bank(agile_model, mnist_tiny):
+    before = [np.asarray(uc.centroids).copy() for uc in agile_model.bank]
+    moved = False
+    for i in range(12):
+        r = agile_model.infer(mnist_tiny.x_test[i], adapt=True)
+        if r.adapted:
+            moved = True
+    assert moved
+    deltas = [
+        np.abs(np.asarray(uc.centroids) - b).max()
+        for uc, b in zip(agile_model.bank, before)
+    ]
+    assert max(deltas) > 0.0
+
+
+def test_calibrate_threshold_tradeoff(trained_cnn, mnist_tiny):
+    """Paper Fig. 8: raising the threshold lowers the exit fraction and
+    (weakly) raises exited-sample accuracy."""
+    from repro.models.cnn import cnn_forward_all
+
+    feats = [
+        np.asarray(f) for f in cnn_forward_all(
+            trained_cnn.cfg, trained_cnn.params,
+            jnp.asarray(mnist_tiny.x_train),
+        )
+    ]
+    uc = trained_cnn.bank[0]
+    thr, curve = util.calibrate_threshold(
+        uc, feats[0], mnist_tiny.y_train, min_accuracy=0.9
+    )
+    ts = [c[0] for c in curve]
+    fracs = [c[1] for c in curve]
+    assert ts == sorted(ts)
+    assert all(b <= a + 1e-9 for a, b in zip(fracs, fracs[1:]))
+    assert thr in ts
+
+
+def test_entropy_utility():
+    uniform = np.full((1, 4), 0.25)
+    peaked = np.asarray([[0.97, 0.01, 0.01, 0.01]])
+    assert util.entropy_utility(uniform)[0] == pytest.approx(2.0)
+    assert util.entropy_utility(peaked)[0] < 0.3
+
+
+def test_agile_transformer_units(key):
+    """Transformer frontend: unit-wise execution with a fitted bank."""
+    from repro.configs import get_config
+    from repro.core.agile import AgileTransformer
+    from repro.data import make_token_dataset
+    from repro.models import transformer as T
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = T.init_params(cfg, key)
+    toks, y = make_token_dataset(cfg.vocab, 32, 4, 64, separability=3.0)
+    # fit a bank from the (untrained) per-unit pooled features
+    feats = []
+    x, enc = T.embed_inputs(cfg, params, {"tokens": jnp.asarray(toks)})
+    for u in range(cfg.n_units):
+        x, pooled = T.unit_forward(cfg, params, x, u, enc_out=enc)
+        feats.append(np.asarray(pooled))
+    bank = km.fit_bank(feats, y, n_sel=32)
+    model = AgileTransformer(cfg, params, bank)
+    assert model.n_units == cfg.n_units
+    r = model.infer(toks[:1], adapt=False)
+    assert 0 <= r.prediction < 4
+    assert 1 <= r.units_executed <= model.n_units

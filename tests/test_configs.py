@@ -1,0 +1,110 @@
+"""Config registry: assigned architectures, exact dims, reduced() contract."""
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    get_config,
+    list_configs,
+)
+
+# (name, family, layers, d_model, heads, kv, d_ff, vocab, experts, top_k)
+ASSIGNED_DIMS = {
+    "dbrx-132b": ("moe", 40, 6144, 48, 8, 10752, 100352, 16, 4),
+    "minitron-8b": ("dense", 32, 4096, 32, 8, 16384, 256000, 0, 0),
+    "qwen3-moe-235b-a22b": ("moe", 94, 4096, 64, 4, 1536, 151936, 128, 8),
+    "recurrentgemma-9b": ("hybrid", 38, 4096, 16, 1, 12288, 256000, 0, 0),
+    "internvl2-2b": ("vlm", 24, 2048, 16, 8, 8192, 92553, 0, 0),
+    "stablelm-3b": ("dense", 32, 2560, 32, 32, 6912, 50304, 0, 0),
+    "xlstm-125m": ("ssm", 12, 768, 4, 4, 0, 50304, 0, 0),
+    "glm4-9b": ("dense", 40, 4096, 32, 2, 13696, 151552, 0, 0),
+    "qwen1.5-0.5b": ("dense", 24, 1024, 16, 16, 2816, 151936, 0, 0),
+    "seamless-m4t-medium": ("audio", 12, 1024, 16, 16, 4096, 256206, 0, 0),
+}
+
+
+def test_all_assigned_registered():
+    names = list_configs()
+    for arch in ASSIGNED_ARCHS:
+        assert arch in names
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_assigned_dims_exact(arch):
+    cfg = get_config(arch)
+    fam, L, d, H, KV, ff, V, E, K = ASSIGNED_DIMS[arch]
+    assert cfg.family == fam
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == ff
+    assert cfg.vocab == V
+    assert cfg.n_experts == E
+    assert cfg.top_k == K
+    assert cfg.source  # every config cites its source
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_contract(arch):
+    """Assignment: reduced variant has <= 4 layers (one pattern period),
+    d_model <= 512, <= 4 experts."""
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 4
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.vocab <= 512
+    assert r.family == get_config(arch).family
+    assert r.pattern_period == get_config(arch).pattern_period
+    assert r.n_heads % r.n_kv_heads == 0
+    assert r.padded_vocab == r.vocab  # pad disabled for smoke shapes
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_padded_vocab_mesh_divisible(arch):
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % 128 == 0
+    assert cfg.padded_vocab % 16 == 0  # 16-way model mesh axis
+    assert cfg.padded_vocab >= cfg.vocab
+    assert cfg.padded_vocab - cfg.vocab < cfg.vocab_pad
+
+
+def test_input_shapes_assigned():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_param_counts_match_source_scale():
+    """Analytic parameter counts land near the headline sizes."""
+    assert 120e9 < get_config("dbrx-132b").param_count() < 145e9
+    assert 200e9 < get_config("qwen3-moe-235b-a22b").param_count() < 260e9
+    # active params for MoE well below total
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.active_param_count() < 0.4 * dbrx.param_count()
+    assert 6e9 < get_config("minitron-8b").param_count() < 10e9
+    assert 8e9 < get_config("glm4-9b").param_count() < 11e9
+    assert 0.1e9 < get_config("xlstm-125m").param_count() < 0.25e9
+    assert 0.4e9 < get_config("qwen1.5-0.5b").param_count() < 0.8e9
+
+
+def test_long_context_policy():
+    assert get_config("recurrentgemma-9b").long_context == "native"
+    assert get_config("xlstm-125m").long_context == "native"
+    assert get_config("seamless-m4t-medium").long_context == "skip"
+    for arch in ("dbrx-132b", "glm4-9b", "minitron-8b", "qwen1.5-0.5b",
+                 "stablelm-3b", "internvl2-2b", "qwen3-moe-235b-a22b"):
+        cfg = get_config(arch)
+        assert cfg.long_context == "window"
+        assert cfg.long_window > 0
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-5")

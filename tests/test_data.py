@@ -1,0 +1,101 @@
+"""Synthetic data generators + pipeline + checkpointing."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import (
+    batches,
+    make_dataset,
+    make_lm_tokens,
+    make_siamese_pairs,
+    make_token_dataset,
+)
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_dataset_shapes_and_determinism():
+    a = make_dataset("mnist", n_train=64, n_test=32, seed=3)
+    b = make_dataset("mnist", n_train=64, n_test=32, seed=3)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    assert a.x_train.shape == (64, 28, 28, 1)
+    assert a.n_classes == 10
+    c = make_dataset("cifar100", n_train=16, n_test=8)
+    assert c.x_train.shape == (16, 32, 32, 3)
+    assert c.n_classes == 5  # paper: randomized 5-class subsets
+
+
+def test_environment_shift_changes_distribution():
+    base = make_dataset("esc10", n_train=64, n_test=32, seed=1)
+    shifted = make_dataset("esc10", n_train=64, n_test=32, seed=1,
+                           environment=2)
+    assert np.abs(base.x_test - shifted.x_test).mean() > 0.1
+
+
+def test_siamese_pairs_balanced():
+    ds = make_dataset("mnist", n_train=128, n_test=8)
+    x1, x2, diff = make_siamese_pairs(ds.x_train, ds.y_train, 200, seed=0)
+    assert len(x1) == len(x2) == len(diff) == 200
+    assert diff.mean() == pytest.approx(0.5, abs=0.01)
+
+
+def test_token_dataset_class_signal():
+    toks, y = make_token_dataset(64, 32, 4, 128, separability=4.0, seed=0)
+    assert toks.shape == (128, 32)
+    assert toks.max() < 64
+    # class-c sequences concentrate in the class-c vocab slice
+    for c in range(4):
+        sub = toks[y == c]
+        if len(sub) == 0:
+            continue
+        lo, hi = c * 16, (c + 1) * 16
+        frac = ((sub >= lo) & (sub < hi)).mean()
+        assert frac > 0.3  # >> uniform 0.25 baseline... strictly above
+
+
+def test_lm_tokens_short_range_structure():
+    toks = make_lm_tokens(50, 128, 32, seed=0)
+    nxt = (toks[:, 1:] == (toks[:, :-1] + 1) % 50).mean()
+    assert nxt > 0.2  # the injected 30% copy structure
+
+
+def test_batches_cover_epoch_without_repeats():
+    x = np.arange(40)
+    y = np.arange(40)
+    seen = []
+    for bx, _ in batches(x, y, 8, seed=0, epochs=1):
+        seen.extend(bx.tolist())
+    assert sorted(seen) == list(range(40))
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jax.random.normal(key, (4,), dtype=jnp.bfloat16)},
+        "tup": (jnp.ones((2,)), jnp.zeros((3,), jnp.int32)),
+    }
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, tree)
+    out = load_checkpoint(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_model_params_roundtrip(tmp_path, key):
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("xlstm-125m").reduced()
+    params = T.init_params(cfg, key)
+    path = os.path.join(tmp_path, "model.npz")
+    save_checkpoint(path, params)
+    out = load_checkpoint(path, jax.eval_shape(lambda: params))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )

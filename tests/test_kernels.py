@@ -1,0 +1,236 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode
+(assignment deliverable c: per-kernel allclose against ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# --------------------------------------------------------------------------- #
+# l1_topk2 — batched L1 distance + top-2 margins (the utility test).
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,K,D", [
+    (1, 2, 8), (7, 5, 33), (64, 16, 96), (100, 16, 150), (128, 32, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l1_topk2_sweep(B, K, D, dtype):
+    k1, k2 = keys(2, seed=B * 7 + K)
+    x = jax.random.normal(k1, (B, D), dtype=jnp.float32).astype(dtype)
+    c = jax.random.normal(k2, (K, D), dtype=jnp.float32).astype(dtype)
+    d1, d2, idx = ops.l1_topk2(x.astype(jnp.float32), c.astype(jnp.float32))
+    rd1, rd2, ridx = ref.l1_topk2_ref(
+        x.astype(jnp.float32), c.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(d1, rd1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(d2, rd2, rtol=1e-5, atol=1e-5)
+    assert (np.asarray(idx) == np.asarray(ridx)).all()
+    assert bool((d2 >= d1).all())
+
+
+def test_l1_topk2_identical_point_zero_distance():
+    c = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16)),
+                    jnp.float32)
+    d1, d2, idx = ops.l1_topk2(c[1:2], c)
+    assert float(d1[0]) == pytest.approx(0.0, abs=1e-6)
+    assert int(idx[0]) == 1
+
+
+# --------------------------------------------------------------------------- #
+# pairwise_l1 — all-pairs distance matrix (siamese training).
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B1,B2,D", [
+    (4, 4, 16), (48, 72, 200), (33, 17, 101), (128, 16, 64),
+])
+def test_pairwise_l1_sweep(B1, B2, D):
+    k1, k2 = keys(2, seed=B1 + B2)
+    a = jax.random.normal(k1, (B1, D))
+    b = jax.random.normal(k2, (B2, D))
+    got = ops.pairwise_l1(a, b)
+    want = ref.pairwise_l1_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pairwise_l1_self_diagonal_zero():
+    a = jax.random.normal(jax.random.PRNGKey(3), (12, 40))
+    d = np.asarray(ops.pairwise_l1(a, a))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-6)
+    np.testing.assert_allclose(d, d.T, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# centroid_update — weighted-average semi-supervised adaptation.
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("K,B,D,w", [
+    (4, 16, 32, 8.0), (8, 40, 64, 32.0), (16, 7, 150, 1.0), (3, 1, 9, 100.0),
+])
+def test_centroid_update_sweep(K, B, D, w):
+    k1, k2, k3 = keys(3, seed=K * B)
+    cents = jax.random.normal(k1, (K, D))
+    feats = jax.random.normal(k2, (B, D))
+    assign = jax.random.randint(k3, (B,), 0, K)
+    got = ops.centroid_update(cents, feats, assign, w)
+    want = ref.centroid_update_ref(cents, feats, assign, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_centroid_update_empty_cluster_unchanged():
+    cents = jnp.ones((4, 8))
+    feats = jnp.zeros((3, 8))
+    assign = jnp.asarray([0, 0, 1])
+    out = np.asarray(ops.centroid_update(cents, feats, assign, 10.0))
+    np.testing.assert_allclose(out[2], 1.0)  # untouched clusters
+    np.testing.assert_allclose(out[3], 1.0)
+    assert (out[0] < 1.0).all()  # pulled toward the zeros
+
+
+def test_centroid_update_weight_limit():
+    """weight -> inf keeps centroids; weight -> 0 jumps to the batch mean."""
+    k1, k2 = keys(2, 9)
+    cents = jax.random.normal(k1, (2, 8))
+    feats = jax.random.normal(k2, (6, 8))
+    assign = jnp.zeros((6,), jnp.int32)
+    heavy = np.asarray(ops.centroid_update(cents, feats, assign, 1e9))
+    np.testing.assert_allclose(heavy, np.asarray(cents), rtol=1e-4, atol=1e-4)
+    light = np.asarray(ops.centroid_update(cents, feats, assign, 1e-9))
+    np.testing.assert_allclose(
+        light[0], np.asarray(feats.mean(0)), rtol=1e-3, atol=1e-3
+    )
+
+
+# --------------------------------------------------------------------------- #
+# rglru_scan — blocked diagonal linear recurrence.
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,S,W", [
+    (1, 8, 16), (4, 64, 96), (2, 100, 33), (8, 17, 128),
+])
+def test_rglru_scan_sweep(B, S, W):
+    ks = keys(3, seed=B * S)
+    a = jax.random.uniform(ks[0], (B, S, W), minval=0.7, maxval=0.999)
+    b = jax.random.normal(ks[1], (B, S, W)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, W))
+    h, hl = ops.rglru_scan(a, b, h0)
+    rh, rhl = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(h, rh, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(hl, rhl, rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_scan_matches_model_reference():
+    """Kernel agrees with the model's associative-scan path end to end."""
+    from repro.models import rglru as rg
+
+    ks = keys(3, seed=11)
+    B, S, W = 2, 32, 64
+    x = jax.random.normal(ks[0], (B, S, W)) * 0.5
+    p = rg.init_rglru(ks[1], W, jnp.float32)
+    y_model, h_model = rg.rglru_seq(p, x)
+    a, b = rg._gates(p, x)
+    y_kernel, h_kernel = ops.rglru_scan(a, b, jnp.zeros((B, W)))
+    np.testing.assert_allclose(
+        np.asarray(y_model, np.float32), np.asarray(y_kernel),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(h_model, h_kernel, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# decode_gqa — one-token attention against a ring-buffer KV cache.
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,H,KV,hd,C", [
+    (1, 4, 4, 16, 32), (4, 8, 2, 32, 128), (2, 16, 1, 64, 64),
+    (3, 8, 8, 32, 96),
+])
+@pytest.mark.parametrize("window", [0, 16])
+def test_decode_gqa_sweep(B, H, KV, hd, C, window):
+    ks = keys(4, seed=B * H + C)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, C, KV, hd))
+    vc = jax.random.normal(ks[2], (B, C, KV, hd))
+    pos = jax.random.randint(ks[3], (B,), 1, C + 1)
+    slot = jnp.stack(
+        [jnp.where(jnp.arange(C) < p, jnp.arange(C), -1) for p in pos]
+    )
+    got = ops.decode_gqa(q, kc, vc, slot, pos, window=window)
+    want = ref.decode_gqa_ref(q, kc, vc, slot, pos, window=window)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_gqa_matches_model_attention():
+    from repro.models.attention import decode_attention
+
+    ks = keys(4, seed=5)
+    B, H, KV, hd, C = 2, 8, 4, 32, 64
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, C, KV, hd))
+    vc = jax.random.normal(ks[2], (B, C, KV, hd))
+    pos = jnp.asarray([40, 64])
+    slot = jnp.stack(
+        [jnp.where(jnp.arange(C) < p, jnp.arange(C), -1) for p in pos]
+    )
+    got = ops.decode_gqa(q, kc, vc, slot, pos)
+    want = decode_attention(q, kc, vc, slot, pos)
+    np.testing.assert_allclose(
+        got, np.asarray(want, np.float32), rtol=1e-4, atol=1e-5
+    )
+
+
+# --------------------------------------------------------------------------- #
+# flash_attention — fused online-softmax GQA forward (the §Perf P1 target).
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 64, 4, 4, 32), (2, 128, 8, 2, 32), (1, 96, 4, 1, 64),
+    (2, 64, 16, 16, 16),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_attention_sweep(B, S, H, KV, hd, causal, window):
+    ks = keys(3, seed=S + H)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_matches_chunked_model_path():
+    from repro.models.attention import chunked_attention
+
+    ks = keys(3, seed=21)
+    B, S, H, KV, hd = 2, 128, 8, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = chunked_attention(q, k, v, causal=True, window=0, chunk=32)
+    np.testing.assert_allclose(
+        got, np.asarray(want, np.float32), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_flash_attention_bf16_inputs():
+    ks = keys(3, seed=4)
+    B, S, H, KV, hd = 1, 64, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd)).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)

@@ -1,0 +1,85 @@
+"""Loss functions (paper Eqs. 4-5) + baselines."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+
+
+def test_contrastive_same_class_pulls():
+    f = jnp.ones((4, 8))
+    same = jnp.zeros((4,))
+    assert float(losses.contrastive_loss(f, f, same)) == pytest.approx(0.0)
+    # nonzero distance, same class -> positive pull term
+    g = f + 0.5
+    assert float(losses.contrastive_loss(f, g, same)) > 0.0
+
+
+def test_contrastive_different_class_margin():
+    f1 = jnp.zeros((4, 8))
+    f2 = jnp.zeros((4, 8))  # distance 0, different class: max penalty
+    diff = jnp.ones((4,))
+    l0 = float(losses.contrastive_loss(f1, f2, diff, margin=1.0))
+    assert l0 == pytest.approx(0.5)  # (1/2) * max(0, margin - 0)
+    # far apart, different class: no penalty
+    f2 = jnp.full((4, 8), 100.0)
+    l1 = float(losses.contrastive_loss(f1, f2, diff, margin=1.0))
+    assert l1 == pytest.approx(0.0)
+
+
+def test_layer_aware_is_convex_combination():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    feats1 = [jax.random.normal(k, (8, 16)) for k in ks[:3]]
+    feats2 = [jax.random.normal(k, (8, 16)) for k in ks[3:]]
+    diff = jnp.asarray([0, 1] * 4, jnp.float32)
+    per_layer = [
+        float(losses.contrastive_loss(a, b, diff))
+        for a, b in zip(feats1, feats2)
+    ]
+    la = float(losses.layer_aware_loss(feats1, feats2, diff))
+    assert la == pytest.approx(np.mean(per_layer), rel=1e-5)
+    # custom (unnormalised) coefficients are renormalised to sum to 1
+    la2 = float(
+        losses.layer_aware_loss(feats1, feats2, diff, coeffs=[2.0, 0.0, 0.0])
+    )
+    assert la2 == pytest.approx(per_layer[0], rel=1e-5)
+    # final-layer baseline == last coefficient only
+    fl = float(losses.final_layer_contrastive(feats1, feats2, diff))
+    assert fl == pytest.approx(per_layer[-1], rel=1e-5)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 3.0, 0.0]])
+    labels = jnp.asarray([0, 1])
+    got = float(losses.cross_entropy(logits, labels))
+    p = np.exp(np.asarray(logits))
+    p /= p.sum(-1, keepdims=True)
+    want = -np.log(p[[0, 1], [0, 1]]).mean()
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_lm_loss_shifts():
+    V = 8
+    tokens = jnp.asarray([[1, 2, 3, 4]])
+    # logits that put all mass on the correct next token
+    logits = jnp.full((1, 4, V), -30.0)
+    for t in range(3):
+        logits = logits.at[0, t, int(tokens[0, t + 1])].set(30.0)
+    assert float(losses.lm_loss(logits, tokens)) < 1e-3
+
+
+def test_gradients_flow_through_layer_aware():
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (16, 16))
+
+    def loss(w):
+        f1 = jnp.tanh(jnp.ones((4, 16)) @ w)
+        f2 = jnp.tanh(jnp.full((4, 16), 0.5) @ w)
+        return losses.layer_aware_loss([f1], [f2], jnp.ones((4,)))
+
+    g = jax.grad(loss)(w)
+    assert float(jnp.abs(g).max()) > 0.0
+    assert bool(jnp.isfinite(g).all())
