@@ -17,6 +17,7 @@ from . import (
     bench_clock,
     bench_early_termination,
     bench_eta,
+    bench_fleet,
     bench_loss_functions,
     bench_overhead,
     bench_scheduler,
@@ -28,6 +29,7 @@ BENCHES = (
     ("loss_functions_fig15", bench_loss_functions),
     ("early_termination_fig16", bench_early_termination),
     ("scheduler_figs17_20", bench_scheduler),
+    ("fleet_throughput", bench_fleet),
     ("capacitor_fig21", bench_capacitor),
     ("clock_table5", bench_clock),
     ("adaptation_fig24", bench_adaptation),

@@ -4,8 +4,12 @@ energy       — eta-factor, harvester/capacitor models, schedulability (C1, C5)
 losses       — layer-aware contrastive loss + baselines (C2)
 kmeans       — semi-supervised k-means classifier bank (C3)
 utility      — utility test + threshold calibration (C3)
+policy       — priority/policy math as pure array functions (C4, shared
+               with the vectorized fleet simulator in repro.fleet)
 scheduler    — imprecise real-time scheduler + event simulator (C4)
 intermittent — atomic-fragment execution substrate (C6)
 agile        — unit-wise early-exit execution engine (C2+C3 glue)
 """
-from . import energy, losses, kmeans, utility, scheduler, intermittent, agile  # noqa: F401
+from . import (  # noqa: F401
+    energy, losses, kmeans, utility, policy, scheduler, intermittent, agile,
+)

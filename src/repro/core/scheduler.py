@@ -24,6 +24,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from . import policy
 from .energy import Capacitor, Harvester
 
 # --------------------------------------------------------------------------- #
@@ -130,28 +131,26 @@ class CHRTClock(Clock):
 
 
 # --------------------------------------------------------------------------- #
-# Priority functions (Eqs. 6-7).
+# Priority functions (Eqs. 6-7) — thin Job-aware views over the pure array
+# functions in repro.core.policy, which the fleet simulator and the Pallas
+# priority kernel share.
 # --------------------------------------------------------------------------- #
 
 
 def zeta(job: Job, t_now: float, alpha: float, beta: float) -> float:
-    gamma = 1.0 if job.mandatory_next else 0.0
-    return (
-        (1.0 - alpha * (job.deadline - t_now))
-        + (1.0 - beta * job.utility)
-        + gamma
-    )
+    return float(policy.zeta_priority(
+        job.deadline - t_now, job.utility, job.mandatory_next, alpha, beta
+    ))
 
 
 def zeta_intermittent(
     job: Job, t_now: float, alpha: float, beta: float,
     eta: float, e_curr: float, e_opt: float,
 ) -> float:
-    base = (1.0 - alpha * (job.deadline - t_now)) + (1.0 - beta * job.utility)
-    gamma = 1.0 if job.mandatory_next else 0.0
-    if eta * e_curr >= e_opt:
-        return base + gamma
-    return gamma * base  # optional units: priority 0 (not scheduled)
+    return float(policy.zeta_intermittent_priority(
+        job.deadline - t_now, job.utility, job.mandatory_next, alpha, beta,
+        eta, e_curr, e_opt,
+    ))
 
 
 # --------------------------------------------------------------------------- #
@@ -281,6 +280,9 @@ def simulate(
         if not queue:
             return None
         cands = queue
+        # EDF/EDF-M/RR keep exact lexicographic ordering here; the float-key
+        # equivalents in repro.core.policy (edf_key etc.) serve the array
+        # paths, where tie-breaking is approximate by a 1e-9 perturbation.
         if sim.policy == "edf":
             return min(cands, key=lambda j: (j.deadline, j.release))
         if sim.policy == "edf-m":
@@ -375,7 +377,7 @@ def simulate(
             res.optional_units += 1
         job.last_pred_unit = u
         job.unit += 1
-        imprecise = sim.policy in ("edf-m", "zygarde")
+        imprecise = sim.policy in policy.IMPRECISE_POLICIES
         if imprecise and job.exited_at < 0 and job.profile.passes[u]:
             job.exited_at = u
             job.mandatory_done_time = t_now
@@ -386,7 +388,7 @@ def simulate(
             job.mandatory_done_time = t_now
 
         job_done = job.unit >= job.n_units
-        if sim.policy in ("edf-m", "zygarde") and job.exited_at >= 0:
+        if sim.policy in policy.IMPRECISE_POLICIES and job.exited_at >= 0:
             if sim.policy == "edf-m":
                 job_done = True  # EDF-M never runs optional units
         if job_done:

@@ -1,0 +1,30 @@
+"""Vectorized fleet simulator: batched scheduler simulation across devices.
+
+One jitted call simulates thousands of independent intermittently-powered
+devices — the policy × eta × harvester × capacitor × seed grids behind the
+paper's Figs. 17-21 / 24-25 — with the whole simulation state in a single
+pytree stepped by ``jax.lax.scan`` and batched by ``jax.vmap`` (optionally
+with the Pallas ``fleet_priority`` kernel as the hot inner step).
+
+Public API::
+
+    result, meta = fleet.sweep(fleet.SweepGrid(task=..., policies=(...)))
+    result = fleet.simulate_fleet(cfg, statics)          # pre-built configs
+    cfg, statics = fleet.from_sim_config(task, harv, eta, cap, sim)
+"""
+from .grid import (  # noqa: F401
+    SweepGrid,
+    build,
+    device_config,
+    from_sim_config,
+    sample_events,
+    stack_configs,
+    sweep,
+)
+from .simulator import simulate_fleet  # noqa: F401
+from .state import (  # noqa: F401
+    DeviceState,
+    FleetConfig,
+    FleetResult,
+    FleetStatics,
+)

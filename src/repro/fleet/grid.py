@@ -1,0 +1,233 @@
+"""Grid construction for fleet sweeps.
+
+Host-side (numpy) builders that translate the scalar simulator's objects —
+:class:`repro.core.scheduler.TaskSpec`, :class:`repro.core.energy.Harvester`,
+:class:`repro.core.energy.Capacitor`, :class:`repro.core.scheduler.SimConfig`
+— into the stacked :class:`repro.fleet.state.FleetConfig` arrays consumed by
+:func:`repro.fleet.simulator.simulate_fleet`.
+
+The cartesian sweep mirrors the paper's benchmark grids (Figs. 17-21, 24-25):
+policy × eta × harvester pattern × capacitor size × seed, one device per
+grid point, all simulated by a single jitted call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..core import policy as P
+from ..core.energy import PERSISTENT, Capacitor, Harvester
+from ..core.scheduler import Clock, SimConfig, TaskSpec
+from .state import FleetConfig, FleetStatics
+
+_F32 = np.float32
+
+
+def _n_releases(task: TaskSpec, horizon: float) -> int:
+    # matches the scalar release loop: while t < horizon and j < len(profiles)
+    within = int(math.ceil(horizon / task.period - 1e-12))
+    return min(len(task.profiles), max(within, 0))
+
+
+def _check_dt(dt: float, task: TaskSpec) -> float:
+    """The fixed timestep must stay within one fragment time (else a step's
+    continuous drain exceeds the energy gate and the capacitor goes
+    negative) and below the period (admission is one job per step)."""
+    frag_t = float(np.min(np.asarray(task.unit_time)) / task.fragments_per_unit)
+    if dt > frag_t * (1 + 1e-9):
+        raise ValueError(
+            f"dt={dt} exceeds one fragment time ({frag_t}); the energy gate "
+            "only covers one fragment of drain per step")
+    if dt >= task.period:
+        raise ValueError("dt must be smaller than the task period")
+    return dt
+
+
+def device_config(
+    task: TaskSpec,
+    harvester: Harvester,
+    eta: float,
+    cap: Capacitor,
+    *,
+    policy: str,
+    horizon: float,
+    events: np.ndarray,
+    e_opt_fraction: float = 0.7,
+    e_man: Optional[float] = None,
+    start_charged: bool = False,
+) -> dict:
+    """One device's configuration as a dict of (unbatched) numpy arrays."""
+    if task.release_jitter:
+        raise ValueError("fleet simulator requires release_jitter == 0")
+    unit_time = np.asarray(task.unit_time, _F32)
+    unit_energy = np.asarray(task.unit_energy, _F32)
+    margins = np.stack([np.asarray(p.margins, _F32) for p in task.profiles])
+    passes = np.stack([np.asarray(p.passes, bool) for p in task.profiles])
+    correct = np.stack([np.asarray(p.correct, bool) for p in task.profiles])
+
+    max_frag_e = float(unit_energy.max()) / task.fragments_per_unit
+    debt = 0.5 * cap.capacitance_f * cap.v_min ** 2
+    return dict(
+        policy=np.int32(P.POLICY_IDS[policy]),
+        imprecise=np.bool_(policy in P.IMPRECISE_POLICIES),
+        is_edfm=np.bool_(policy == "edf-m"),
+        eta=_F32(eta),
+        alpha=_F32(1.0 / task.deadline),
+        beta=_F32(1.0),
+        persistent=np.bool_(eta >= 1.0 and harvester.p_stay_on >= 1.0),
+        capacity=_F32(cap.capacity_j),
+        start_energy=_F32(cap.capacity_j if start_charged else -debt),
+        e_man=_F32(max_frag_e if e_man is None else e_man),
+        e_opt=_F32(e_opt_fraction * cap.capacity_j),
+        power_on=_F32(harvester.power_on),
+        period=_F32(task.period),
+        rel_deadline=_F32(task.deadline),
+        fragments=_F32(task.fragments_per_unit),
+        n_units=np.int32(len(unit_time)),
+        n_releases=np.int32(_n_releases(task, horizon)),
+        unit_time=unit_time,
+        unit_energy=unit_energy,
+        margins=margins,
+        passes=passes,
+        correct=correct,
+        events=np.asarray(events, _F32),
+    )
+
+
+def sample_events(harvester: Harvester, horizon: float, seed: int) -> np.ndarray:
+    """Harvester ON/OFF slots exactly as the scalar ``simulate()`` draws them
+    (fresh ``default_rng(seed)``, ``init=1``) — seed-matched parity hinges on
+    reproducing this stream bit-for-bit."""
+    n_slots = int(horizon / harvester.slot_s) + 2
+    rng = np.random.default_rng(seed)
+    return harvester.sample_events(rng, n_slots, init=1).astype(_F32)
+
+
+def stack_configs(devices: Sequence[dict]) -> FleetConfig:
+    """Stack per-device dicts into a FleetConfig of (D, ...) jnp arrays."""
+    fields = FleetConfig._fields
+    return FleetConfig(**{
+        f: jnp.asarray(np.stack([d[f] for d in devices])) for f in fields
+    })
+
+
+def from_sim_config(
+    task: TaskSpec,
+    harvester: Harvester,
+    eta: float,
+    cap: Optional[Capacitor] = None,
+    sim: Optional[SimConfig] = None,
+    dt: Optional[float] = None,
+) -> tuple[FleetConfig, FleetStatics]:
+    """Single-device FleetConfig mirroring ``simulate(task, ...)``'s setup —
+    the parity-test bridge between the scalar and fleet paths."""
+    sim = sim or SimConfig()
+    cap = cap or Capacitor()
+    if type(sim.clock) is not Clock:
+        raise NotImplementedError(
+            "fleet path models an exact RTC; CHRT clock error is scalar-only")
+    # default dt = one fragment time: the scalar path's execution quantum
+    dt = _check_dt(float(
+        np.min(np.asarray(task.unit_time)) / task.fragments_per_unit
+        if dt is None else dt), task)
+    statics = FleetStatics(queue_size=sim.queue_size, dt=dt,
+                           horizon=sim.horizon, slot_s=harvester.slot_s)
+    dev = device_config(
+        task, harvester, eta, cap,
+        policy=sim.policy, horizon=sim.horizon,
+        events=sample_events(harvester, sim.horizon, sim.seed),
+        e_opt_fraction=sim.e_opt_fraction, e_man=sim.e_man,
+        start_charged=sim.start_charged,
+    )
+    return stack_configs([dev]), statics
+
+
+# --------------------------------------------------------------------------- #
+# Sweep API.
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """Cartesian benchmark grid: one device per (policy, eta, harvester,
+    capacitor, seed) tuple, sharing a single task workload."""
+
+    task: TaskSpec
+    policies: Sequence[str] = ("zygarde",)
+    etas: Sequence[float] = (1.0,)
+    harvesters: Sequence[Harvester] = ()
+    capacitors: Sequence[Capacitor] = ()
+    seeds: Sequence[int] = (0,)
+    horizon: float = 600.0
+    dt: Optional[float] = None      # default: one fragment time
+    queue_size: int = 3
+    e_opt_fraction: float = 0.7
+    e_man: Optional[float] = None
+    start_charged: bool = False
+
+    def points(self):
+        harvesters = self.harvesters or (PERSISTENT,)
+        capacitors = self.capacitors or (Capacitor(),)
+        for pol in self.policies:
+            for eta in self.etas:
+                for hi, h in enumerate(harvesters):
+                    for cap in capacitors:
+                        for seed in self.seeds:
+                            yield dict(policy=pol, eta=eta, harvester=h,
+                                       harvester_idx=hi, capacitor=cap,
+                                       seed=seed)
+
+
+def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
+    """Materialise the grid as a FleetConfig + per-device metadata rows."""
+    points = list(grid.points())
+    if not points:
+        raise ValueError("empty sweep grid")
+    slot_lens = {pt["harvester"].slot_s for pt in points}
+    if len(slot_lens) != 1:
+        raise ValueError("all harvesters in one sweep must share slot_s")
+    dt = grid.dt
+    if dt is None:
+        dt = float(np.min(np.asarray(grid.task.unit_time))
+                   / grid.task.fragments_per_unit)
+    dt = _check_dt(dt, grid.task)
+    statics = FleetStatics(queue_size=grid.queue_size, dt=dt,
+                           horizon=grid.horizon, slot_s=slot_lens.pop())
+
+    events_cache: dict[tuple[int, int], np.ndarray] = {}
+    devices, meta = [], []
+    for pt in points:
+        key = (pt["harvester_idx"], pt["seed"])
+        if key not in events_cache:
+            events_cache[key] = sample_events(
+                pt["harvester"], grid.horizon, pt["seed"])
+        devices.append(device_config(
+            grid.task, pt["harvester"], pt["eta"], pt["capacitor"],
+            policy=pt["policy"], horizon=grid.horizon,
+            events=events_cache[key],
+            e_opt_fraction=grid.e_opt_fraction, e_man=grid.e_man,
+            start_charged=grid.start_charged,
+        ))
+        meta.append(dict(
+            policy=pt["policy"], eta=pt["eta"],
+            harvester=pt["harvester"].name, seed=pt["seed"],
+            capacitance_f=pt["capacitor"].capacitance_f,
+        ))
+    return stack_configs(devices), statics, meta
+
+
+def sweep(grid: SweepGrid, use_pallas: bool = False):
+    """Simulate the whole grid in one jitted call.
+
+    Returns ``(FleetResult, meta)``: stacked (D,) metric arrays plus the
+    per-device metadata rows identifying each grid point.
+    """
+    from .simulator import simulate_fleet
+
+    cfg, statics, meta = build(grid)
+    return simulate_fleet(cfg, statics, use_pallas=use_pallas), meta

@@ -1,0 +1,285 @@
+"""Fixed-timestep, JAX-native reimplementation of the intermittent scheduler
+simulation, batched over thousands of devices.
+
+Where :func:`repro.core.scheduler.simulate` is a scalar python event loop
+(one device / seed / config per call), this simulator steps the *entire*
+fleet state — capacitor energies, fixed-size job queues, harvester event
+streams — with one ``jax.lax.scan`` over time, ``jax.vmap``-ing the
+per-device step across the device axis.  One jitted call therefore evaluates
+a whole policy × eta × harvester × capacitor × seed grid.
+
+Per step (dt), each device: admits at most one released job (evicting an
+optional-only job on overflow, paper §5.2), expires past-deadline jobs,
+picks a queue slot with the shared priority functions from
+:mod:`repro.core.policy` (or the Pallas kernel
+:mod:`repro.kernels.fleet_priority` when ``use_pallas=True``), and then
+either executes ``dt`` seconds of the selected unit (draining the capacitor
+at the unit's power) or idles/charges.  Unit boundaries run the utility
+test against the precomputed job profiles, exactly like the scalar path.
+
+Fidelity notes vs the event-driven scalar simulator: execution is quantized
+to ``dt`` (keep ``dt`` at or below one fragment time), fragment energy is
+drained continuously rather than per-fragment, and job admission/expiry are
+checked every ``dt`` rather than only at unit boundaries — so counts agree
+within a small tolerance rather than bit-exactly; the parity tests in
+``tests/test_fleet.py`` pin the agreement down.  Limited preemption itself
+is preserved: a started unit holds a lock (``lock_slot``/``lock_job``) and
+runs to its boundary before the scheduler re-picks, exactly as in paper
+§4.1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import policy as P
+from .state import DeviceState, FleetConfig, FleetResult, FleetStatics, init_state
+
+_F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# Per-device helpers (scalar state; jax.vmap supplies the device axis).
+# --------------------------------------------------------------------------- #
+
+
+def _finish_counts(cfg: FleetConfig, st: DeviceState, mask: jax.Array):
+    """Tally (scheduled, correct, missed) for the queue slots in ``mask``."""
+    sched = mask & (st.q_mand_time >= 0.0) & (st.q_mand_time <= st.q_deadline)
+    job = jnp.clip(st.q_job, 0, cfg.margins.shape[0] - 1)
+    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[1] - 1)
+    corr = sched & (st.q_last_pred >= 0) & cfg.correct[job, lp]
+    miss = mask & ~sched
+    return jnp.sum(sched), jnp.sum(corr), jnp.sum(miss)
+
+
+def _admit(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
+    """Admit at most one released job (the builder asserts dt < period)."""
+    q = statics.queue_size
+    rel_time = st.next_rel.astype(_F32) * cfg.period
+    releasing = (st.next_rel < cfg.n_releases) & (rel_time <= t)
+
+    free = ~st.q_active
+    has_free = jnp.any(free)
+    # overflow: evict the earliest-deadline job whose mandatory part is done
+    # (optional-only work yields to the new arrival — mandatory first, §5.2)
+    evictable = st.q_active & (st.q_exited >= 0)
+    has_evict = jnp.any(evictable)
+    victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf))
+    evict = releasing & ~has_free & has_evict
+    vmask = evict & (jnp.arange(q) == victim)
+    d_sched, d_corr, d_miss = _finish_counts(cfg, st, vmask)
+
+    insert = releasing & (has_free | has_evict)
+    slot = jnp.where(has_free, jnp.argmax(free), victim)
+    ins = insert & (jnp.arange(q) == slot)
+    dropped = releasing & ~insert   # queue overflow with nothing evictable
+
+    return st._replace(
+        next_rel=st.next_rel + releasing,
+        q_active=(st.q_active & ~vmask) | ins,
+        q_release=jnp.where(ins, rel_time, st.q_release),
+        q_deadline=jnp.where(ins, rel_time + cfg.rel_deadline, st.q_deadline),
+        q_job=jnp.where(ins, st.next_rel, st.q_job),
+        q_unit=jnp.where(ins, 0, st.q_unit),
+        q_time_left=jnp.where(ins, cfg.unit_time[0], st.q_time_left),
+        q_exited=jnp.where(ins, -1, st.q_exited),
+        q_last_pred=jnp.where(ins, -1, st.q_last_pred),
+        q_mand_time=jnp.where(ins, -1.0, st.q_mand_time),
+        m_scheduled=st.m_scheduled + d_sched,
+        m_correct=st.m_correct + d_corr,
+        m_misses=st.m_misses + d_miss + dropped,
+    )
+
+
+def _drop_expired(cfg: FleetConfig, st: DeviceState, t):
+    expired = st.q_active & (t >= st.q_deadline)
+    d_sched, d_corr, d_miss = _finish_counts(cfg, st, expired)
+    return st._replace(
+        q_active=st.q_active & ~expired,
+        m_scheduled=st.m_scheduled + d_sched,
+        m_correct=st.m_correct + d_corr,
+        m_misses=st.m_misses + d_miss,
+    )
+
+
+def _pick_inputs(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
+    """Per-slot priority/energy ingredients shared by the jnp pick and the
+    Pallas kernel: (laxity, utility, mandatory, gate_e, drain, charge)."""
+    u = jnp.clip(st.q_unit, 0, cfg.unit_time.shape[0] - 1)
+    unit_t = cfg.unit_time[u]
+    unit_e = cfg.unit_energy[u]
+    gate_e = jnp.maximum(unit_e / cfg.fragments, cfg.e_man)
+    drain = unit_e * (statics.dt / unit_t)
+    job = jnp.clip(st.q_job, 0, cfg.margins.shape[0] - 1)
+    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[1] - 1)
+    utility = jnp.where(st.q_last_pred >= 0, cfg.margins[job, lp], 0.0)
+    mandatory = st.q_exited < 0
+    laxity = st.q_deadline - t
+    n_slots = cfg.events.shape[0]
+    slot = jnp.minimum((t / statics.slot_s).astype(jnp.int32), n_slots - 1)
+    charge = cfg.events[slot] * cfg.power_on * statics.dt
+    # limited preemption: a slot mid-unit is forced until the unit boundary
+    # (unless it expired or its slot was recycled for a newer job)
+    ls = jnp.clip(st.lock_slot, 0, st.q_active.shape[0] - 1)
+    locked = ((st.lock_slot >= 0) & st.q_active[ls]
+              & (st.q_job[ls] == st.lock_job))
+    forced = jnp.where(locked, ls, -1).astype(jnp.int32)
+    return laxity, utility, mandatory, gate_e, drain, charge, forced
+
+
+def _pick(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
+    """Priority-argmax + fused capacitor charge/discharge (pure-jnp path)."""
+    laxity, utility, mandatory, gate_e, drain, charge, forced = _pick_inputs(
+        cfg, st, t, statics)
+    scores, thr = P.policy_scores(
+        cfg.policy, st.q_active, laxity, st.q_release, utility, mandatory,
+        cfg.alpha, cfg.beta, cfg.eta, st.energy, cfg.e_opt, cfg.persistent)
+    sel = jnp.where(forced >= 0, forced,
+                    jnp.argmax(scores)).astype(jnp.int32)
+    picked = (forced >= 0) | (jnp.max(scores) > thr)
+    run = picked & (st.energy >= gate_e[sel])
+    e_new = jnp.minimum(st.energy + charge, cfg.capacity) - run * drain[sel]
+    return sel, picked, run, e_new
+
+
+def _pick_pallas(cfg: FleetConfig, states: DeviceState, t,
+                 statics: FleetStatics):
+    """Batched pick via the Pallas fleet_priority kernel (whole-fleet call)."""
+    from ..kernels import ops  # local import: kernels pull in pallas
+
+    laxity, utility, mandatory, gate_e, drain, charge, forced = jax.vmap(
+        lambda c, s: _pick_inputs(c, s, t, statics))(cfg, states)
+    return ops.fleet_priority(
+        cfg.policy, states.q_active, laxity, states.q_release, utility,
+        mandatory, cfg.alpha, cfg.beta, cfg.eta, cfg.persistent,
+        states.energy, cfg.e_opt, charge, cfg.capacity, gate_e, drain,
+        forced)
+
+
+def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
+           statics: FleetStatics):
+    """Advance the selected job by dt; handle unit/job completion."""
+    q = statics.queue_size
+    u_max = cfg.unit_time.shape[0] - 1
+    oh = jnp.arange(q) == sel
+
+    u_sel = jnp.clip(st.q_unit[sel], 0, u_max)
+    frag_t = cfg.unit_time[u_sel] / cfg.fragments
+
+    # power-down / reboot bookkeeping (the initial cold boot counts wasted
+    # half-fragment re-execution but not a reboot — matches the scalar path)
+    reboot = run & st.was_off
+    was_off = jnp.where(run, False, jnp.where(picked, True, st.was_off))
+    idle_inc = jnp.where(picked & ~run, statics.dt, 0.0)
+
+    # execute dt of the selected unit
+    time_left = st.q_time_left - jnp.where(run & oh, statics.dt, 0.0)
+    complete = run & oh & (time_left <= statics.dt * 1e-3)
+
+    u = jnp.clip(st.q_unit, 0, u_max)
+    job = jnp.clip(st.q_job, 0, cfg.passes.shape[0] - 1)
+    next_u = jnp.clip(st.q_unit + 1, 0, u_max)
+    done_any = jnp.any(complete)
+    mandatory = st.q_exited < 0
+
+    last_pred = jnp.where(complete, u, st.q_last_pred)
+    unit = jnp.where(complete, st.q_unit + 1, st.q_unit)
+    time_left = jnp.where(complete, cfg.unit_time[next_u], time_left)
+
+    # utility test at the unit boundary (imprecise policies only)
+    exit_now = complete & cfg.imprecise & (st.q_exited < 0) & cfg.passes[job, u]
+    exited = jnp.where(exit_now, u, st.q_exited)
+    # never-confident full execution => the whole DNN was mandatory
+    full_mand = complete & (exited < 0) & (st.q_unit + 1 >= cfg.n_units)
+    exited = jnp.where(full_mand, cfg.n_units - 1, exited)
+    t_end = t + statics.dt
+    mand_time = jnp.where(exit_now | full_mand, t_end, st.q_mand_time)
+
+    job_done = complete & (
+        (st.q_unit + 1 >= cfg.n_units) | (cfg.is_edfm & (exited >= 0))
+    )
+    st_done = st._replace(q_last_pred=last_pred, q_mand_time=mand_time)
+    d_sched, d_corr, d_miss = _finish_counts(cfg, st_done, job_done)
+
+    # hold the lock while the unit is in progress (including power-gated
+    # waits, like the scalar fragment loop); release at the unit boundary
+    lock_on = picked & ~done_any
+    return st._replace(
+        energy=e_new,
+        was_off=was_off,
+        lock_slot=jnp.where(lock_on, sel, -1).astype(jnp.int32),
+        lock_job=jnp.where(lock_on, st.q_job[sel], -1).astype(jnp.int32),
+        q_active=st.q_active & ~job_done,
+        q_unit=unit,
+        q_time_left=time_left,
+        q_exited=exited,
+        q_last_pred=last_pred,
+        q_mand_time=mand_time,
+        m_scheduled=st.m_scheduled + d_sched,
+        m_correct=st.m_correct + d_corr,
+        m_misses=st.m_misses + d_miss,
+        m_units=st.m_units + done_any,
+        m_optional=st.m_optional + (done_any & ~mandatory[sel]),
+        m_reboots=st.m_reboots + (reboot & (st.m_busy > 0)),
+        m_busy=st.m_busy + jnp.where(run, statics.dt, 0.0),
+        m_idle=st.m_idle + idle_inc,
+        m_wasted=st.m_wasted + jnp.where(reboot, 0.5 * frag_t, 0.0),
+    )
+
+
+def _finalize(cfg: FleetConfig, st: DeviceState,
+              statics: FleetStatics) -> FleetResult:
+    """Flush live jobs and count never-admitted releases as misses."""
+    d_sched, d_corr, d_miss = _finish_counts(cfg, st, st.q_active)
+    unreleased = cfg.n_releases - st.next_rel
+    return FleetResult(
+        released=cfg.n_releases,
+        scheduled=st.m_scheduled + d_sched,
+        correct=st.m_correct + d_corr,
+        deadline_misses=st.m_misses + d_miss + unreleased,
+        units_executed=st.m_units,
+        optional_units=st.m_optional,
+        busy_time=st.m_busy,
+        idle_no_energy=st.m_idle,
+        reboots=st.m_reboots,
+        wasted_reexec=st.m_wasted,
+        sim_time=jnp.full((), statics.horizon, _F32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Fleet entry point: scan over time, vmap over devices, one jit.
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(jax.jit, static_argnames=("statics", "use_pallas"))
+def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
+                   use_pallas: bool = False) -> FleetResult:
+    """Simulate every device in ``cfg`` in one jitted scan.
+
+    Returns a :class:`FleetResult` of ``(D,)`` metric arrays aligned with the
+    device axis of ``cfg`` (see :func:`repro.fleet.grid.sweep` for the grid
+    bookkeeping).
+    """
+    states0 = jax.vmap(lambda c: init_state(c, statics))(cfg)
+
+    def step(states, i):
+        t = i.astype(_F32) * statics.dt
+        states = jax.vmap(lambda c, s: _admit(c, s, t, statics))(cfg, states)
+        states = jax.vmap(lambda c, s: _drop_expired(c, s, t))(cfg, states)
+        if use_pallas:
+            sel, picked, run, e_new = _pick_pallas(cfg, states, t, statics)
+        else:
+            sel, picked, run, e_new = jax.vmap(
+                lambda c, s: _pick(c, s, t, statics))(cfg, states)
+        states = jax.vmap(
+            lambda c, s, a, p, r, e: _apply(c, s, t, a, p, r, e, statics)
+        )(cfg, states, sel, picked, run, e_new)
+        return states, None
+
+    states, _ = lax.scan(step, states0, jnp.arange(statics.n_steps))
+    return jax.vmap(lambda c, s: _finalize(c, s, statics))(cfg, states)

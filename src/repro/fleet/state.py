@@ -1,0 +1,164 @@
+"""Pytree containers for the vectorized fleet simulator.
+
+Everything the fixed-timestep simulator touches lives in two NamedTuple
+pytrees of arrays:
+
+* :class:`FleetConfig` — immutable per-device configuration: one leading
+  ``D`` (device) axis over the sweep grid (policy × eta × harvester ×
+  capacitor × seed), plus the shared workload tables and pre-sampled
+  harvester event streams.
+* :class:`DeviceState` — the mutable simulation state for ONE device
+  (``jax.vmap`` adds the device axis): capacitor energy, the fixed-size job
+  queue as parallel arrays, and the metric accumulators.
+
+Shapes use ``D`` devices, ``Q`` queue slots, ``U`` units per job, ``J`` jobs
+per device, ``S`` harvester slots.  Static (python) dimensions and step
+sizes live in the hashable :class:`FleetStatics`, which is a ``jax.jit``
+static argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetStatics:
+    """Hashable static configuration (jit static argument)."""
+
+    queue_size: int = 3
+    dt: float = 0.025            # fixed timestep (s); keep <= min unit_time
+    horizon: float = 600.0
+    slot_s: float = 1.0          # harvester slot length (s)
+
+    @property
+    def n_steps(self) -> int:
+        return int(round(self.horizon / self.dt))
+
+
+class FleetConfig(NamedTuple):
+    """Per-device configuration arrays (leading axis: D devices)."""
+
+    # scheduler / energy scalars, (D,)
+    policy: jax.Array        # int32, repro.core.policy.POLICY_IDS
+    imprecise: jax.Array     # bool: early exit enabled (zygarde, edf-m)
+    is_edfm: jax.Array       # bool: EDF-M never runs optional units
+    eta: jax.Array           # f32
+    alpha: jax.Array         # f32, 1 / max relative deadline
+    beta: jax.Array          # f32
+    persistent: jax.Array    # bool: use zeta (Eq. 6) instead of zeta_I (Eq. 7)
+    capacity: jax.Array      # f32, usable capacitor energy (J)
+    start_energy: jax.Array  # f32; negative = cold-boot dead-zone debt
+    e_man: jax.Array         # f32, minimum energy to run a fragment
+    e_opt: jax.Array         # f32, Eq. 7 optional-unit energy threshold
+    power_on: jax.Array      # f32, harvester power in the ON state (W)
+    # task stream, (D,)
+    period: jax.Array        # f32
+    rel_deadline: jax.Array  # f32, relative deadline
+    fragments: jax.Array     # f32, fragments per unit
+    n_units: jax.Array       # int32, <= U
+    n_releases: jax.Array    # int32, jobs released within the horizon (<= J)
+    # workload tables
+    unit_time: jax.Array     # (D, U) f32, seconds per unit
+    unit_energy: jax.Array   # (D, U) f32, joules per unit
+    margins: jax.Array       # (D, J, U) f32, utility-test margins
+    passes: jax.Array        # (D, J, U) bool, utility test passes after unit
+    correct: jax.Array       # (D, J, U) bool, unit prediction correct
+    # harvester event stream, (D, S) f32 in {0, 1}
+    events: jax.Array
+
+    @property
+    def n_devices(self) -> int:
+        return self.policy.shape[0]
+
+
+class DeviceState(NamedTuple):
+    """Mutable per-device simulation state (no device axis; vmap adds it)."""
+
+    energy: jax.Array        # f32 scalar; < 0 while paying cold-boot debt
+    was_off: jax.Array       # bool scalar: last activity was a power-down
+    next_rel: jax.Array      # int32 scalar: next job index to release
+    # limited preemption (paper §4.1): once a unit starts, it runs to its
+    # boundary — the scheduler only re-picks between units.  lock_job guards
+    # against the slot being recycled for a new job while locked.
+    lock_slot: jax.Array     # int32 scalar: queue slot mid-unit, -1 if none
+    lock_job: jax.Array      # int32 scalar: job id the lock belongs to
+    # fixed-size job queue, (Q,) each
+    q_active: jax.Array      # bool
+    q_release: jax.Array     # f32
+    q_deadline: jax.Array    # f32 (absolute)
+    q_job: jax.Array         # int32, index into the (J, U) profile tables
+    q_unit: jax.Array        # int32, next unit to execute
+    q_time_left: jax.Array   # f32, seconds left in the current unit
+    q_exited: jax.Array      # int32, unit where the utility test passed (-1)
+    q_last_pred: jax.Array   # int32, deepest executed unit (-1)
+    q_mand_time: jax.Array   # f32, mandatory-completion time (-1)
+    # metric accumulators (mirror scheduler.SimResult)
+    m_scheduled: jax.Array   # int32
+    m_correct: jax.Array     # int32
+    m_misses: jax.Array      # int32
+    m_units: jax.Array       # int32
+    m_optional: jax.Array    # int32
+    m_reboots: jax.Array     # int32
+    m_busy: jax.Array        # f32
+    m_idle: jax.Array        # f32
+    m_wasted: jax.Array      # f32
+
+
+class FleetResult(NamedTuple):
+    """Stacked per-device results, (D,) each — SimResult over the fleet."""
+
+    released: jax.Array
+    scheduled: jax.Array
+    correct: jax.Array
+    deadline_misses: jax.Array
+    units_executed: jax.Array
+    optional_units: jax.Array
+    busy_time: jax.Array
+    idle_no_energy: jax.Array
+    reboots: jax.Array
+    wasted_reexec: jax.Array
+    sim_time: jax.Array
+
+    def device(self, i: int) -> dict:
+        """Metrics of device ``i`` as a python dict (SimResult field names)."""
+        return {k: v[i].item() for k, v in self._asdict().items()}
+
+    def as_dict(self) -> dict:
+        return {k: jnp.asarray(v) for k, v in self._asdict().items()}
+
+
+def init_state(cfg: FleetConfig, statics: FleetStatics) -> DeviceState:
+    """Initial state for one device (call under vmap over cfg)."""
+    q = statics.queue_size
+    f32 = jnp.float32
+    i32 = jnp.int32
+    zero_i = jnp.zeros((), i32)
+    return DeviceState(
+        energy=cfg.start_energy.astype(f32),
+        was_off=jnp.zeros((), bool),
+        next_rel=zero_i,
+        lock_slot=jnp.full((), -1, i32),
+        lock_job=jnp.full((), -1, i32),
+        q_active=jnp.zeros((q,), bool),
+        q_release=jnp.zeros((q,), f32),
+        q_deadline=jnp.zeros((q,), f32),
+        q_job=jnp.zeros((q,), i32),
+        q_unit=jnp.zeros((q,), i32),
+        q_time_left=jnp.zeros((q,), f32),
+        q_exited=jnp.full((q,), -1, i32),
+        q_last_pred=jnp.full((q,), -1, i32),
+        q_mand_time=jnp.full((q,), -1.0, f32),
+        m_scheduled=zero_i,
+        m_correct=zero_i,
+        m_misses=zero_i,
+        m_units=zero_i,
+        m_optional=zero_i,
+        m_reboots=zero_i,
+        m_busy=jnp.zeros((), f32),
+        m_idle=jnp.zeros((), f32),
+        m_wasted=jnp.zeros((), f32),
+    )

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: the fleet simulator's hot inner step.
+
+For every device in a batch, in one fused pass over the (devices × queue)
+matrix: evaluate the scheduling policy's priority scores (zeta / zeta_I /
+EDF / EDF-M / RR — the same pure functions from :mod:`repro.core.policy`
+the scalar simulator uses), argmax the queue, gate on stored energy, and
+apply the capacitor charge/discharge update for this timestep.
+
+The queue axis (a handful of slots) rides the lane dimension; the device
+axis is tiled into ``block_d``-row VMEM blocks, so the whole step is one
+VPU sweep per tile with no HBM round-trips between the score, argmax and
+energy stages.  Per-slot gather ingredients (laxity, utility, gate/drain
+energies) are precomputed by the caller — gathers from the (D, J, U)
+profile tables stay outside the kernel.
+
+Boolean operands are passed as f32 0/1 masks and the flag outputs returned
+as int32 (TPU-friendly dtypes); :mod:`repro.kernels.ops` re-casts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..core import policy as P
+
+
+def _fleet_priority_kernel(
+    policy_ref, active_ref, laxity_ref, release_ref, utility_ref,
+    mandatory_ref, alpha_ref, beta_ref, eta_ref, persistent_ref,
+    energy_ref, e_opt_ref, charge_ref, capacity_ref, gate_ref, drain_ref,
+    forced_ref,
+    sel_ref, picked_ref, run_ref, e_new_ref,
+):
+    pol = policy_ref[...][:, None]          # (bd, 1) i32
+    energy = energy_ref[...]                # (bd,)
+
+    scores, thr = P.policy_scores(
+        pol, active_ref[...], laxity_ref[...], release_ref[...],
+        utility_ref[...], mandatory_ref[...],
+        alpha_ref[...][:, None], beta_ref[...][:, None],
+        eta_ref[...][:, None], energy[:, None], e_opt_ref[...][:, None],
+        persistent_ref[...][:, None],
+    )
+    # limited preemption: a forced slot (unit in progress) bypasses scoring
+    forced = forced_ref[...]
+    sel = jnp.where(forced >= 0, forced,
+                    jnp.argmax(scores, axis=1)).astype(jnp.int32)
+    best = jnp.max(scores, axis=1)
+    picked = (forced >= 0) | (best > thr[:, 0])
+
+    # lane-select the chosen slot's energy gate / drain (2D iota: TPU-safe)
+    onehot = lax.broadcasted_iota(jnp.int32, scores.shape, 1) == sel[:, None]
+    gate_sel = jnp.sum(jnp.where(onehot, gate_ref[...], 0.0), axis=1)
+    drain_sel = jnp.sum(jnp.where(onehot, drain_ref[...], 0.0), axis=1)
+
+    run = picked & (energy >= gate_sel)
+    e_new = (
+        jnp.minimum(energy + charge_ref[...], capacity_ref[...])
+        - run * drain_sel
+    )
+    sel_ref[...] = sel
+    picked_ref[...] = picked.astype(jnp.int32)
+    run_ref[...] = run.astype(jnp.int32)
+    e_new_ref[...] = e_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fleet_priority(
+    policy: jax.Array,      # (D,) i32
+    active: jax.Array,      # (D, Q) f32 0/1
+    laxity: jax.Array,      # (D, Q) f32, deadline - t
+    release: jax.Array,     # (D, Q) f32
+    utility: jax.Array,     # (D, Q) f32
+    mandatory: jax.Array,   # (D, Q) f32 0/1
+    alpha: jax.Array,       # (D,) f32
+    beta: jax.Array,        # (D,) f32
+    eta: jax.Array,         # (D,) f32
+    persistent: jax.Array,  # (D,) f32 0/1
+    energy: jax.Array,      # (D,) f32
+    e_opt: jax.Array,       # (D,) f32
+    charge: jax.Array,      # (D,) f32, harvested energy this step
+    capacity: jax.Array,    # (D,) f32
+    gate_e: jax.Array,      # (D, Q) f32, min energy to run the slot's unit
+    drain: jax.Array,       # (D, Q) f32, energy drained per step if run
+    forced: jax.Array,      # (D,) i32, locked slot mid-unit (-1 = none)
+    *,
+    block_d: int = 256,
+    interpret: bool = False,
+):
+    """Returns ``(sel (D,) i32, picked (D,) i32, run (D,) i32, e_new (D,) f32)``."""
+    D, Q = active.shape
+    bd = min(block_d, D)
+    while D % bd:
+        bd //= 2
+    grid = (D // bd,)
+    f32 = jnp.float32
+    row = pl.BlockSpec((bd, Q), lambda i: (i, 0))
+    vec = pl.BlockSpec((bd,), lambda i: (i,))
+    return pl.pallas_call(
+        _fleet_priority_kernel,
+        grid=grid,
+        in_specs=[vec, row, row, row, row, row, vec, vec, vec, vec, vec,
+                  vec, vec, vec, row, row, vec],
+        out_specs=[vec, vec, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((D,), jnp.int32),
+            jax.ShapeDtypeStruct((D,), jnp.int32),
+            jax.ShapeDtypeStruct((D,), jnp.int32),
+            jax.ShapeDtypeStruct((D,), f32),
+        ],
+        interpret=interpret,
+    )(
+        policy.astype(jnp.int32), active.astype(f32), laxity.astype(f32),
+        release.astype(f32), utility.astype(f32), mandatory.astype(f32),
+        alpha.astype(f32), beta.astype(f32), eta.astype(f32),
+        persistent.astype(f32), energy.astype(f32), e_opt.astype(f32),
+        charge.astype(f32), capacity.astype(f32), gate_e.astype(f32),
+        drain.astype(f32), forced.astype(jnp.int32),
+    )

@@ -12,6 +12,7 @@ import jax
 from .centroid_update import centroid_update as _centroid_update
 from .decode_gqa import decode_gqa as _decode_gqa
 from .flash_attn import flash_attention as _flash_attention
+from .fleet_priority import fleet_priority as _fleet_priority
 from .l1_topk2 import l1_topk2 as _l1_topk2
 from .pairwise_l1 import pairwise_l1 as _pairwise_l1
 from .rglru_scan import rglru_scan as _rglru_scan
@@ -49,3 +50,16 @@ def decode_gqa(q, k_cache, v_cache, slot_pos, my_pos, **kw):
 def flash_attention(q, k, v, **kw):
     kw.setdefault("interpret", _interpret())
     return _flash_attention(q, k, v, **kw)
+
+
+def fleet_priority(policy, active, laxity, release, utility, mandatory,
+                   alpha, beta, eta, persistent, energy, e_opt, charge,
+                   capacity, gate_e, drain, forced, **kw):
+    """Batched scheduler pick + capacitor update; returns jnp-typed flags
+    (``sel`` int32, ``picked``/``run`` bool, ``e_new`` f32)."""
+    kw.setdefault("interpret", _interpret())
+    sel, picked, run, e_new = _fleet_priority(
+        policy, active, laxity, release, utility, mandatory, alpha, beta,
+        eta, persistent, energy, e_opt, charge, capacity, gate_e, drain,
+        forced, **kw)
+    return sel, picked.astype(bool), run.astype(bool), e_new

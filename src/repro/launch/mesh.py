@@ -14,21 +14,39 @@ from __future__ import annotations
 from typing import Mapping
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types on mesh construction
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older jax (e.g. 0.4.x containers)
+    AxisType = None
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the jax version has them."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_abstract_mesh(shape, axes):
+    """Device-less mesh for spec inference, across jax versions."""
+    from jax.sharding import AbstractMesh
+
+    if AxisType is None:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """1-device mesh for CPU smoke runs of the distributed code path."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def logical_rules(mesh: Mesh) -> Mapping[str, object]:

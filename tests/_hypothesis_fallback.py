@@ -1,0 +1,51 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+``pyproject.toml`` lists hypothesis under the ``test`` extra, but the suite
+must still *collect* in bare environments (CI images, accelerator containers
+without the extra).  Importing this module either re-exports the real
+``given``/``settings``/``strategies`` or — mirroring a per-test
+``pytest.importorskip`` — substitutes decorators that mark each property test
+as skipped while letting every plain test in the module run.
+
+Usage in a test module::
+
+    from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the extra
+    HAVE_HYPOTHESIS = False
+
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed (pip install "
+                                    "'zygarde-repro[test]')")
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            return _SKIP(fn)
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    class _Strategies:
+        """Stand-in for ``hypothesis.strategies``: every strategy constructor
+        returns ``None`` — the skipped tests never draw from them."""
+
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+
+            return strategy
+
+    st = _Strategies()

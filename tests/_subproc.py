@@ -1,0 +1,19 @@
+"""Shared helper for tests that spawn python subprocesses.
+
+Subprocesses don't inherit pytest's ``pythonpath`` ini setting, so the
+repo's ``src`` dir must be placed on PYTHONPATH explicitly for
+``python -m repro...`` / ``python -c "import repro..."`` children to work
+when the package is not pip-installed.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def sub_env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env

@@ -12,18 +12,19 @@ import textwrap
 
 import pytest
 
+from _subproc import sub_env
+
 SUB = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
-from jax.sharding import AxisType
 
 from repro.configs import get_config
 from repro.launch.lowering import analyze, lower_step
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_config("{arch}").reduced()
 res = lower_step(cfg, "{shape}", mesh)
 rec = analyze(res)
@@ -41,7 +42,7 @@ def run_sub(arch, shape):
     code = SUB.format(arch=arch, shape=shape)
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=900,
+        capture_output=True, text=True, timeout=900, env=sub_env(),
     )
     assert out.returncode == 0, out.stderr[-3000:]
     line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][-1]
@@ -67,7 +68,7 @@ def test_long_500k_skip_is_honoured():
     code = SUB.format(arch="seamless-m4t-medium", shape="long_500k")
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=900,
+        capture_output=True, text=True, timeout=900, env=sub_env(),
     )
     assert out.returncode != 0
     assert "ShapeSkip" in out.stderr or "skips long_500k" in out.stderr
@@ -84,14 +85,14 @@ def test_param_specs_divisible():
     16x16 mesh."""
     import jax
     import numpy as np
-    from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     from repro.configs import ASSIGNED_ARCHS, get_config
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import param_specs
     from repro.models import transformer as T
 
-    mesh = AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     for arch in ASSIGNED_ARCHS:
         cfg = get_config(arch)
@@ -118,14 +119,13 @@ def test_param_specs_divisible():
 
 def test_state_specs_shard_cache():
     import jax
-    from jax.sharding import AbstractMesh, AxisType
 
     from repro.configs import get_config
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import state_specs
     from repro.models import transformer as T
 
-    mesh = AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     # glm4: kv=2 not divisible by 16 -> the cache LENGTH must shard
     cfg = get_config("glm4-9b")
     state = jax.eval_shape(lambda: T.init_decode_state(cfg, 128, 32768))
@@ -146,12 +146,11 @@ def test_state_specs_shard_cache():
 def test_batch_specs_batch_axis():
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AbstractMesh, AxisType
 
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import batch_specs
 
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                        axis_types=(AxisType.Auto,) * 3)
+    mesh = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
     spec = batch_specs(mesh, batch)["tokens"]
     assert spec[0] == ("pod", "data")

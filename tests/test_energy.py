@@ -2,8 +2,7 @@
 capacitor, schedulability — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import energy
 

@@ -1,8 +1,7 @@
 """Semi-supervised k-means classifier bank (paper §4.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 import jax
 import jax.numpy as jnp

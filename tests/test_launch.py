@@ -2,11 +2,13 @@
 import subprocess
 import sys
 
+from _subproc import sub_env
+
 
 def run_module(args, timeout=600):
     out = subprocess.run(
         [sys.executable, "-m"] + args,
-        capture_output=True, text=True, timeout=timeout,
+        capture_output=True, text=True, timeout=timeout, env=sub_env(),
     )
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout

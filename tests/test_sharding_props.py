@@ -1,7 +1,6 @@
 """Property tests for the sharding-spec layer (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from jax.sharding import PartitionSpec as P
 
@@ -46,14 +45,13 @@ def test_sanitize_dim_greedy_prefix(dim):
 def test_param_specs_cover_every_leaf_rank():
     """Every spec has exactly the rank of its leaf (P padding contract)."""
     import jax
-    from jax.sharding import AbstractMesh, AxisType
 
     from repro.configs import ASSIGNED_ARCHS, get_config
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import param_specs
     from repro.models import transformer as T
 
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                        axis_types=(AxisType.Auto,) * 3)
+    mesh = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     for arch in ASSIGNED_ARCHS[:4]:
         cfg = get_config(arch)
         shapes = jax.eval_shape(
