@@ -10,6 +10,16 @@ import numpy as np
 
 OUT_DIR = Path(__file__).resolve().parent.parent / "experiments"
 
+# rows emitted since the last drain, keyed by bench name — run.py drains
+# this after each module to write the per-bench BENCH_<name>.json artifact
+PENDING_ROWS: dict[str, list[dict]] = {}
+
+
+def drain_rows() -> dict[str, list[dict]]:
+    out = dict(PENDING_ROWS)
+    PENDING_ROWS.clear()
+    return out
+
 
 @functools.lru_cache(maxsize=None)
 def dataset(name: str, n_train: int = 384, n_test: int = 192,
@@ -84,4 +94,5 @@ def emit(bench: str, rows: list[dict]) -> list[dict]:
         existing = json.loads(path.read_text())
     existing[bench] = rows
     path.write_text(json.dumps(existing, indent=2, default=str))
+    PENDING_ROWS.setdefault(bench, []).extend(rows)
     return rows

@@ -2,15 +2,24 @@
 
 One module per paper table/figure (see DESIGN.md §6); each prints
 ``bench,key=value,...`` CSV rows and appends to
-``experiments/bench_results.json``.  ``--full`` runs the 4-dataset variants.
+``experiments/bench_results.json``.  Additionally every module run writes a
+machine-readable ``experiments/BENCH_<name>.json`` (wall time + the rows it
+emitted, which carry throughput / devices-per-sec where applicable) so the
+perf trajectory can be tracked across PRs.
+
+``--full`` runs the 4-dataset variants; ``--smoke`` runs a fast subset
+(the fleet-throughput and policy-search benches) as a CI canary so the
+benchmark entrypoints can't silently rot.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
 from . import (
+    bench_adapt,
     bench_adaptation,
     bench_capacitor,
     bench_classifiers,
@@ -21,6 +30,7 @@ from . import (
     bench_loss_functions,
     bench_overhead,
     bench_scheduler,
+    common,
     roofline,
 )
 
@@ -30,6 +40,7 @@ BENCHES = (
     ("early_termination_fig16", bench_early_termination),
     ("scheduler_figs17_20", bench_scheduler),
     ("fleet_throughput", bench_fleet),
+    ("adapt_tune", bench_adapt),
     ("capacitor_fig21", bench_capacitor),
     ("clock_table5", bench_clock),
     ("adaptation_fig24", bench_adaptation),
@@ -38,29 +49,49 @@ BENCHES = (
     ("roofline", roofline),
 )
 
+SMOKE_BENCHES = ("fleet_throughput", "adapt_tune")
+
+
+def write_bench_json(name: str, wall_s: float, rows: dict,
+                     ok: bool) -> None:
+    common.OUT_DIR.mkdir(exist_ok=True)
+    path = common.OUT_DIR / f"BENCH_{name}.json"
+    path.write_text(json.dumps(
+        dict(bench=name, ok=ok, wall_s=round(wall_s, 3), rows=rows),
+        indent=2, default=str))
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="all four datasets (slower)")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"fast CI subset: {', '.join(SMOKE_BENCHES)}")
     ap.add_argument("--only", nargs="*", help="subset of benchmark names")
     args = ap.parse_args()
 
+    selected = args.only or (SMOKE_BENCHES if args.smoke else None)
     failures = []
     for name, mod in BENCHES:
-        if args.only and name not in args.only:
+        if selected and name not in selected:
             continue
         t0 = time.time()
         print(f"# --- {name} ---")
+        common.drain_rows()
+        ok = True
         try:
             mod.run(quick=not args.full)
         except Exception:
             traceback.print_exc()
             failures.append(name)
-        print(f"# {name} done in {time.time() - t0:.1f}s")
+            ok = False
+        wall = time.time() - t0
+        write_bench_json(name, wall, common.drain_rows(), ok)
+        print(f"# {name} done in {wall:.1f}s")
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
-    print("# all benchmarks complete -> experiments/bench_results.json")
+    print("# all benchmarks complete -> experiments/bench_results.json "
+          "+ experiments/BENCH_<name>.json")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,77 @@
+"""Online policy search: tune Zygarde's scheduler knobs per deployment.
+
+The paper's scheduler ships constants — eta measured once from the
+harvester trace, E_opt fixed at 70% of capacity.  This example closes the
+loop instead: ``repro.adapt`` treats the vectorized fleet simulator as a
+batched objective (one jitted call scores a whole candidate population
+against a seeded 3-harvester-pattern × seed grid) and searches the
+(eta, E_opt-fraction) space with an evolution strategy.  The tuned point
+beats the paper-default constants on fleet-simulated on-time accuracy.
+
+Run: ``PYTHONPATH=src python examples/adapt_tune.py``
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import adapt
+from repro.core import energy
+from repro.core.scheduler import JobProfile, TaskSpec
+
+
+def make_task(n_jobs=30, n_units=4, exit_at=1, correct_from=2):
+    """Periodic sensing task with accuracy headroom: the utility test is
+    willing to exit after unit 1, but predictions only become correct from
+    unit 2 — running optional units buys accuracy when energy allows, so
+    the energy gate's aggressiveness genuinely matters."""
+    margins = np.linspace(0.05, 0.5, n_units)
+    passes = np.zeros(n_units, bool)
+    passes[exit_at:] = True
+    correct = np.zeros(n_units, bool)
+    correct[correct_from:] = True
+    prof = JobProfile(margins, passes, correct)
+    return TaskSpec(
+        task_id=0, period=1.0, deadline=2.0,
+        unit_time=np.full(n_units, 0.1),
+        unit_energy=np.full(n_units, 8e-3),
+        profiles=[prof] * n_jobs,
+    )
+
+
+def main() -> None:
+    problem = adapt.TuneProblem(
+        task=make_task(),
+        harvesters=(energy.Harvester("solar", 0.95, 0.95, 0.08),
+                    energy.Harvester("rf", 0.85, 0.85, 0.05),
+                    energy.Harvester("piezo", 0.90, 0.90, 0.06)),
+        seeds=(0, 1),
+        horizon=30.0,
+    )
+    space = adapt.SearchSpace.of(eta=(0.05, 1.0),
+                                 e_opt_fraction=(0.05, 0.95))
+
+    default = problem.default_params()
+    default_score = problem.score(default)
+    print(f"paper defaults  eta={default['eta']:.3f} "
+          f"e_opt_fraction={default['e_opt_fraction']:.2f}  "
+          f"on-time accuracy={default_score:.4f}")
+
+    result = adapt.tune(problem.objective(), space, budget=128, driver="es",
+                        seed=0)
+    print(f"ES-tuned        eta={result.best_params['eta']:.3f} "
+          f"e_opt_fraction={result.best_params['e_opt_fraction']:.2f}  "
+          f"on-time accuracy={result.best_score:.4f} "
+          f"({result.n_evals} fleet-evaluated candidates)")
+    gain = result.best_score - default_score
+    print(f"gain: +{gain:.4f} on-time accuracy "
+          f"({100 * gain / max(default_score, 1e-9):.1f}% relative)")
+    assert result.best_score > default_score
+
+    print("\nsearch trajectory (best score after each objective call):")
+    for h in result.history:
+        print(f"  evals={h['n_evals']:>4}  best={h['best_score']:.4f}  "
+              f"block_mean={h['block_mean']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Online policy search: closed-loop tuning of Zygarde's scheduler knobs.
+
+The paper's headline is *adaptation* — the scheduler should fit its
+energy gate (eta), optional-unit target (E_opt) and utility thresholds to
+the deployment's harvesting pattern, not run fixed constants.  This
+subsystem turns the vectorized fleet simulator (:mod:`repro.fleet`) into the
+inner loop of that adaptation: a candidate *population* becomes the fleet
+device axis, so one jitted call scores every candidate against every
+harvester pattern × seed cell (and ``mesh=`` shards the population across
+backends).
+
+Public API::
+
+    from repro import adapt
+
+    problem = adapt.TuneProblem(task=task, harvesters=(h1, h2, h3))
+    space = adapt.SearchSpace.of(eta=(0.05, 1.0), e_opt_fraction=(0.05, 0.95))
+    result = adapt.tune(problem.objective(), space, budget=256, driver="es")
+    result.best_params                     # {"eta": ..., "e_opt_fraction": ...}
+    problem.score(problem.default_params())  # the paper-default baseline
+
+Drivers: ``random`` / ``grid`` (vectorized one-shot search), ``es``
+((mu+lambda) evolution strategy), ``es-grad`` (antithetic-perturbation ES
+gradients) — see :mod:`repro.adapt.search`.
+"""
+from .objective import (  # noqa: F401
+    PAPER_E_OPT_FRACTION,
+    Objective,
+    TuneProblem,
+    apply_params,
+)
+from .search import DRIVERS, TuneResult, tune  # noqa: F401
+from .space import Param, SearchSpace  # noqa: F401

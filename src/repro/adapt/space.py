@@ -1,0 +1,87 @@
+"""Search-space description for scheduler-parameter tuning.
+
+A :class:`SearchSpace` is an ordered tuple of bounded continuous
+:class:`Param` knobs.  Candidates travel through the search drivers as
+``(N, P)`` float arrays (one row per candidate, one column per knob) and are
+handed to objectives as ``{name: (N,) array}`` dicts — the representation
+:func:`repro.adapt.objective.apply_params` maps onto
+:class:`repro.fleet.state.FleetConfig` fields.
+
+Recognised names (see :mod:`repro.adapt.objective`): ``eta``,
+``e_opt_fraction``, ``exit_threshold`` (shared across units) and
+``exit_thr_<u>`` (per-unit utility-test thresholds).  The space itself is
+name-agnostic, so synthetic objectives can use any names.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """One bounded continuous knob."""
+
+    name: str
+    low: float
+    high: float
+
+    def __post_init__(self):
+        if not self.high > self.low:
+            raise ValueError(f"{self.name}: high must exceed low")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    params: Tuple[Param, ...]
+
+    @classmethod
+    def of(cls, **bounds: Sequence[float]) -> "SearchSpace":
+        """``SearchSpace.of(eta=(0.05, 1.0), e_opt_fraction=(0.05, 0.95))``"""
+        return cls(tuple(Param(k, float(lo), float(hi))
+                         for k, (lo, hi) in bounds.items()))
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(p.name for p in self.params)
+
+    @property
+    def n_dims(self) -> int:
+        return len(self.params)
+
+    @property
+    def lows(self) -> np.ndarray:
+        return np.array([p.low for p in self.params], np.float64)
+
+    @property
+    def highs(self) -> np.ndarray:
+        return np.array([p.high for p in self.params], np.float64)
+
+    @property
+    def widths(self) -> np.ndarray:
+        return self.highs - self.lows
+
+    def center(self) -> np.ndarray:
+        return 0.5 * (self.lows + self.highs)
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """(n, P) uniform candidates."""
+        return rng.uniform(self.lows, self.highs, size=(n, self.n_dims))
+
+    def clip(self, x: np.ndarray) -> np.ndarray:
+        return np.clip(x, self.lows, self.highs)
+
+    def grid(self, budget: int) -> np.ndarray:
+        """The largest full-factorial lattice that fits in ``budget``
+        evaluations: ``r = floor(budget ** (1/P))`` points per dim."""
+        r = max(2, int(np.floor(budget ** (1.0 / self.n_dims))))
+        axes = [np.linspace(p.low, p.high, r) for p in self.params]
+        mesh = np.meshgrid(*axes, indexing="ij")
+        return np.stack([m.ravel() for m in mesh], axis=1)
+
+    def to_dict(self, x: np.ndarray) -> Mapping[str, np.ndarray]:
+        """(N, P) candidate block -> {name: (N,) column} for objectives."""
+        x = np.atleast_2d(np.asarray(x, np.float64))
+        return {p.name: x[:, i] for i, p in enumerate(self.params)}

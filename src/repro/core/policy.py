@@ -32,6 +32,17 @@ NEG = -1e30
 _TIE = 1e-9
 
 
+def exit_test(margin, threshold):
+    """The utility test (paper §4.1): exit when the classifier margin clears
+    the per-unit threshold.  Strict ``>`` matches the host-side calibration
+    in :func:`repro.core.utility.calibrate_threshold` (and the precomputed
+    ``JobProfile.passes`` tables).  Polymorphic over floats and arrays so
+    the fleet simulator can evaluate it against *tuned* per-device
+    ``(D, U)`` threshold arrays instead of baked-in booleans.
+    """
+    return margin > threshold
+
+
 def zeta_priority(laxity, utility, mandatory, alpha, beta):
     """Eq. 6 (continuous power): dynamic priority zeta.
 

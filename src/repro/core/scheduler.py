@@ -129,6 +129,19 @@ class CHRTClock(Clock):
     def read(self, t: float, rng: np.random.Generator) -> float:
         return t + rng.choice(self.choices, p=self.probs)
 
+    def mean_error(self) -> float:
+        """Expected per-read clock error (seconds); ~+0.165 s for the paper's
+        Table-5 CHRT distribution (the remanence timekeeper reads fast)."""
+        return float((self.choices * self.probs).sum())
+
+    def equivalent_drift(self, horizon: float) -> float:
+        """Constant drift *rate* for the fleet path's deterministic clock
+        model ``t_read = t * (1 + r)``.  The scalar model redraws an iid
+        offset every read, so its expected error is flat over time; matching
+        the time-averaged error over ``[0, horizon]`` (``r * horizon / 2``)
+        gives ``r = 2 * E[err] / horizon``."""
+        return 2.0 * self.mean_error() / float(horizon)
+
 
 # --------------------------------------------------------------------------- #
 # Priority functions (Eqs. 6-7) — thin Job-aware views over the pure array

@@ -24,6 +24,40 @@ def entropy_utility(probs: np.ndarray) -> np.ndarray:
     return -(p * np.log2(p)).sum(-1)
 
 
+def scalarized_objective(correct, released, deadline_misses=None,
+                         optional_units=None, units_executed=None, *,
+                         miss_weight: float = 0.0,
+                         optional_weight: float = 0.0):
+    """Scalar fleet-tuning reward: on-time accuracy with optional penalties.
+
+    The base term is ``correct / released`` — the fraction of released jobs
+    whose mandatory part finished before the deadline *and* whose final
+    prediction was right (the paper's headline "on-time accuracy" metric,
+    Figs. 17-20).  ``miss_weight`` subtracts the deadline-miss rate and
+    ``optional_weight`` adds the optional-unit fraction (rewarding deeper
+    execution when energy allows).
+
+    All inputs may be python scalars or ``(D,)`` arrays (the fleet device
+    axis); counts are cast to f32 and denominators clamped, so the result is
+    a smooth function of the count values — the property the
+    antithetic-perturbation ES gradients in :mod:`repro.adapt` rely on.
+    """
+    rel = jnp.maximum(jnp.asarray(released, jnp.float32), 1.0)
+    score = jnp.asarray(correct, jnp.float32) / rel
+    if miss_weight and deadline_misses is not None:
+        score = score - miss_weight * (
+            jnp.asarray(deadline_misses, jnp.float32) / rel)
+    if optional_weight and optional_units is not None:
+        if units_executed is None:
+            raise ValueError(
+                "optional_weight needs both optional_units and "
+                "units_executed")
+        units = jnp.maximum(jnp.asarray(units_executed, jnp.float32), 1.0)
+        score = score + optional_weight * (
+            jnp.asarray(optional_units, jnp.float32) / units)
+    return score
+
+
 def calibrate_threshold(
     uc: UnitClassifier,
     feats: np.ndarray,

@@ -21,7 +21,7 @@ from .grid import (  # noqa: F401
     stack_configs,
     sweep,
 )
-from .simulator import simulate_fleet  # noqa: F401
+from .simulator import simulate_fleet, simulate_fleet_sharded  # noqa: F401
 from .state import (  # noqa: F401
     DeviceState,
     FleetConfig,

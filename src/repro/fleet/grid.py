@@ -60,8 +60,16 @@ def device_config(
     e_opt_fraction: float = 0.7,
     e_man: Optional[float] = None,
     start_charged: bool = False,
+    clock_drift: float = 0.0,
+    exit_thresholds: Optional[np.ndarray] = None,
 ) -> dict:
-    """One device's configuration as a dict of (unbatched) numpy arrays."""
+    """One device's configuration as a dict of (unbatched) numpy arrays.
+
+    ``clock_drift`` is the fleet CHRT model's linear drift rate (0 = exact
+    RTC).  ``exit_thresholds`` (shape ``(U,)``) switches the utility test
+    from the precomputed ``passes`` table to a live margin-vs-threshold
+    comparison — the knob :mod:`repro.adapt` tunes.
+    """
     if task.release_jitter:
         raise ValueError("fleet simulator requires release_jitter == 0")
     unit_time = np.asarray(task.unit_time, _F32)
@@ -84,6 +92,10 @@ def device_config(
         start_energy=_F32(cap.capacity_j if start_charged else -debt),
         e_man=_F32(max_frag_e if e_man is None else e_man),
         e_opt=_F32(e_opt_fraction * cap.capacity_j),
+        clock_drift=_F32(clock_drift),
+        use_exit_thr=np.bool_(exit_thresholds is not None),
+        exit_thr=np.zeros(len(unit_time), _F32) if exit_thresholds is None
+        else np.asarray(exit_thresholds, _F32),
         power_on=_F32(harvester.power_on),
         period=_F32(task.period),
         rel_deadline=_F32(task.deadline),
@@ -128,9 +140,15 @@ def from_sim_config(
     the parity-test bridge between the scalar and fleet paths."""
     sim = sim or SimConfig()
     cap = cap or Capacitor()
+    clock_drift = 0.0
     if type(sim.clock) is not Clock:
-        raise NotImplementedError(
-            "fleet path models an exact RTC; CHRT clock error is scalar-only")
+        if hasattr(sim.clock, "equivalent_drift"):
+            # fleet CHRT model: the scalar clock's random per-read error maps
+            # onto a deterministic per-device drift rate
+            clock_drift = sim.clock.equivalent_drift(sim.horizon)
+        else:
+            raise NotImplementedError(
+                f"fleet path has no model for clock {type(sim.clock)}")
     # default dt = one fragment time: the scalar path's execution quantum
     dt = _check_dt(float(
         np.min(np.asarray(task.unit_time)) / task.fragments_per_unit
@@ -142,7 +160,7 @@ def from_sim_config(
         policy=sim.policy, horizon=sim.horizon,
         events=sample_events(harvester, sim.horizon, sim.seed),
         e_opt_fraction=sim.e_opt_fraction, e_man=sim.e_man,
-        start_charged=sim.start_charged,
+        start_charged=sim.start_charged, clock_drift=clock_drift,
     )
     return stack_configs([dev]), statics
 
@@ -163,6 +181,7 @@ class SweepGrid:
     harvesters: Sequence[Harvester] = ()
     capacitors: Sequence[Capacitor] = ()
     seeds: Sequence[int] = (0,)
+    clock_drifts: Sequence[float] = (0.0,)   # fleet CHRT drift-rate axis
     horizon: float = 600.0
     dt: Optional[float] = None      # default: one fragment time
     queue_size: int = 3
@@ -178,9 +197,10 @@ class SweepGrid:
                 for hi, h in enumerate(harvesters):
                     for cap in capacitors:
                         for seed in self.seeds:
-                            yield dict(policy=pol, eta=eta, harvester=h,
-                                       harvester_idx=hi, capacitor=cap,
-                                       seed=seed)
+                            for drift in self.clock_drifts:
+                                yield dict(policy=pol, eta=eta, harvester=h,
+                                           harvester_idx=hi, capacitor=cap,
+                                           seed=seed, clock_drift=drift)
 
 
 def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
@@ -212,22 +232,28 @@ def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
             events=events_cache[key],
             e_opt_fraction=grid.e_opt_fraction, e_man=grid.e_man,
             start_charged=grid.start_charged,
+            clock_drift=pt["clock_drift"],
         ))
         meta.append(dict(
             policy=pt["policy"], eta=pt["eta"],
             harvester=pt["harvester"].name, seed=pt["seed"],
             capacitance_f=pt["capacitor"].capacitance_f,
+            clock_drift=pt["clock_drift"],
         ))
     return stack_configs(devices), statics, meta
 
 
-def sweep(grid: SweepGrid, use_pallas: bool = False):
+def sweep(grid: SweepGrid, use_pallas: bool = False, mesh=None):
     """Simulate the whole grid in one jitted call.
 
     Returns ``(FleetResult, meta)``: stacked (D,) metric arrays plus the
-    per-device metadata rows identifying each grid point.
+    per-device metadata rows identifying each grid point.  ``mesh`` (e.g.
+    :func:`repro.launch.mesh.make_fleet_mesh`) partitions the device axis
+    across backends — results are bit-identical to the unsharded call.
     """
-    from .simulator import simulate_fleet
+    from .simulator import simulate_fleet_sharded
 
     cfg, statics, meta = build(grid)
-    return simulate_fleet(cfg, statics, use_pallas=use_pallas), meta
+    res = simulate_fleet_sharded(cfg, statics, mesh=mesh,
+                                 use_pallas=use_pallas)
+    return res, meta

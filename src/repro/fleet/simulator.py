@@ -96,7 +96,10 @@ def _admit(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
 
 
 def _drop_expired(cfg: FleetConfig, st: DeviceState, t):
-    expired = st.q_active & (t >= st.q_deadline)
+    # the device expires jobs against its *drifting* clock (fleet CHRT
+    # model): a fast clock (drift > 0) drops jobs before their true deadline
+    t_read = t * (1.0 + cfg.clock_drift)
+    expired = st.q_active & (t_read >= st.q_deadline)
     d_sched, d_corr, d_miss = _finish_counts(cfg, st, expired)
     return st._replace(
         q_active=st.q_active & ~expired,
@@ -190,8 +193,13 @@ def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
     unit = jnp.where(complete, st.q_unit + 1, st.q_unit)
     time_left = jnp.where(complete, cfg.unit_time[next_u], time_left)
 
-    # utility test at the unit boundary (imprecise policies only)
-    exit_now = complete & cfg.imprecise & (st.q_exited < 0) & cfg.passes[job, u]
+    # utility test at the unit boundary (imprecise policies only); tuned
+    # per-unit thresholds (repro.adapt) re-evaluate the test against the
+    # live margin, otherwise the precomputed passes table applies
+    passed = jnp.where(cfg.use_exit_thr,
+                       P.exit_test(cfg.margins[job, u], cfg.exit_thr[u]),
+                       cfg.passes[job, u])
+    exit_now = complete & cfg.imprecise & (st.q_exited < 0) & passed
     exited = jnp.where(exit_now, u, st.q_exited)
     # never-confident full execution => the whole DNN was mandatory
     full_mand = complete & (exited < 0) & (st.q_unit + 1 >= cfg.n_units)
@@ -283,3 +291,28 @@ def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
 
     states, _ = lax.scan(step, states0, jnp.arange(statics.n_steps))
     return jax.vmap(lambda c, s: _finalize(c, s, statics))(cfg, states)
+
+
+def simulate_fleet_sharded(cfg: FleetConfig, statics: FleetStatics,
+                           mesh=None, use_pallas: bool = False) -> FleetResult:
+    """:func:`simulate_fleet` with the device axis partitioned over ``mesh``.
+
+    The fleet axis is embarrassingly parallel (no cross-device collectives in
+    the scan body), so placing each ``FleetConfig`` leaf with a
+    ``NamedSharding`` over its leading axis lets GSPMD split the whole
+    simulation across the mesh devices with zero communication.  The device
+    count is padded up to a mesh-size multiple (wrapping around the existing
+    configs) and the padding is stripped from the result, so the output is
+    bit-identical to the unsharded call for every real device.
+
+    ``mesh=None`` falls back to the plain single-backend path.
+    """
+    if mesh is None:
+        return simulate_fleet(cfg, statics, use_pallas=use_pallas)
+    # local import: repro.launch is a heavier dependency tree than the fleet
+    from ..launch.sharding import shard_fleet_config
+
+    n_real = cfg.n_devices
+    cfg = shard_fleet_config(mesh, cfg)
+    res = simulate_fleet(cfg, statics, use_pallas=use_pallas)
+    return jax.tree.map(lambda x: x[:n_real], res)

@@ -56,6 +56,16 @@ class FleetConfig(NamedTuple):
     e_opt: jax.Array         # f32, Eq. 7 optional-unit energy threshold
     power_on: jax.Array      # f32, harvester power in the ON state (W)
     # task stream, (D,)
+    # timekeeping: deterministic linear clock drift (fleet-path CHRT model;
+    # the scalar CHRTClock's random per-read offset has no batched
+    # equivalent, so the fleet models the *accumulated* error as a rate:
+    # t_read = t * (1 + clock_drift))
+    clock_drift: jax.Array   # f32, (D,); 0 = exact RTC
+    # tunable per-unit utility-test thresholds (repro.adapt): when
+    # use_exit_thr is set the utility test compares the live margin against
+    # exit_thr instead of the precomputed `passes` table
+    use_exit_thr: jax.Array  # bool, (D,)
+    exit_thr: jax.Array      # (D, U) f32
     period: jax.Array        # f32
     rel_deadline: jax.Array  # f32, relative deadline
     fragments: jax.Array     # f32, fragments per unit

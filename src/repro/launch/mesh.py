@@ -49,6 +49,15 @@ def make_host_mesh() -> Mesh:
     return make_mesh((1, 1), ("data", "model"))
 
 
+def make_fleet_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D ("dev",) mesh for the fleet simulator's embarrassingly-parallel
+    device axis (`repro.fleet` / `repro.adapt`): every backend simulates an
+    independent slice of the candidate × harvester × seed population.
+    Defaults to all visible devices."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return make_mesh((n,), ("dev",))
+
+
 def logical_rules(mesh: Mesh) -> Mapping[str, object]:
     """Logical-axis -> mesh-axis mapping used by ``models.common.shard``."""
     has_pod = "pod" in mesh.axis_names

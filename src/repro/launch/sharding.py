@@ -204,3 +204,37 @@ def named(mesh: Mesh, spec_tree: Any) -> Any:
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda s: isinstance(s, P),
     )
+
+
+# --------------------------------------------------------------------------- #
+# Fleet device-axis sharding (repro.fleet / repro.adapt).
+# --------------------------------------------------------------------------- #
+
+
+def fleet_specs(mesh: Mesh, cfg: Any) -> Any:
+    """PartitionSpecs for a :class:`repro.fleet.state.FleetConfig` (or any
+    pytree of ``(D, ...)`` leaves): the leading device axis shards over the
+    whole mesh, trailing dims (workload tables, event streams) replicate.
+    """
+    axes = tuple(mesh.axis_names)
+    return jax.tree.map(lambda l: P(axes, *([None] * (l.ndim - 1))), cfg)
+
+
+def shard_fleet_config(mesh: Mesh, cfg: Any) -> Any:
+    """Place a FleetConfig with its device axis partitioned over ``mesh``.
+
+    The fleet axis is data-parallel with no collectives, so this is the only
+    placement the simulator needs.  ``D`` is padded up to a mesh-size
+    multiple by wrapping around the existing devices (every shard then holds
+    valid configs); callers slice results back to the real device count.
+    """
+    d = jax.tree.leaves(cfg)[0].shape[0]
+    n = mesh.size
+    pad = (-d) % n
+    if pad:
+        idx = jax.numpy.arange(d + pad) % d
+        cfg = jax.tree.map(lambda l: l[idx], cfg)
+    return jax.tree.map(
+        lambda l, s: jax.device_put(l, NamedSharding(mesh, s)),
+        cfg, fleet_specs(mesh, cfg),
+    )
