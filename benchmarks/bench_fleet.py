@@ -3,8 +3,12 @@
 
 Sweeps the paper's scheduler grid (policy × eta × harvester × capacitor ×
 seed) at 1000 device-configs and reports devices/sec for each execution
-path.  The scalar number extrapolates from a sample of grid points (running
-all 1000 through the python event loop would take minutes); the batched
+path, then re-times the batched path on a K=4 multi-task workload (four
+contending streams per device) against the K=1 baseline — the throughput
+axis the task-set refactor added (rows carry ``n_tasks`` and
+``device_steps_per_sec`` so the two are comparable per simulated step).
+The scalar number extrapolates from a sample of grid points (running all
+1000 through the python event loop would take minutes); the batched
 numbers time the full fleet after a warm-up call, so compilation is
 excluded.  On this CPU container the Pallas path runs in ``interpret``
 mode — it validates the kernel against the jnp path rather than racing it;
@@ -23,16 +27,29 @@ from repro.core.scheduler import JobProfile, SimConfig, TaskSpec, simulate
 from .common import emit
 
 
-def _task(n_jobs=25, n_units=4, exit_at=1):
+def _task(n_jobs=25, n_units=4, exit_at=1, task_id=0, period=1.0,
+          deadline=2.0, unit_t=0.1):
     margins = np.linspace(0.05, 0.5, n_units)
     passes = np.zeros(n_units, bool)
     passes[exit_at:] = True
     prof = JobProfile(margins, passes, np.ones(n_units, bool))
     return TaskSpec(
-        task_id=0, period=1.0, deadline=2.0,
-        unit_time=np.full(n_units, 0.1),
+        task_id=task_id, period=period, deadline=deadline,
+        unit_time=np.full(n_units, unit_t),
         unit_energy=np.full(n_units, 8e-3),
         profiles=[prof] * n_jobs,
+    )
+
+
+def _task_set(k=4, n_jobs=25):
+    """K contending streams with staggered periods/deadlines (audio+camera
+    style); unit times stay multiples of the K=1 task's fragment time so
+    the fixed timestep — and therefore the step count — matches the K=1
+    baseline and the rates are comparable."""
+    return tuple(
+        _task(n_jobs=n_jobs, task_id=i, period=1.0 + 0.25 * i,
+              deadline=2.0 + 0.5 * i, n_units=3 + i % 2)
+        for i in range(k)
     )
 
 
@@ -85,17 +102,36 @@ def run(quick: bool = True) -> None:
     pallas_t, res_p = _time_fleet(cfg, statics, use_pallas=True)
     assert (np.asarray(res_v.scheduled) == np.asarray(res_p.scheduled)).all()
 
+    # multi-task axis: same grid shape, K=4 contending streams per device
+    grid_k4 = _grid(_task_set(4), horizon)
+    cfg4, statics4, _ = fleet.build(grid_k4)
+    assert statics4.n_steps == statics.n_steps
+    k4_t, res_k4 = _time_fleet(cfg4, statics4, use_pallas=False)
+    assert (np.asarray(res_k4.task_scheduled).sum(axis=1)
+            == np.asarray(res_k4.scheduled)).all()
+
+    def dsteps(wall: float, statics_) -> float:
+        return round(n_dev * statics_.n_steps / wall, 1)
+
     rows = [
-        dict(mode="scalar_loop", devices=len(sample),
+        dict(mode="scalar_loop", devices=len(sample), n_tasks=1,
              wall_s=round(scalar_s * n_dev, 3),
              devices_per_sec=round(scalar_rate, 1), speedup=1.0),
-        dict(mode="vmap_scan", devices=n_dev, wall_s=round(vmap_t, 3),
+        dict(mode="vmap_scan", devices=n_dev, n_tasks=1,
+             wall_s=round(vmap_t, 3),
              devices_per_sec=round(n_dev / vmap_t, 1),
+             device_steps_per_sec=dsteps(vmap_t, statics),
              speedup=round(n_dev / vmap_t / scalar_rate, 1)),
-        dict(mode="pallas_interpret", devices=n_dev,
+        dict(mode="pallas_interpret", devices=n_dev, n_tasks=1,
              wall_s=round(pallas_t, 3),
              devices_per_sec=round(n_dev / pallas_t, 1),
+             device_steps_per_sec=dsteps(pallas_t, statics),
              speedup=round(n_dev / pallas_t / scalar_rate, 1)),
+        dict(mode="vmap_scan_multitask", devices=n_dev, n_tasks=4,
+             wall_s=round(k4_t, 3),
+             devices_per_sec=round(n_dev / k4_t, 1),
+             device_steps_per_sec=dsteps(k4_t, statics4),
+             k1_relative=round(vmap_t / k4_t, 3)),
     ]
     emit("fleet_throughput", rows)
 

@@ -1,0 +1,87 @@
+"""Multi-task fleet sweep: two contending DNN streams per device.
+
+Models the paper's multi-app deployments (§3, §5): an audio-style task
+(fast period, tight deadline, shallow 3-unit network) and a camera-style
+task (slower period, loose deadline, deeper 5-unit network) share one
+harvested-energy budget on every device.  A policy × eta sweep then prints
+the per-task on-time rate per policy — the ``FleetResult.task_*``
+breakdown the task-set axis added — showing how the imprecise policies
+protect the tight audio deadlines by sacrificing the camera task's
+optional units, where EDF (full execution, no early exit) lets both
+streams starve.
+
+Run: ``PYTHONPATH=src python examples/fleet_multitask.py``
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from repro import fleet
+from repro.core import energy
+from repro.core.scheduler import JobProfile, TaskSpec
+
+
+def make_task(task_id, name, period, deadline, n_units, unit_t, exit_at,
+              n_jobs=40):
+    margins = np.linspace(0.05, 0.5, n_units)
+    passes = np.zeros(n_units, bool)
+    passes[exit_at:] = True
+    prof = JobProfile(margins, passes, np.ones(n_units, bool))
+    task = TaskSpec(
+        task_id=task_id, period=period, deadline=deadline,
+        unit_time=np.full(n_units, unit_t),
+        unit_energy=np.full(n_units, 8e-3),
+        profiles=[prof] * n_jobs,
+    )
+    return name, task
+
+
+def main() -> None:
+    names_tasks = (
+        # audio: keyword spotting — fast period, tight deadline, shallow net
+        make_task(0, "audio", period=0.6, deadline=1.0, n_units=3,
+                  unit_t=0.1, exit_at=0, n_jobs=60),
+        # camera: image classification — slow, slack-rich, deep net
+        make_task(1, "camera", period=1.6, deadline=4.0, n_units=5,
+                  unit_t=0.15, exit_at=1),
+    )
+    names = [n for n, _ in names_tasks]
+    grid = fleet.SweepGrid(
+        task=[t for _, t in names_tasks],
+        policies=("zygarde", "edf", "edf-m", "rr"),
+        etas=(0.5, 0.8, 1.0),
+        harvesters=(energy.Harvester("solar", 0.95, 0.95, 0.08),),
+        seeds=tuple(range(6)),
+        horizon=30.0,
+    )
+    res, meta = fleet.sweep(grid)
+    print(f"simulated {len(meta)} devices × {meta[0]['n_tasks']} tasks "
+          "in one jitted call\n")
+
+    released = np.asarray(res.task_released, np.float64)
+    scheduled = np.asarray(res.task_scheduled, np.float64)
+    on_time = scheduled / np.maximum(released, 1.0)      # (D, K)
+
+    cells = defaultdict(list)
+    for i, m in enumerate(meta):
+        cells[m["policy"]].append(on_time[i])
+
+    header = " ".join(f"{n:>8}" for n in names)
+    print(f"{'policy':>8} {header}   (per-task on-time rate, "
+          "mean over eta × seed)")
+    for pol in grid.policies:
+        rates = np.mean(cells[pol], axis=0)
+        row = " ".join(f"{r:8.2f}" for r in rates)
+        print(f"{pol:>8} {row}")
+
+    zyg = np.mean(cells["zygarde"], axis=0)
+    edf = np.mean(cells["edf"], axis=0)
+    print(f"\nzygarde keeps the tight {names[0]} deadlines at "
+          f"{zyg[0]:.2f} on-time vs edf's {edf[0]:.2f} by exiting the "
+          f"{names[1]} stream early when energy is scarce.")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,9 +21,17 @@ Recognised parameter names:
 
 * ``eta``             — the Eq. 7 energy-gate weight.
 * ``e_opt_fraction``  — E_opt as a fraction of capacitor capacity.
-* ``exit_threshold``  — one utility-test threshold shared by all units.
-* ``exit_thr_<u>``    — per-unit utility-test thresholds (set every unit;
-  unset units fall back to the base config's threshold column).
+* ``exit_threshold``  — one utility-test threshold shared by all units of
+  every task.
+* ``exit_thr_<u>``        — unit-``u`` threshold, shared by every task.
+* ``exit_thr_t<k>``       — one threshold for all units of task ``k``.
+* ``exit_thr_t<k>_u<u>``  — the (task ``k``, unit ``u``) threshold cell.
+
+Unset cells fall back to the base config's threshold table.  The per-task
+names are what lets :func:`repro.adapt.search.tune` trade tasks off against
+each other — e.g. raise the slack-rich task's exit threshold (sacrificing
+its optional units) to buy the tight task's deadlines.  ``task_weights``
+scalarizes the per-task metric columns instead of the aggregate counts.
 """
 from __future__ import annotations
 
@@ -50,13 +58,31 @@ PAPER_E_OPT_FRACTION = 0.7
 Objective = Callable[[Mapping[str, np.ndarray]], np.ndarray]
 
 
+def _parse_exit_thr_name(suffix: str) -> tuple[Optional[int], Optional[int]]:
+    """``exit_thr_`` suffix -> (task, unit); None selects the whole axis.
+
+    ``"2"`` -> (None, 2); ``"t1"`` -> (1, None); ``"t1_u3"`` -> (1, 3).
+    """
+    if suffix.isdigit():
+        return None, int(suffix)
+    if suffix.startswith("t"):
+        task_part, _, unit_part = suffix[1:].partition("_")
+        if task_part.isdigit() and not unit_part:
+            return int(task_part), None
+        if (task_part.isdigit() and unit_part.startswith("u")
+                and unit_part[1:].isdigit()):
+            return int(task_part), int(unit_part[1:])
+    raise KeyError(f"malformed exit_thr parameter suffix {suffix!r}")
+
+
 def apply_params(cfg: FleetConfig, params: Mapping[str, jax.Array]
                  ) -> FleetConfig:
     """Thread tuned parameter arrays into a FleetConfig, one value per
     device.  This is the array-typed counterpart of the python scalars in
     :func:`repro.fleet.grid.device_config` — the priority math in
     :mod:`repro.core.policy` consumes the resulting ``(D,)`` fields
-    unchanged.
+    unchanged.  Exit-threshold names address cells of the ``(D, K, U)``
+    per-task threshold table (see the module docstring).
     """
     upd: dict = {}
     exit_thr = cfg.exit_thr
@@ -73,11 +99,16 @@ def apply_params(cfg: FleetConfig, params: Mapping[str, jax.Array]
         elif name == "e_opt_fraction":
             upd["e_opt"] = jnp.broadcast_to(v, cfg.eta.shape) * cfg.capacity
         elif name == "exit_threshold":
-            exit_thr = jnp.broadcast_to(v[..., None], exit_thr.shape)
+            exit_thr = jnp.broadcast_to(v[..., None, None], exit_thr.shape)
             tune_thr = True
         elif name.startswith("exit_thr_"):
-            u = int(name[len("exit_thr_"):])
-            exit_thr = exit_thr.at[:, u].set(v)
+            task, unit = _parse_exit_thr_name(name[len("exit_thr_"):])
+            if task is None:
+                exit_thr = exit_thr.at[:, :, unit].set(v[:, None])
+            elif unit is None:
+                exit_thr = exit_thr.at[:, task, :].set(v[:, None])
+            else:
+                exit_thr = exit_thr.at[:, task, unit].set(v)
             tune_thr = True
         else:
             raise KeyError(f"unknown tunable parameter {name!r}")
@@ -89,9 +120,16 @@ def apply_params(cfg: FleetConfig, params: Mapping[str, jax.Array]
 
 @dataclasses.dataclass(frozen=True)
 class TuneProblem:
-    """A fixed deployment whose scheduler parameters are to be tuned."""
+    """A fixed deployment whose scheduler parameters are to be tuned.
 
-    task: TaskSpec
+    ``task`` accepts one :class:`TaskSpec` or a whole task set (any
+    sequence) — each simulated device then runs all ``K`` streams against
+    one shared energy budget, and ``task_weights`` (length ``K``) switches
+    the objective from the aggregate on-time accuracy to a weighted mean of
+    the per-task accuracies, so ``tune()`` can trade tasks off against each
+    other."""
+
+    task: fgrid.TaskSet
     harvesters: Sequence[Harvester]
     capacitor: Capacitor = dataclasses.field(default_factory=Capacitor)
     seeds: Sequence[int] = (0, 1)
@@ -103,12 +141,18 @@ class TuneProblem:
     clock_drift: float = 0.0            # fleet CHRT drift rate
     miss_weight: float = 0.0            # scalarization penalties
     optional_weight: float = 0.0
-    # base per-unit utility-test thresholds, (U,).  Candidates that tune only
-    # some `exit_thr_<u>` columns inherit the remaining columns from here;
-    # None keeps the workload's precomputed `passes` table for un-tuned
-    # candidates (and zeros as the inherited columns).
+    # per-task scalarization weights, (K,); None = aggregate counts
+    task_weights: Optional[Sequence[float]] = None
+    # base per-unit utility-test thresholds, (U,) shared or (K, U) per task.
+    # Candidates that tune only some `exit_thr_*` cells inherit the rest
+    # from here; None keeps the workload's precomputed `passes` table for
+    # un-tuned candidates (and zeros as the inherited cells).
     exit_thresholds: Optional[Sequence[float]] = None
     mesh: Optional[object] = None       # jax Mesh: shard the population
+
+    @property
+    def tasks(self) -> tuple[TaskSpec, ...]:
+        return fgrid.as_task_set(self.task)
 
     @property
     def n_cells(self) -> int:
@@ -119,13 +163,17 @@ class TuneProblem:
         """One device per (harvester, seed) cell, paper-default parameters."""
         if not self.harvesters:
             raise ValueError("TuneProblem needs at least one harvester")
+        tasks = self.tasks
+        if self.task_weights is not None and (
+                len(self.task_weights) != len(tasks)):
+            raise ValueError("task_weights length must match the task set")
         slot_lens = {h.slot_s for h in self.harvesters}
         if len(slot_lens) != 1:
             raise ValueError("all harvesters in one problem must share slot_s")
         dt = self.dt
         if dt is None:
-            dt = float(np.min(np.asarray(self.task.unit_time))
-                       / self.task.fragments_per_unit)
+            dt = min(float(np.min(np.asarray(t.unit_time))
+                           / t.fragments_per_unit) for t in tasks)
         # paper-default eta per harvester, so knobs the search space omits
         # sit at the measured operating point rather than a hardcoded
         # constant (it also keeps the derived `persistent` flag honest:
@@ -135,7 +183,7 @@ class TuneProblem:
         for h, eta in zip(self.harvesters, etas):
             for s in self.seeds:
                 devices.append(fgrid.device_config(
-                    self.task, h, eta, self.capacitor,
+                    tasks, h, eta, self.capacitor,
                     policy=self.policy, horizon=self.horizon,
                     events=fgrid.sample_events(h, self.horizon, s),
                     e_opt_fraction=PAPER_E_OPT_FRACTION,
@@ -174,6 +222,10 @@ class TuneProblem:
         d0 = base.n_devices
         mesh = self.mesh
         miss_w, opt_w = self.miss_weight, self.optional_weight
+        task_w = None
+        if self.task_weights is not None:
+            w = jnp.asarray(self.task_weights, jnp.float32)
+            task_w = w / jnp.sum(w)
 
         @jax.jit
         def _eval(params):
@@ -193,10 +245,19 @@ class TuneProblem:
                         l, NamedSharding(mesh, s)),
                     cfg, fleet_specs(mesh, cfg))
             res = simulate_fleet(cfg, statics)
-            score = scalarized_objective(
-                res.correct, res.released, res.deadline_misses,
-                res.optional_units, res.units_executed,
-                miss_weight=miss_w, optional_weight=opt_w)
+            if task_w is None:
+                score = scalarized_objective(
+                    res.correct, res.released, res.deadline_misses,
+                    res.optional_units, res.units_executed,
+                    miss_weight=miss_w, optional_weight=opt_w)
+            else:
+                # per-task reward columns (D, K), weighted across the task
+                # set — the multi-task trade-off surface tune() climbs
+                per_task = scalarized_objective(
+                    res.task_correct, res.task_released, res.task_misses,
+                    res.task_optional, res.task_units,
+                    miss_weight=miss_w, optional_weight=opt_w)
+                score = jnp.sum(per_task * task_w[None, :], axis=1)
             return score.reshape(n, d0).mean(axis=1)
 
         def objective_fn(params: Mapping[str, np.ndarray]) -> np.ndarray:

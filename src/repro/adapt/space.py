@@ -8,8 +8,10 @@ handed to objectives as ``{name: (N,) array}`` dicts — the representation
 :class:`repro.fleet.state.FleetConfig` fields.
 
 Recognised names (see :mod:`repro.adapt.objective`): ``eta``,
-``e_opt_fraction``, ``exit_threshold`` (shared across units) and
-``exit_thr_<u>`` (per-unit utility-test thresholds).  The space itself is
+``e_opt_fraction``, ``exit_threshold`` (shared across tasks and units),
+``exit_thr_<u>`` (unit column, all tasks), ``exit_thr_t<k>`` (all units of
+task ``k``) and ``exit_thr_t<k>_u<u>`` (one task/unit cell) — the last two
+address the task-set axis of multi-task devices.  The space itself is
 name-agnostic, so synthetic objectives can use any names.
 """
 from __future__ import annotations

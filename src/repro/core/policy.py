@@ -31,6 +31,12 @@ NEG = -1e30
 # a scale far below any deadline difference.
 _TIE = 1e-9
 
+# Round-robin task rotation: the rotation distance of a slot's task from the
+# per-device cursor dominates the within-task FIFO release key.  Requires
+# releases (bounded by the horizon) to stay below this weight — true for any
+# horizon under ~10^4 s (the fleet grids run minutes, not hours).
+RR_TASK_W = 1e4
+
 
 def exit_test(margin, threshold):
     """The utility test (paper §4.1): exit when the classifier margin clears
@@ -83,19 +89,26 @@ def edfm_key(deadline, release, mandatory):
     return m * edf_key(deadline, release) + (1.0 - m) * NEG
 
 
-def rr_key(release):
-    """Round-robin at unit granularity degenerates to FIFO-by-release within
-    a task; the scalar simulator layers the task rotation on top."""
-    return -release
+def rr_key(release, task_rank=0.0):
+    """Round-robin at unit granularity: rotate across tasks, FIFO-by-release
+    within a task.  ``task_rank`` is the rotation distance of the slot's task
+    from the device's round-robin cursor (``(task - cursor) mod K``); with a
+    single task stream it is identically 0 and the key degenerates to the
+    pure FIFO ``-release`` (bit-identical to the pre-task-set fleet path).
+    The scalar simulator implements the same rotation imperatively."""
+    return -(task_rank * RR_TASK_W + release)
 
 
 def policy_scores(policy_id, active, laxity, release, utility, mandatory,
-                  alpha, beta, eta, energy, e_opt, persistent):
+                  alpha, beta, eta, energy, e_opt, persistent,
+                  task_rank=0.0):
     """Batched score matrix + validity threshold for every policy.
 
-    Queue-shaped args (``active`` .. ``mandatory``) carry a trailing queue
-    axis; per-device args (``policy_id`` .. ``persistent``) must broadcast
-    against them (callers pass ``x[..., None]`` shapes).  Returns
+    Queue-shaped args (``active`` .. ``mandatory``, ``task_rank``) carry a
+    trailing queue axis; per-device args (``policy_id`` .. ``persistent``)
+    must broadcast against them (callers pass ``x[..., None]`` shapes).
+    ``task_rank`` (the round-robin rotation distance of each slot's task,
+    0 for single-task devices) only enters the ``rr`` key.  Returns
     ``(scores, threshold)``: pick ``argmax(scores)`` and treat the device as
     idle when ``max(scores) <= threshold``.
     """
@@ -107,7 +120,7 @@ def policy_scores(policy_id, active, laxity, release, utility, mandatory,
     )
     edf = edf_key(laxity, release)
     edfm = edfm_key(laxity, release, mandatory)
-    rr = rr_key(release)
+    rr = rr_key(release, task_rank)
 
     scores = jnp.select(
         [policy_id == 0, policy_id == 1, policy_id == 2],

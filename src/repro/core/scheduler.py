@@ -184,9 +184,20 @@ class SimResult:
     reboots: int = 0
     wasted_reexec: float = 0.0
     sim_time: float = 0.0
+    # per-task breakdowns, (K,) int arrays aligned with the ``tasks`` argument
+    # of :func:`simulate` (aggregate counters above are their sums).  Mirrors
+    # the fleet path's ``FleetResult.task_*`` fields so the scalar↔fleet
+    # parity harness can compare per-task on-time/accuracy/drop counts.
+    task_released: Optional[np.ndarray] = None
+    task_scheduled: Optional[np.ndarray] = None
+    task_correct: Optional[np.ndarray] = None
+    task_misses: Optional[np.ndarray] = None
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        # per-task arrays become lists so the dict stays JSON-serializable
+        # (launch/serve.py dumps it verbatim)
+        return {k: v.tolist() if isinstance(v, np.ndarray) else v
+                for k, v in dataclasses.asdict(self).items()}
 
 
 @dataclass
@@ -216,7 +227,13 @@ def simulate(
     cap = dataclasses.replace(cap) if dataclasses.is_dataclass(cap) else cap
     cap.energy_j = cap.capacity_j if sim.start_charged else 0.0
     rng = np.random.default_rng(sim.seed)
-    res = SimResult()
+    res = SimResult(
+        task_released=np.zeros(len(tasks), np.int64),
+        task_scheduled=np.zeros(len(tasks), np.int64),
+        task_correct=np.zeros(len(tasks), np.int64),
+        task_misses=np.zeros(len(tasks), np.int64),
+    )
+    task_row = {t.task_id: i for i, t in enumerate(tasks)}
 
     max_frag_e = max(
         float(np.max(t.unit_energy)) / t.fragments_per_unit for t in tasks
@@ -243,6 +260,7 @@ def simulate(
             releases.append(
                 Job(task, j, rel, rel + task.deadline, task.profiles[j])
             )
+            res.task_released[task_row[task.task_id]] += 1
             t += task.period
             j += 1
     releases.sort(key=lambda job: job.release)
@@ -270,6 +288,7 @@ def simulate(
                 queue.append(releases[rel_idx])
             else:
                 res.deadline_misses += 1  # queue overflow = dropped
+                res.task_misses[task_row[releases[rel_idx].task.task_id]] += 1
             rel_idx += 1
 
     def drop_expired(t_now: float):
@@ -281,12 +300,16 @@ def simulate(
 
     def finish_job(job: Job):
         job.finished = True
+        k = task_row[job.task.task_id]
         if job.mandatory_met and job.mandatory_done_time <= job.deadline:
             res.scheduled += 1
+            res.task_scheduled[k] += 1
             if job.prediction_correct:
                 res.correct += 1
+                res.task_correct[k] += 1
         else:
             res.deadline_misses += 1
+            res.task_misses[k] += 1
 
     def pick(t_now: float) -> Optional[Job]:
         nonlocal rr_cursor
@@ -413,6 +436,7 @@ def simulate(
         finish_job(job)
     while rel_idx < len(releases):
         res.deadline_misses += 1
+        res.task_misses[task_row[releases[rel_idx].task.task_id]] += 1
         rel_idx += 1
     res.sim_time = t_now
     return res

@@ -4,16 +4,20 @@ One jitted call simulates thousands of independent intermittently-powered
 devices — the policy × eta × harvester × capacitor × seed grids behind the
 paper's Figs. 17-21 / 24-25 — with the whole simulation state in a single
 pytree stepped by ``jax.lax.scan`` and batched by ``jax.vmap`` (optionally
-with the Pallas ``fleet_priority`` kernel as the hot inner step).
+with the Pallas ``fleet_priority`` kernel as the hot inner step).  Each
+device runs a *task set*: K periodic DNN streams contending for one
+harvested-energy budget, with per-task ``(D, K)`` metrics in the result.
 
 Public API::
 
     result, meta = fleet.sweep(fleet.SweepGrid(task=..., policies=(...)))
     result = fleet.simulate_fleet(cfg, statics)          # pre-built configs
-    cfg, statics = fleet.from_sim_config(task, harv, eta, cap, sim)
+    cfg, statics = fleet.from_sim_config(tasks, harv, eta, cap, sim)
+    result.task_scheduled / result.task_released         # (D, K) on-time
 """
 from .grid import (  # noqa: F401
     SweepGrid,
+    as_task_set,
     build,
     device_config,
     from_sim_config,

@@ -6,6 +6,12 @@ Host-side (numpy) builders that translate the scalar simulator's objects —
 — into the stacked :class:`repro.fleet.state.FleetConfig` arrays consumed by
 :func:`repro.fleet.simulator.simulate_fleet`.
 
+Every builder accepts either one :class:`TaskSpec` or a *task set* (any
+sequence of them), mirroring the scalar ``simulate(tasks, ...)`` signature:
+the per-task tables are stacked on the ``K`` axis, padded to a common
+``U`` (units) / ``J`` (jobs) so heterogeneous task sets share one array —
+the live region is bounded by the per-task ``n_units`` / ``n_releases``.
+
 The cartesian sweep mirrors the paper's benchmark grids (Figs. 17-21, 24-25):
 policy × eta × harvester pattern × capacitor size × seed, one device per
 grid point, all simulated by a single jitted call.
@@ -13,8 +19,7 @@ grid point, all simulated by a single jitted call.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
@@ -27,29 +32,77 @@ from .state import FleetConfig, FleetStatics
 
 _F32 = np.float32
 
+TaskSet = Union[TaskSpec, Sequence[TaskSpec]]
+
+
+def as_task_set(tasks: TaskSet) -> tuple[TaskSpec, ...]:
+    """Normalise a single TaskSpec or a sequence of them to a tuple."""
+    if isinstance(tasks, TaskSpec):
+        return (tasks,)
+    out = tuple(tasks)
+    if not out:
+        raise ValueError("empty task set")
+    if len({t.task_id for t in out}) != len(out):
+        raise ValueError("task_ids within one task set must be unique")
+    return out
+
 
 def _n_releases(task: TaskSpec, horizon: float) -> int:
-    # matches the scalar release loop: while t < horizon and j < len(profiles)
-    within = int(math.ceil(horizon / task.period - 1e-12))
-    return min(len(task.profiles), max(within, 0))
+    # replicates the scalar release loop bit-for-bit — including its float
+    # *accumulation* of t += period, which can slip one extra release under
+    # the horizon when the period is not exactly representable (e.g. 1.2 s
+    # accumulated 10× is 11.999999999999998 < 12.0, where the closed-form
+    # ceil(horizon / period) says 10)
+    t, j = 0.0, 0
+    while t < horizon and j < len(task.profiles):
+        t += task.period
+        j += 1
+    return j
 
 
-def _check_dt(dt: float, task: TaskSpec) -> float:
-    """The fixed timestep must stay within one fragment time (else a step's
-    continuous drain exceeds the energy gate and the capacitor goes
-    negative) and below the period (admission is one job per step)."""
-    frag_t = float(np.min(np.asarray(task.unit_time)) / task.fragments_per_unit)
+def _check_dt(dt: float, tasks: TaskSet) -> float:
+    """The fixed timestep must stay within one fragment time of every task
+    (else a step's continuous drain exceeds the energy gate and the
+    capacitor goes negative) and below every period (admission is one job
+    per task per step)."""
+    tasks = as_task_set(tasks)
+    frag_t = min(
+        float(np.min(np.asarray(t.unit_time)) / t.fragments_per_unit)
+        for t in tasks)
     if dt > frag_t * (1 + 1e-9):
         raise ValueError(
             f"dt={dt} exceeds one fragment time ({frag_t}); the energy gate "
             "only covers one fragment of drain per step")
-    if dt >= task.period:
-        raise ValueError("dt must be smaller than the task period")
+    if dt >= min(t.period for t in tasks):
+        raise ValueError("dt must be smaller than every task period")
     return dt
 
 
+def _default_dt(tasks: TaskSet) -> float:
+    """One fragment time of the finest-grained task — the scalar path's
+    execution quantum."""
+    return min(
+        float(np.min(np.asarray(t.unit_time)) / t.fragments_per_unit)
+        for t in as_task_set(tasks))
+
+
+def _pad_trailing(a: np.ndarray, shape: tuple, edge_axes: tuple) -> np.ndarray:
+    """Zero/edge-pad ``a`` up to ``shape``; axes in ``edge_axes`` replicate
+    the last valid entry (keeps padded unit times nonzero so the drain
+    division in the simulator stays finite — the padding is never read by an
+    active queue slot)."""
+    widths = [(0, s - d) for s, d in zip(shape, a.shape)]
+    if not any(w for _, w in widths):
+        return a
+    if edge_axes:
+        a = np.pad(a, [w if i in edge_axes else (0, 0)
+                       for i, w in enumerate(widths)], mode="edge")
+        widths = [(0, s - d) for s, d in zip(shape, a.shape)]
+    return np.pad(a, widths, mode="constant")
+
+
 def device_config(
-    task: TaskSpec,
+    tasks: TaskSet,
     harvester: Harvester,
     eta: float,
     cap: Capacitor,
@@ -65,27 +118,66 @@ def device_config(
 ) -> dict:
     """One device's configuration as a dict of (unbatched) numpy arrays.
 
-    ``clock_drift`` is the fleet CHRT model's linear drift rate (0 = exact
-    RTC).  ``exit_thresholds`` (shape ``(U,)``) switches the utility test
-    from the precomputed ``passes`` table to a live margin-vs-threshold
-    comparison — the knob :mod:`repro.adapt` tunes.
+    ``tasks`` is the device's task set (one TaskSpec or a sequence); the
+    per-task tables land on a leading ``K`` axis.  ``clock_drift`` is the
+    fleet CHRT model's linear drift rate (0 = exact RTC).
+    ``exit_thresholds`` (shape ``(U,)`` shared by every task, or ``(K, U)``
+    per task) switches the utility test from the precomputed ``passes``
+    table to a live margin-vs-threshold comparison — the knob
+    :mod:`repro.adapt` tunes.
     """
-    if task.release_jitter:
+    tasks = as_task_set(tasks)
+    if any(t.release_jitter for t in tasks):
         raise ValueError("fleet simulator requires release_jitter == 0")
-    unit_time = np.asarray(task.unit_time, _F32)
-    unit_energy = np.asarray(task.unit_energy, _F32)
-    margins = np.stack([np.asarray(p.margins, _F32) for p in task.profiles])
-    passes = np.stack([np.asarray(p.passes, bool) for p in task.profiles])
-    correct = np.stack([np.asarray(p.correct, bool) for p in task.profiles])
+    if policy == "rr" and len(tasks) > 1 and horizon >= P.RR_TASK_W:
+        # the rr task-rotation rank outweighs releases only below this
+        # horizon (repro.core.policy.RR_TASK_W); beyond it the rotation
+        # would silently lose to release order
+        raise ValueError(
+            f"rr task rotation requires horizon < {P.RR_TASK_W:g} s "
+            f"(got {horizon}); releases must stay below the rotation weight")
+    n_units = np.array([len(t.unit_time) for t in tasks], np.int32)
+    u_max = int(n_units.max())
+    j_max = max(len(t.profiles) for t in tasks)
 
-    max_frag_e = float(unit_energy.max()) / task.fragments_per_unit
+    unit_time = np.stack([
+        _pad_trailing(np.asarray(t.unit_time, _F32), (u_max,), (0,))
+        for t in tasks])
+    unit_energy = np.stack([
+        _pad_trailing(np.asarray(t.unit_energy, _F32), (u_max,), (0,))
+        for t in tasks])
+
+    def profile_table(t: TaskSpec, field: str, dtype) -> np.ndarray:
+        tab = np.stack([np.asarray(getattr(p, field), dtype)
+                        for p in t.profiles])
+        return _pad_trailing(tab, (j_max, u_max), (1,))
+
+    margins = np.stack([profile_table(t, "margins", _F32) for t in tasks])
+    passes = np.stack([profile_table(t, "passes", bool) for t in tasks])
+    correct = np.stack([profile_table(t, "correct", bool) for t in tasks])
+
+    if exit_thresholds is None:
+        exit_thr = np.zeros((len(tasks), u_max), _F32)
+    else:
+        exit_thr = np.asarray(exit_thresholds, _F32)
+        if exit_thr.ndim == 1:
+            exit_thr = np.broadcast_to(
+                _pad_trailing(exit_thr, (u_max,), (0,)),
+                (len(tasks), u_max)).copy()
+        else:
+            exit_thr = _pad_trailing(exit_thr, (len(tasks), u_max), (1,))
+
+    # scalar-path normalisation: alpha from the *longest* relative deadline
+    # in the set, the fragment-energy floor from the most expensive fragment
+    max_frag_e = max(float(np.max(np.asarray(t.unit_energy)))
+                     / t.fragments_per_unit for t in tasks)
     debt = 0.5 * cap.capacitance_f * cap.v_min ** 2
     return dict(
         policy=np.int32(P.POLICY_IDS[policy]),
         imprecise=np.bool_(policy in P.IMPRECISE_POLICIES),
         is_edfm=np.bool_(policy == "edf-m"),
         eta=_F32(eta),
-        alpha=_F32(1.0 / task.deadline),
+        alpha=_F32(1.0 / max(t.deadline for t in tasks)),
         beta=_F32(1.0),
         persistent=np.bool_(eta >= 1.0 and harvester.p_stay_on >= 1.0),
         capacity=_F32(cap.capacity_j),
@@ -94,14 +186,14 @@ def device_config(
         e_opt=_F32(e_opt_fraction * cap.capacity_j),
         clock_drift=_F32(clock_drift),
         use_exit_thr=np.bool_(exit_thresholds is not None),
-        exit_thr=np.zeros(len(unit_time), _F32) if exit_thresholds is None
-        else np.asarray(exit_thresholds, _F32),
+        exit_thr=exit_thr,
         power_on=_F32(harvester.power_on),
-        period=_F32(task.period),
-        rel_deadline=_F32(task.deadline),
-        fragments=_F32(task.fragments_per_unit),
-        n_units=np.int32(len(unit_time)),
-        n_releases=np.int32(_n_releases(task, horizon)),
+        period=np.array([t.period for t in tasks], _F32),
+        rel_deadline=np.array([t.deadline for t in tasks], _F32),
+        fragments=np.array([t.fragments_per_unit for t in tasks], _F32),
+        n_units=n_units,
+        n_releases=np.array([_n_releases(t, horizon) for t in tasks],
+                            np.int32),
         unit_time=unit_time,
         unit_energy=unit_energy,
         margins=margins,
@@ -129,15 +221,17 @@ def stack_configs(devices: Sequence[dict]) -> FleetConfig:
 
 
 def from_sim_config(
-    task: TaskSpec,
+    tasks: TaskSet,
     harvester: Harvester,
     eta: float,
     cap: Optional[Capacitor] = None,
     sim: Optional[SimConfig] = None,
     dt: Optional[float] = None,
 ) -> tuple[FleetConfig, FleetStatics]:
-    """Single-device FleetConfig mirroring ``simulate(task, ...)``'s setup —
-    the parity-test bridge between the scalar and fleet paths."""
+    """Single-device FleetConfig mirroring ``simulate(tasks, ...)``'s setup —
+    the parity-test bridge between the scalar and fleet paths.  ``tasks``
+    may be one TaskSpec or a whole task set, exactly like the scalar call."""
+    tasks = as_task_set(tasks)
     sim = sim or SimConfig()
     cap = cap or Capacitor()
     clock_drift = 0.0
@@ -150,13 +244,11 @@ def from_sim_config(
             raise NotImplementedError(
                 f"fleet path has no model for clock {type(sim.clock)}")
     # default dt = one fragment time: the scalar path's execution quantum
-    dt = _check_dt(float(
-        np.min(np.asarray(task.unit_time)) / task.fragments_per_unit
-        if dt is None else dt), task)
+    dt = _check_dt(_default_dt(tasks) if dt is None else float(dt), tasks)
     statics = FleetStatics(queue_size=sim.queue_size, dt=dt,
                            horizon=sim.horizon, slot_s=harvester.slot_s)
     dev = device_config(
-        task, harvester, eta, cap,
+        tasks, harvester, eta, cap,
         policy=sim.policy, horizon=sim.horizon,
         events=sample_events(harvester, sim.horizon, sim.seed),
         e_opt_fraction=sim.e_opt_fraction, e_man=sim.e_man,
@@ -173,9 +265,11 @@ def from_sim_config(
 @dataclasses.dataclass(frozen=True)
 class SweepGrid:
     """Cartesian benchmark grid: one device per (policy, eta, harvester,
-    capacitor, seed) tuple, sharing a single task workload."""
+    capacitor, seed) tuple, sharing a single task-set workload (``task``
+    accepts one TaskSpec or a sequence — every device then runs the whole
+    set)."""
 
-    task: TaskSpec
+    task: TaskSet
     policies: Sequence[str] = ("zygarde",)
     etas: Sequence[float] = (1.0,)
     harvesters: Sequence[Harvester] = ()
@@ -188,6 +282,10 @@ class SweepGrid:
     e_opt_fraction: float = 0.7
     e_man: Optional[float] = None
     start_charged: bool = False
+
+    @property
+    def tasks(self) -> tuple[TaskSpec, ...]:
+        return as_task_set(self.task)
 
     def points(self):
         harvesters = self.harvesters or (PERSISTENT,)
@@ -208,14 +306,11 @@ def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
     points = list(grid.points())
     if not points:
         raise ValueError("empty sweep grid")
+    tasks = grid.tasks
     slot_lens = {pt["harvester"].slot_s for pt in points}
     if len(slot_lens) != 1:
         raise ValueError("all harvesters in one sweep must share slot_s")
-    dt = grid.dt
-    if dt is None:
-        dt = float(np.min(np.asarray(grid.task.unit_time))
-                   / grid.task.fragments_per_unit)
-    dt = _check_dt(dt, grid.task)
+    dt = _check_dt(_default_dt(tasks) if grid.dt is None else grid.dt, tasks)
     statics = FleetStatics(queue_size=grid.queue_size, dt=dt,
                            horizon=grid.horizon, slot_s=slot_lens.pop())
 
@@ -227,7 +322,7 @@ def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
             events_cache[key] = sample_events(
                 pt["harvester"], grid.horizon, pt["seed"])
         devices.append(device_config(
-            grid.task, pt["harvester"], pt["eta"], pt["capacitor"],
+            tasks, pt["harvester"], pt["eta"], pt["capacitor"],
             policy=pt["policy"], horizon=grid.horizon,
             events=events_cache[key],
             e_opt_fraction=grid.e_opt_fraction, e_man=grid.e_man,
@@ -239,6 +334,7 @@ def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
             harvester=pt["harvester"].name, seed=pt["seed"],
             capacitance_f=pt["capacitor"].capacitance_f,
             clock_drift=pt["clock_drift"],
+            n_tasks=len(tasks),
         ))
     return stack_configs(devices), statics, meta
 
@@ -246,8 +342,9 @@ def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
 def sweep(grid: SweepGrid, use_pallas: bool = False, mesh=None):
     """Simulate the whole grid in one jitted call.
 
-    Returns ``(FleetResult, meta)``: stacked (D,) metric arrays plus the
-    per-device metadata rows identifying each grid point.  ``mesh`` (e.g.
+    Returns ``(FleetResult, meta)``: stacked (D,) metric arrays (plus the
+    ``(D, K)`` per-task breakdowns) and the per-device metadata rows
+    identifying each grid point.  ``mesh`` (e.g.
     :func:`repro.launch.mesh.make_fleet_mesh`) partitions the device axis
     across backends — results are bit-identical to the unsharded call.
     """

@@ -8,10 +8,18 @@ streams — with one ``jax.lax.scan`` over time, ``jax.vmap``-ing the
 per-device step across the device axis.  One jitted call therefore evaluates
 a whole policy × eta × harvester × capacitor × seed grid.
 
-Per step (dt), each device: admits at most one released job (evicting an
-optional-only job on overflow, paper §5.2), expires past-deadline jobs,
-picks a queue slot with the shared priority functions from
-:mod:`repro.core.policy` (or the Pallas kernel
+Each device runs a *task set*: ``K`` periodic DNN task streams (the paper's
+multi-app audio+camera deployments) share one capacitor and one scheduler.
+Queue slots carry a ``task_id`` and every helper below gathers the right
+task row — period, deadline, unit times/energies, profile tables — before
+applying the exact same per-slot logic the single-task path used.  With
+``K = 1`` the task axis is a size-1 gather and the simulation is
+bit-identical to the pre-task-set fleet path.
+
+Per step (dt), each device: admits at most one released job per task
+(evicting an optional-only job on overflow, paper §5.2), expires
+past-deadline jobs, picks a queue slot with the shared priority functions
+from :mod:`repro.core.policy` (or the Pallas kernel
 :mod:`repro.kernels.fleet_priority` when ``use_pallas=True``), and then
 either executes ``dt`` seconds of the selected unit (draining the capacitor
 at the unit's power) or idles/charges.  Unit boundaries run the utility
@@ -22,10 +30,12 @@ to ``dt`` (keep ``dt`` at or below one fragment time), fragment energy is
 drained continuously rather than per-fragment, and job admission/expiry are
 checked every ``dt`` rather than only at unit boundaries — so counts agree
 within a small tolerance rather than bit-exactly; the parity tests in
-``tests/test_fleet.py`` pin the agreement down.  Limited preemption itself
-is preserved: a started unit holds a lock (``lock_slot``/``lock_job``) and
-runs to its boundary before the scheduler re-picks, exactly as in paper
-§4.1.
+``tests/test_fleet.py`` and the task-set harness in ``tests/test_parity.py``
+pin the agreement down.  Limited preemption itself is preserved: a started
+unit holds a lock (``lock_slot``/``lock_job``) and runs to its boundary
+before the scheduler re-picks, exactly as in paper §4.1.  Round-robin
+rotates a per-device task cursor (``rr_cursor``) at unit boundaries, the
+array analogue of the scalar simulator's rotation at each pick.
 """
 from __future__ import annotations
 
@@ -47,52 +57,70 @@ _F32 = jnp.float32
 
 
 def _finish_counts(cfg: FleetConfig, st: DeviceState, mask: jax.Array):
-    """Tally (scheduled, correct, missed) for the queue slots in ``mask``."""
+    """Tally (scheduled, correct, missed) for the queue slots in ``mask``,
+    broken down per task — ``(K,)`` int arrays each."""
+    n_tasks = cfg.period.shape[0]
+    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
     sched = mask & (st.q_mand_time >= 0.0) & (st.q_mand_time <= st.q_deadline)
-    job = jnp.clip(st.q_job, 0, cfg.margins.shape[0] - 1)
-    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[1] - 1)
-    corr = sched & (st.q_last_pred >= 0) & cfg.correct[job, lp]
+    job = jnp.clip(st.q_job, 0, cfg.margins.shape[1] - 1)
+    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[2] - 1)
+    corr = sched & (st.q_last_pred >= 0) & cfg.correct[tk, job, lp]
     miss = mask & ~sched
-    return jnp.sum(sched), jnp.sum(corr), jnp.sum(miss)
+    onehot = tk[:, None] == jnp.arange(n_tasks)[None, :]   # (Q, K)
+
+    def per_task(m):
+        return jnp.sum(m[:, None] & onehot, axis=0)
+
+    return per_task(sched), per_task(corr), per_task(miss)
 
 
 def _admit(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
-    """Admit at most one released job (the builder asserts dt < period)."""
+    """Admit at most one released job per task (the builder asserts
+    dt < period).  The static python loop over the task axis admits in task
+    order — the same order the scalar path's stable release sort yields for
+    simultaneous releases."""
     q = statics.queue_size
-    rel_time = st.next_rel.astype(_F32) * cfg.period
-    releasing = (st.next_rel < cfg.n_releases) & (rel_time <= t)
+    n_tasks = cfg.period.shape[0]
+    for k in range(n_tasks):
+        rel_time = st.next_rel[k].astype(_F32) * cfg.period[k]
+        releasing = (st.next_rel[k] < cfg.n_releases[k]) & (rel_time <= t)
 
-    free = ~st.q_active
-    has_free = jnp.any(free)
-    # overflow: evict the earliest-deadline job whose mandatory part is done
-    # (optional-only work yields to the new arrival — mandatory first, §5.2)
-    evictable = st.q_active & (st.q_exited >= 0)
-    has_evict = jnp.any(evictable)
-    victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf))
-    evict = releasing & ~has_free & has_evict
-    vmask = evict & (jnp.arange(q) == victim)
-    d_sched, d_corr, d_miss = _finish_counts(cfg, st, vmask)
+        free = ~st.q_active
+        has_free = jnp.any(free)
+        # overflow: evict the earliest-deadline job whose mandatory part is
+        # done (optional-only work yields to the new arrival — mandatory
+        # first, §5.2)
+        evictable = st.q_active & (st.q_exited >= 0)
+        has_evict = jnp.any(evictable)
+        victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf))
+        evict = releasing & ~has_free & has_evict
+        vmask = evict & (jnp.arange(q) == victim)
+        d_sched, d_corr, d_miss = _finish_counts(cfg, st, vmask)
 
-    insert = releasing & (has_free | has_evict)
-    slot = jnp.where(has_free, jnp.argmax(free), victim)
-    ins = insert & (jnp.arange(q) == slot)
-    dropped = releasing & ~insert   # queue overflow with nothing evictable
+        insert = releasing & (has_free | has_evict)
+        slot = jnp.where(has_free, jnp.argmax(free), victim)
+        ins = insert & (jnp.arange(q) == slot)
+        dropped = releasing & ~insert   # queue overflow, nothing evictable
+        k_hot = jnp.arange(n_tasks) == k
 
-    return st._replace(
-        next_rel=st.next_rel + releasing,
-        q_active=(st.q_active & ~vmask) | ins,
-        q_release=jnp.where(ins, rel_time, st.q_release),
-        q_deadline=jnp.where(ins, rel_time + cfg.rel_deadline, st.q_deadline),
-        q_job=jnp.where(ins, st.next_rel, st.q_job),
-        q_unit=jnp.where(ins, 0, st.q_unit),
-        q_time_left=jnp.where(ins, cfg.unit_time[0], st.q_time_left),
-        q_exited=jnp.where(ins, -1, st.q_exited),
-        q_last_pred=jnp.where(ins, -1, st.q_last_pred),
-        q_mand_time=jnp.where(ins, -1.0, st.q_mand_time),
-        m_scheduled=st.m_scheduled + d_sched,
-        m_correct=st.m_correct + d_corr,
-        m_misses=st.m_misses + d_miss + dropped,
-    )
+        st = st._replace(
+            next_rel=st.next_rel.at[k].add(releasing),
+            q_active=(st.q_active & ~vmask) | ins,
+            q_release=jnp.where(ins, rel_time, st.q_release),
+            q_deadline=jnp.where(ins, rel_time + cfg.rel_deadline[k],
+                                 st.q_deadline),
+            q_task=jnp.where(ins, k, st.q_task),
+            q_job=jnp.where(ins, st.next_rel[k], st.q_job),
+            q_unit=jnp.where(ins, 0, st.q_unit),
+            q_time_left=jnp.where(ins, cfg.unit_time[k, 0], st.q_time_left),
+            q_exited=jnp.where(ins, -1, st.q_exited),
+            q_last_pred=jnp.where(ins, -1, st.q_last_pred),
+            q_mand_time=jnp.where(ins, -1.0, st.q_mand_time),
+            m_scheduled=st.m_scheduled + d_sched,
+            m_correct=st.m_correct + d_corr,
+            m_misses=st.m_misses + d_miss + (dropped & k_hot),
+        )
+    return st
 
 
 def _drop_expired(cfg: FleetConfig, st: DeviceState, t):
@@ -111,15 +139,18 @@ def _drop_expired(cfg: FleetConfig, st: DeviceState, t):
 
 def _pick_inputs(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
     """Per-slot priority/energy ingredients shared by the jnp pick and the
-    Pallas kernel: (laxity, utility, mandatory, gate_e, drain, charge)."""
-    u = jnp.clip(st.q_unit, 0, cfg.unit_time.shape[0] - 1)
-    unit_t = cfg.unit_time[u]
-    unit_e = cfg.unit_energy[u]
-    gate_e = jnp.maximum(unit_e / cfg.fragments, cfg.e_man)
+    Pallas kernel: each slot gathers its own task's row of the (K, U) /
+    (K, J, U) tables before the shared priority math runs."""
+    n_tasks = cfg.period.shape[0]
+    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
+    u = jnp.clip(st.q_unit, 0, cfg.unit_time.shape[1] - 1)
+    unit_t = cfg.unit_time[tk, u]
+    unit_e = cfg.unit_energy[tk, u]
+    gate_e = jnp.maximum(unit_e / cfg.fragments[tk], cfg.e_man)
     drain = unit_e * (statics.dt / unit_t)
-    job = jnp.clip(st.q_job, 0, cfg.margins.shape[0] - 1)
-    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[1] - 1)
-    utility = jnp.where(st.q_last_pred >= 0, cfg.margins[job, lp], 0.0)
+    job = jnp.clip(st.q_job, 0, cfg.margins.shape[1] - 1)
+    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[2] - 1)
+    utility = jnp.where(st.q_last_pred >= 0, cfg.margins[tk, job, lp], 0.0)
     mandatory = st.q_exited < 0
     laxity = st.q_deadline - t
     n_slots = cfg.events.shape[0]
@@ -131,16 +162,21 @@ def _pick_inputs(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
     locked = ((st.lock_slot >= 0) & st.q_active[ls]
               & (st.q_job[ls] == st.lock_job))
     forced = jnp.where(locked, ls, -1).astype(jnp.int32)
-    return laxity, utility, mandatory, gate_e, drain, charge, forced
+    # rr task rotation: distance of each slot's task from the rr cursor
+    # (identically 0 when K == 1, keeping the FIFO key bit-identical)
+    task_rank = jnp.mod(tk - st.rr_cursor, n_tasks).astype(_F32)
+    return (laxity, utility, mandatory, gate_e, drain, charge, forced,
+            task_rank)
 
 
 def _pick(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
     """Priority-argmax + fused capacitor charge/discharge (pure-jnp path)."""
-    laxity, utility, mandatory, gate_e, drain, charge, forced = _pick_inputs(
-        cfg, st, t, statics)
+    (laxity, utility, mandatory, gate_e, drain, charge, forced,
+     task_rank) = _pick_inputs(cfg, st, t, statics)
     scores, thr = P.policy_scores(
         cfg.policy, st.q_active, laxity, st.q_release, utility, mandatory,
-        cfg.alpha, cfg.beta, cfg.eta, st.energy, cfg.e_opt, cfg.persistent)
+        cfg.alpha, cfg.beta, cfg.eta, st.energy, cfg.e_opt, cfg.persistent,
+        task_rank)
     sel = jnp.where(forced >= 0, forced,
                     jnp.argmax(scores)).astype(jnp.int32)
     picked = (forced >= 0) | (jnp.max(scores) > thr)
@@ -151,27 +187,36 @@ def _pick(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
 
 def _pick_pallas(cfg: FleetConfig, states: DeviceState, t,
                  statics: FleetStatics):
-    """Batched pick via the Pallas fleet_priority kernel (whole-fleet call)."""
+    """Batched pick via the Pallas fleet_priority kernel (whole-fleet call).
+
+    The kernel tile gains the task dimension: the raw per-slot task ids and
+    the per-device rr cursors ride into VMEM and the rotation rank is
+    computed inside the kernel, next to the priority-argmax."""
     from ..kernels import ops  # local import: kernels pull in pallas
 
-    laxity, utility, mandatory, gate_e, drain, charge, forced = jax.vmap(
+    (laxity, utility, mandatory, gate_e, drain, charge, forced,
+     _task_rank) = jax.vmap(
         lambda c, s: _pick_inputs(c, s, t, statics))(cfg, states)
     return ops.fleet_priority(
         cfg.policy, states.q_active, laxity, states.q_release, utility,
         mandatory, cfg.alpha, cfg.beta, cfg.eta, cfg.persistent,
         states.energy, cfg.e_opt, charge, cfg.capacity, gate_e, drain,
-        forced)
+        forced, states.q_task, states.rr_cursor,
+        n_tasks=cfg.period.shape[-1])
 
 
 def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
            statics: FleetStatics):
     """Advance the selected job by dt; handle unit/job completion."""
     q = statics.queue_size
-    u_max = cfg.unit_time.shape[0] - 1
+    n_tasks = cfg.period.shape[0]
+    u_max = cfg.unit_time.shape[1] - 1
     oh = jnp.arange(q) == sel
+    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
+    tk_sel = tk[sel]
 
     u_sel = jnp.clip(st.q_unit[sel], 0, u_max)
-    frag_t = cfg.unit_time[u_sel] / cfg.fragments
+    frag_t = cfg.unit_time[tk_sel, u_sel] / cfg.fragments[tk_sel]
 
     # power-down / reboot bookkeeping (the initial cold boot counts wasted
     # half-fragment re-execution but not a reboot — matches the scalar path)
@@ -184,31 +229,33 @@ def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
     complete = run & oh & (time_left <= statics.dt * 1e-3)
 
     u = jnp.clip(st.q_unit, 0, u_max)
-    job = jnp.clip(st.q_job, 0, cfg.passes.shape[0] - 1)
+    job = jnp.clip(st.q_job, 0, cfg.passes.shape[1] - 1)
+    n_units = cfg.n_units[tk]                      # (Q,) per-slot task depth
     next_u = jnp.clip(st.q_unit + 1, 0, u_max)
     done_any = jnp.any(complete)
     mandatory = st.q_exited < 0
 
     last_pred = jnp.where(complete, u, st.q_last_pred)
     unit = jnp.where(complete, st.q_unit + 1, st.q_unit)
-    time_left = jnp.where(complete, cfg.unit_time[next_u], time_left)
+    time_left = jnp.where(complete, cfg.unit_time[tk, next_u], time_left)
 
     # utility test at the unit boundary (imprecise policies only); tuned
     # per-unit thresholds (repro.adapt) re-evaluate the test against the
     # live margin, otherwise the precomputed passes table applies
     passed = jnp.where(cfg.use_exit_thr,
-                       P.exit_test(cfg.margins[job, u], cfg.exit_thr[u]),
-                       cfg.passes[job, u])
+                       P.exit_test(cfg.margins[tk, job, u],
+                                   cfg.exit_thr[tk, u]),
+                       cfg.passes[tk, job, u])
     exit_now = complete & cfg.imprecise & (st.q_exited < 0) & passed
     exited = jnp.where(exit_now, u, st.q_exited)
     # never-confident full execution => the whole DNN was mandatory
-    full_mand = complete & (exited < 0) & (st.q_unit + 1 >= cfg.n_units)
-    exited = jnp.where(full_mand, cfg.n_units - 1, exited)
+    full_mand = complete & (exited < 0) & (st.q_unit + 1 >= n_units)
+    exited = jnp.where(full_mand, n_units - 1, exited)
     t_end = t + statics.dt
     mand_time = jnp.where(exit_now | full_mand, t_end, st.q_mand_time)
 
     job_done = complete & (
-        (st.q_unit + 1 >= cfg.n_units) | (cfg.is_edfm & (exited >= 0))
+        (st.q_unit + 1 >= n_units) | (cfg.is_edfm & (exited >= 0))
     )
     st_done = st._replace(q_last_pred=last_pred, q_mand_time=mand_time)
     d_sched, d_corr, d_miss = _finish_counts(cfg, st_done, job_done)
@@ -216,9 +263,16 @@ def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
     # hold the lock while the unit is in progress (including power-gated
     # waits, like the scalar fragment loop); release at the unit boundary
     lock_on = picked & ~done_any
+    # rr task rotation advances past the task whose unit just completed —
+    # the unit-boundary analogue of the scalar rotation at each pick
+    is_rr = cfg.policy == P.POLICY_IDS["rr"]
+    rr_cursor = jnp.where(is_rr & done_any, jnp.mod(tk_sel + 1, n_tasks),
+                          st.rr_cursor).astype(jnp.int32)
+    sel_hot = jnp.arange(n_tasks) == tk_sel
     return st._replace(
         energy=e_new,
         was_off=was_off,
+        rr_cursor=rr_cursor,
         lock_slot=jnp.where(lock_on, sel, -1).astype(jnp.int32),
         lock_job=jnp.where(lock_on, st.q_job[sel], -1).astype(jnp.int32),
         q_active=st.q_active & ~job_done,
@@ -230,8 +284,8 @@ def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
         m_scheduled=st.m_scheduled + d_sched,
         m_correct=st.m_correct + d_corr,
         m_misses=st.m_misses + d_miss,
-        m_units=st.m_units + done_any,
-        m_optional=st.m_optional + (done_any & ~mandatory[sel]),
+        m_units=st.m_units + (done_any & sel_hot),
+        m_optional=st.m_optional + (done_any & ~mandatory[sel] & sel_hot),
         m_reboots=st.m_reboots + (reboot & (st.m_busy > 0)),
         m_busy=st.m_busy + jnp.where(run, statics.dt, 0.0),
         m_idle=st.m_idle + idle_inc,
@@ -241,21 +295,31 @@ def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
 
 def _finalize(cfg: FleetConfig, st: DeviceState,
               statics: FleetStatics) -> FleetResult:
-    """Flush live jobs and count never-admitted releases as misses."""
+    """Flush live jobs and count never-admitted releases as misses; emit
+    both the per-task (K,) counters and their aggregates."""
     d_sched, d_corr, d_miss = _finish_counts(cfg, st, st.q_active)
-    unreleased = cfg.n_releases - st.next_rel
+    unreleased = cfg.n_releases - st.next_rel       # (K,)
+    t_sched = st.m_scheduled + d_sched
+    t_corr = st.m_correct + d_corr
+    t_miss = st.m_misses + d_miss + unreleased
     return FleetResult(
-        released=cfg.n_releases,
-        scheduled=st.m_scheduled + d_sched,
-        correct=st.m_correct + d_corr,
-        deadline_misses=st.m_misses + d_miss + unreleased,
-        units_executed=st.m_units,
-        optional_units=st.m_optional,
+        released=jnp.sum(cfg.n_releases),
+        scheduled=jnp.sum(t_sched),
+        correct=jnp.sum(t_corr),
+        deadline_misses=jnp.sum(t_miss),
+        units_executed=jnp.sum(st.m_units),
+        optional_units=jnp.sum(st.m_optional),
         busy_time=st.m_busy,
         idle_no_energy=st.m_idle,
         reboots=st.m_reboots,
         wasted_reexec=st.m_wasted,
         sim_time=jnp.full((), statics.horizon, _F32),
+        task_released=cfg.n_releases,
+        task_scheduled=t_sched,
+        task_correct=t_corr,
+        task_misses=t_miss,
+        task_units=st.m_units,
+        task_optional=st.m_optional,
     )
 
 
@@ -269,9 +333,9 @@ def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
                    use_pallas: bool = False) -> FleetResult:
     """Simulate every device in ``cfg`` in one jitted scan.
 
-    Returns a :class:`FleetResult` of ``(D,)`` metric arrays aligned with the
-    device axis of ``cfg`` (see :func:`repro.fleet.grid.sweep` for the grid
-    bookkeeping).
+    Returns a :class:`FleetResult` of ``(D,)`` metric arrays — plus
+    ``(D, K)`` per-task breakdowns — aligned with the device axis of ``cfg``
+    (see :func:`repro.fleet.grid.sweep` for the grid bookkeeping).
     """
     states0 = jax.vmap(lambda c: init_state(c, statics))(cfg)
 

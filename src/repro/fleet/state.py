@@ -5,16 +5,20 @@ pytrees of arrays:
 
 * :class:`FleetConfig` — immutable per-device configuration: one leading
   ``D`` (device) axis over the sweep grid (policy × eta × harvester ×
-  capacitor × seed), plus the shared workload tables and pre-sampled
+  capacitor × seed), plus the per-task workload tables and pre-sampled
   harvester event streams.
 * :class:`DeviceState` — the mutable simulation state for ONE device
   (``jax.vmap`` adds the device axis): capacitor energy, the fixed-size job
   queue as parallel arrays, and the metric accumulators.
 
-Shapes use ``D`` devices, ``Q`` queue slots, ``U`` units per job, ``J`` jobs
-per device, ``S`` harvester slots.  Static (python) dimensions and step
-sizes live in the hashable :class:`FleetStatics`, which is a ``jax.jit``
-static argument.
+Shapes use ``D`` devices, ``K`` tasks per device (the task-set axis: each
+device runs ``K`` periodic DNN task streams contending for one harvested
+energy budget, paper §3/§5's multi-app deployments), ``Q`` queue slots,
+``U`` units per job, ``J`` jobs per task, ``S`` harvester slots.  Task sets
+of heterogeneous depth/length are padded to common ``U``/``J`` by the grid
+builder; per-task ``n_units``/``n_releases`` bound the live region.  Static
+(python) dimensions and step sizes live in the hashable
+:class:`FleetStatics`, which is a ``jax.jit`` static argument.
 """
 from __future__ import annotations
 
@@ -47,7 +51,7 @@ class FleetConfig(NamedTuple):
     imprecise: jax.Array     # bool: early exit enabled (zygarde, edf-m)
     is_edfm: jax.Array       # bool: EDF-M never runs optional units
     eta: jax.Array           # f32
-    alpha: jax.Array         # f32, 1 / max relative deadline
+    alpha: jax.Array         # f32, 1 / max relative deadline over the task set
     beta: jax.Array          # f32
     persistent: jax.Array    # bool: use zeta (Eq. 6) instead of zeta_I (Eq. 7)
     capacity: jax.Array      # f32, usable capacitor energy (J)
@@ -55,7 +59,6 @@ class FleetConfig(NamedTuple):
     e_man: jax.Array         # f32, minimum energy to run a fragment
     e_opt: jax.Array         # f32, Eq. 7 optional-unit energy threshold
     power_on: jax.Array      # f32, harvester power in the ON state (W)
-    # task stream, (D,)
     # timekeeping: deterministic linear clock drift (fleet-path CHRT model;
     # the scalar CHRTClock's random per-read offset has no batched
     # equivalent, so the fleet models the *accumulated* error as a rate:
@@ -65,18 +68,19 @@ class FleetConfig(NamedTuple):
     # use_exit_thr is set the utility test compares the live margin against
     # exit_thr instead of the precomputed `passes` table
     use_exit_thr: jax.Array  # bool, (D,)
-    exit_thr: jax.Array      # (D, U) f32
+    exit_thr: jax.Array      # (D, K, U) f32
+    # task-set table, (D, K): K periodic task streams per device
     period: jax.Array        # f32
     rel_deadline: jax.Array  # f32, relative deadline
     fragments: jax.Array     # f32, fragments per unit
-    n_units: jax.Array       # int32, <= U
+    n_units: jax.Array       # int32, <= U (live units of each task)
     n_releases: jax.Array    # int32, jobs released within the horizon (<= J)
-    # workload tables
-    unit_time: jax.Array     # (D, U) f32, seconds per unit
-    unit_energy: jax.Array   # (D, U) f32, joules per unit
-    margins: jax.Array       # (D, J, U) f32, utility-test margins
-    passes: jax.Array        # (D, J, U) bool, utility test passes after unit
-    correct: jax.Array       # (D, J, U) bool, unit prediction correct
+    # per-task workload tables
+    unit_time: jax.Array     # (D, K, U) f32, seconds per unit
+    unit_energy: jax.Array   # (D, K, U) f32, joules per unit
+    margins: jax.Array       # (D, K, J, U) f32, utility-test margins
+    passes: jax.Array        # (D, K, J, U) bool, utility test passes after unit
+    correct: jax.Array       # (D, K, J, U) bool, unit prediction correct
     # harvester event stream, (D, S) f32 in {0, 1}
     events: jax.Array
 
@@ -84,13 +88,20 @@ class FleetConfig(NamedTuple):
     def n_devices(self) -> int:
         return self.policy.shape[0]
 
+    @property
+    def n_tasks(self) -> int:
+        return self.period.shape[-1]
+
 
 class DeviceState(NamedTuple):
     """Mutable per-device simulation state (no device axis; vmap adds it)."""
 
     energy: jax.Array        # f32 scalar; < 0 while paying cold-boot debt
     was_off: jax.Array       # bool scalar: last activity was a power-down
-    next_rel: jax.Array      # int32 scalar: next job index to release
+    next_rel: jax.Array      # int32 (K,): next job index to release, per task
+    # round-robin task cursor: the task id the rr policy serves next (the
+    # scalar simulator's rr_cursor); unused by the other policies
+    rr_cursor: jax.Array     # int32 scalar
     # limited preemption (paper §4.1): once a unit starts, it runs to its
     # boundary — the scheduler only re-picks between units.  lock_job guards
     # against the slot being recycled for a new job while locked.
@@ -100,18 +111,20 @@ class DeviceState(NamedTuple):
     q_active: jax.Array      # bool
     q_release: jax.Array     # f32
     q_deadline: jax.Array    # f32 (absolute)
-    q_job: jax.Array         # int32, index into the (J, U) profile tables
+    q_task: jax.Array        # int32, index into the (K, ...) task tables
+    q_job: jax.Array         # int32, index into the (K, J, U) profile tables
     q_unit: jax.Array        # int32, next unit to execute
     q_time_left: jax.Array   # f32, seconds left in the current unit
     q_exited: jax.Array      # int32, unit where the utility test passed (-1)
     q_last_pred: jax.Array   # int32, deepest executed unit (-1)
     q_mand_time: jax.Array   # f32, mandatory-completion time (-1)
-    # metric accumulators (mirror scheduler.SimResult)
+    # metric accumulators, (K,) per task (mirror scheduler.SimResult.task_*)
     m_scheduled: jax.Array   # int32
     m_correct: jax.Array     # int32
     m_misses: jax.Array      # int32
     m_units: jax.Array       # int32
     m_optional: jax.Array    # int32
+    # device-level energy/time accumulators (scalars)
     m_reboots: jax.Array     # int32
     m_busy: jax.Array        # f32
     m_idle: jax.Array        # f32
@@ -119,7 +132,13 @@ class DeviceState(NamedTuple):
 
 
 class FleetResult(NamedTuple):
-    """Stacked per-device results, (D,) each — SimResult over the fleet."""
+    """Stacked per-device results — SimResult over the fleet.
+
+    Aggregate fields are ``(D,)`` (summed over the task set, matching the
+    scalar ``SimResult`` totals); the ``task_*`` fields break the job
+    counters down per task as ``(D, K)`` arrays (matching
+    ``SimResult.task_*``).
+    """
 
     released: jax.Array
     scheduled: jax.Array
@@ -132,10 +151,22 @@ class FleetResult(NamedTuple):
     reboots: jax.Array
     wasted_reexec: jax.Array
     sim_time: jax.Array
+    # per-task breakdowns, (D, K)
+    task_released: jax.Array
+    task_scheduled: jax.Array
+    task_correct: jax.Array
+    task_misses: jax.Array
+    task_units: jax.Array
+    task_optional: jax.Array
 
     def device(self, i: int) -> dict:
-        """Metrics of device ``i`` as a python dict (SimResult field names)."""
-        return {k: v[i].item() for k, v in self._asdict().items()}
+        """Metrics of device ``i`` as a python dict (SimResult field names);
+        scalar metrics become python numbers, per-task rows become lists."""
+        out = {}
+        for k, v in self._asdict().items():
+            row = v[i]
+            out[k] = row.item() if row.ndim == 0 else row.tolist()
+        return out
 
     def as_dict(self) -> dict:
         return {k: jnp.asarray(v) for k, v in self._asdict().items()}
@@ -144,29 +175,33 @@ class FleetResult(NamedTuple):
 def init_state(cfg: FleetConfig, statics: FleetStatics) -> DeviceState:
     """Initial state for one device (call under vmap over cfg)."""
     q = statics.queue_size
+    k = cfg.period.shape[0]      # per-device view: task axis is leading
     f32 = jnp.float32
     i32 = jnp.int32
     zero_i = jnp.zeros((), i32)
+    zeros_k = jnp.zeros((k,), i32)
     return DeviceState(
         energy=cfg.start_energy.astype(f32),
         was_off=jnp.zeros((), bool),
-        next_rel=zero_i,
+        next_rel=zeros_k,
+        rr_cursor=zero_i,
         lock_slot=jnp.full((), -1, i32),
         lock_job=jnp.full((), -1, i32),
         q_active=jnp.zeros((q,), bool),
         q_release=jnp.zeros((q,), f32),
         q_deadline=jnp.zeros((q,), f32),
+        q_task=jnp.zeros((q,), i32),
         q_job=jnp.zeros((q,), i32),
         q_unit=jnp.zeros((q,), i32),
         q_time_left=jnp.zeros((q,), f32),
         q_exited=jnp.full((q,), -1, i32),
         q_last_pred=jnp.full((q,), -1, i32),
         q_mand_time=jnp.full((q,), -1.0, f32),
-        m_scheduled=zero_i,
-        m_correct=zero_i,
-        m_misses=zero_i,
-        m_units=zero_i,
-        m_optional=zero_i,
+        m_scheduled=zeros_k,
+        m_correct=zeros_k,
+        m_misses=zeros_k,
+        m_units=zeros_k,
+        m_optional=zeros_k,
         m_reboots=zero_i,
         m_busy=jnp.zeros((), f32),
         m_idle=jnp.zeros((), f32),

@@ -10,8 +10,11 @@ The queue axis (a handful of slots) rides the lane dimension; the device
 axis is tiled into ``block_d``-row VMEM blocks, so the whole step is one
 VPU sweep per tile with no HBM round-trips between the score, argmax and
 energy stages.  Per-slot gather ingredients (laxity, utility, gate/drain
-energies) are precomputed by the caller — gathers from the (D, J, U)
-profile tables stay outside the kernel.
+energies) are precomputed by the caller — gathers from the (D, K, J, U)
+profile tables stay outside the kernel.  The task-set axis enters the tile
+as each slot's task id plus the per-device round-robin cursor: the RR task
+rotation rank is computed in VMEM, right next to the priority-argmax
+(``n_tasks`` is a compile-time constant).
 
 Boolean operands are passed as f32 0/1 masks and the flag outputs returned
 as int32 (TPU-friendly dtypes); :mod:`repro.kernels.ops` re-casts.
@@ -32,11 +35,19 @@ def _fleet_priority_kernel(
     policy_ref, active_ref, laxity_ref, release_ref, utility_ref,
     mandatory_ref, alpha_ref, beta_ref, eta_ref, persistent_ref,
     energy_ref, e_opt_ref, charge_ref, capacity_ref, gate_ref, drain_ref,
-    forced_ref,
+    forced_ref, task_ref, cursor_ref,
     sel_ref, picked_ref, run_ref, e_new_ref,
+    *, n_tasks: int,
 ):
     pol = policy_ref[...][:, None]          # (bd, 1) i32
     energy = energy_ref[...]                # (bd,)
+
+    # task-set rotation rank inside the tile: (task - cursor) mod n_tasks on
+    # small f32 integers (exact); identically 0 for single-task devices
+    task = task_ref[...]                    # (bd, Q) f32 task ids
+    cursor = cursor_ref[...][:, None]       # (bd, 1) f32
+    diff = task - cursor
+    task_rank = jnp.where(diff < 0.0, diff + n_tasks, diff)
 
     scores, thr = P.policy_scores(
         pol, active_ref[...], laxity_ref[...], release_ref[...],
@@ -44,6 +55,7 @@ def _fleet_priority_kernel(
         alpha_ref[...][:, None], beta_ref[...][:, None],
         eta_ref[...][:, None], energy[:, None], e_opt_ref[...][:, None],
         persistent_ref[...][:, None],
+        task_rank,
     )
     # limited preemption: a forced slot (unit in progress) bypasses scoring
     forced = forced_ref[...]
@@ -68,7 +80,8 @@ def _fleet_priority_kernel(
     e_new_ref[...] = e_new
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_tasks", "block_d", "interpret"))
 def fleet_priority(
     policy: jax.Array,      # (D,) i32
     active: jax.Array,      # (D, Q) f32 0/1
@@ -87,7 +100,10 @@ def fleet_priority(
     gate_e: jax.Array,      # (D, Q) f32, min energy to run the slot's unit
     drain: jax.Array,       # (D, Q) f32, energy drained per step if run
     forced: jax.Array,      # (D,) i32, locked slot mid-unit (-1 = none)
+    task: jax.Array,        # (D, Q) i32, each slot's task id in [0, K)
+    rr_cursor: jax.Array,   # (D,) i32, round-robin task cursor
     *,
+    n_tasks: int = 1,
     block_d: int = 256,
     interpret: bool = False,
 ):
@@ -101,10 +117,10 @@ def fleet_priority(
     row = pl.BlockSpec((bd, Q), lambda i: (i, 0))
     vec = pl.BlockSpec((bd,), lambda i: (i,))
     return pl.pallas_call(
-        _fleet_priority_kernel,
+        functools.partial(_fleet_priority_kernel, n_tasks=n_tasks),
         grid=grid,
         in_specs=[vec, row, row, row, row, row, vec, vec, vec, vec, vec,
-                  vec, vec, vec, row, row, vec],
+                  vec, vec, vec, row, row, vec, row, vec],
         out_specs=[vec, vec, vec, vec],
         out_shape=[
             jax.ShapeDtypeStruct((D,), jnp.int32),
@@ -119,5 +135,6 @@ def fleet_priority(
         alpha.astype(f32), beta.astype(f32), eta.astype(f32),
         persistent.astype(f32), energy.astype(f32), e_opt.astype(f32),
         charge.astype(f32), capacity.astype(f32), gate_e.astype(f32),
-        drain.astype(f32), forced.astype(jnp.int32),
+        drain.astype(f32), forced.astype(jnp.int32), task.astype(f32),
+        rr_cursor.astype(f32),
     )

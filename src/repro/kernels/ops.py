@@ -54,12 +54,15 @@ def flash_attention(q, k, v, **kw):
 
 def fleet_priority(policy, active, laxity, release, utility, mandatory,
                    alpha, beta, eta, persistent, energy, e_opt, charge,
-                   capacity, gate_e, drain, forced, **kw):
-    """Batched scheduler pick + capacitor update; returns jnp-typed flags
-    (``sel`` int32, ``picked``/``run`` bool, ``e_new`` f32)."""
+                   capacity, gate_e, drain, forced, task, rr_cursor, *,
+                   n_tasks=1, **kw):
+    """Batched scheduler pick + capacitor update over a task-set workload;
+    returns jnp-typed flags (``sel`` int32, ``picked``/``run`` bool,
+    ``e_new`` f32).  ``task``/``rr_cursor`` feed the in-kernel round-robin
+    task rotation (``n_tasks`` is static)."""
     kw.setdefault("interpret", _interpret())
     sel, picked, run, e_new = _fleet_priority(
         policy, active, laxity, release, utility, mandatory, alpha, beta,
         eta, persistent, energy, e_opt, charge, capacity, gate_e, drain,
-        forced, **kw)
+        forced, task, rr_cursor, n_tasks=n_tasks, **kw)
     return sel, picked.astype(bool), run.astype(bool), e_new

@@ -214,7 +214,10 @@ def named(mesh: Mesh, spec_tree: Any) -> Any:
 def fleet_specs(mesh: Mesh, cfg: Any) -> Any:
     """PartitionSpecs for a :class:`repro.fleet.state.FleetConfig` (or any
     pytree of ``(D, ...)`` leaves): the leading device axis shards over the
-    whole mesh, trailing dims (workload tables, event streams) replicate.
+    whole mesh; every trailing dim replicates — including the task-set axis
+    ``K`` and the per-task workload tables ``(D, K, U)`` / ``(D, K, J, U)``,
+    which stay whole per shard because each device steps its entire task set
+    locally (the fleet axis is the only data-parallel dimension).
     """
     axes = tuple(mesh.axis_names)
     return jax.tree.map(lambda l: P(axes, *([None] * (l.ndim - 1))), cfg)

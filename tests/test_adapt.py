@@ -11,11 +11,12 @@ import jax.numpy as jnp
 
 from repro import adapt
 from repro.core import energy
-from repro.core.scheduler import JobProfile, TaskSpec
+from repro.core.scheduler import CHRTClock, JobProfile, TaskSpec
 from repro.core.utility import scalarized_objective
 
 
-def make_task(n_jobs=30, n_units=4, exit_at=1, correct_from=2):
+def make_task(n_jobs=30, n_units=4, exit_at=1, correct_from=2, task_id=0,
+              period=1.0, deadline=2.0):
     """Workload with accuracy headroom: the utility test passes after unit
     `exit_at` but predictions only become correct from unit `correct_from`,
     so optional execution (deeper units) buys accuracy when energy allows."""
@@ -26,7 +27,7 @@ def make_task(n_jobs=30, n_units=4, exit_at=1, correct_from=2):
     correct[correct_from:] = True
     prof = JobProfile(margins, passes, correct)
     return TaskSpec(
-        task_id=0, period=1.0, deadline=2.0,
+        task_id=task_id, period=period, deadline=deadline,
         unit_time=np.full(n_units, 0.1),
         unit_energy=np.full(n_units, 8e-3),
         profiles=[prof] * n_jobs,
@@ -136,11 +137,15 @@ def test_apply_params_threads_arrays(problem):
     assert np.asarray(cfg.use_exit_thr).all()
     assert np.asarray(cfg.exit_thr).shape == np.asarray(base.exit_thr).shape
     np.testing.assert_allclose(np.asarray(cfg.exit_thr), 0.3)
-    # per-unit override targets one column
+    # per-unit override targets one (all-tasks) column of the (D, K, U) table
     cfg2 = adapt.apply_params(base, {"exit_thr_2": jnp.full((d,), 0.9)})
-    np.testing.assert_allclose(np.asarray(cfg2.exit_thr)[:, 2], 0.9)
+    np.testing.assert_allclose(np.asarray(cfg2.exit_thr)[:, :, 2], 0.9)
+    np.testing.assert_allclose(np.asarray(cfg2.exit_thr)[:, :, 1],
+                               np.asarray(base.exit_thr)[:, :, 1])
     with pytest.raises(KeyError):
         adapt.apply_params(base, {"bogus": eta})
+    with pytest.raises(KeyError):
+        adapt.apply_params(base, {"exit_thr_tx": eta})
 
 
 def test_apply_params_narrows_persistent_flag():
@@ -195,6 +200,89 @@ def test_es_grad_also_beats_default(problem):
     res = adapt.tune(problem.objective(), space, budget=96, driver="es-grad",
                      seed=1)
     assert res.best_score > default_score
+
+
+def test_tune_under_chrt_drift_beats_default():
+    """Regression for tuning under the fleet CHRT drift axis (previously
+    untested): with every device's clock drifting at the CHRTClock
+    equivalent rate, the ES driver must still find parameters beating the
+    paper defaults on a fixed seed — i.e. the drift field threads through
+    the tuned objective rather than silently resetting to exact RTC."""
+    drift = CHRTClock().equivalent_drift(30.0)
+    assert drift > 0
+    prob = adapt.TuneProblem(task=make_task(), harvesters=HARVESTERS[:2],
+                             seeds=(0, 1), horizon=30.0, clock_drift=drift)
+    base, _ = prob._base
+    np.testing.assert_allclose(np.asarray(base.clock_drift), drift,
+                               rtol=1e-6)
+    space = adapt.SearchSpace.of(eta=(0.05, 1.0),
+                                 e_opt_fraction=(0.05, 0.95))
+    default_score = prob.score(prob.default_params())
+    res = adapt.tune(prob.objective(), space, budget=96, driver="es",
+                     seed=0)
+    assert res.best_score > default_score, (res, default_score)
+    # drift is not a no-op: the same tuned point scores differently on an
+    # exact-RTC deployment
+    rtc = adapt.TuneProblem(task=make_task(), harvesters=HARVESTERS[:2],
+                            seeds=(0, 1), horizon=30.0)
+    assert rtc.score(res.best_params) != pytest.approx(res.best_score)
+
+
+# --------------------------------------------------------------------------- #
+# Multi-task tuning: per-task thresholds + task-weighted scalarization.
+# --------------------------------------------------------------------------- #
+
+
+def make_task_set():
+    """A deadline-tight task contending with a slack-rich one."""
+    return (make_task(task_id=0, period=0.8, deadline=1.2),
+            make_task(task_id=1, period=1.6, deadline=4.0))
+
+
+def test_multitask_objective_and_task_weights():
+    tasks = make_task_set()
+    agg = adapt.TuneProblem(task=tasks, harvesters=HARVESTERS[:2],
+                            seeds=(0,), horizon=20.0)
+    weighted = adapt.TuneProblem(task=tasks, harvesters=HARVESTERS[:2],
+                                 seeds=(0,), horizon=20.0,
+                                 task_weights=(0.9, 0.1))
+    base, _ = agg._base
+    assert base.period.shape == (agg.n_cells, 2)
+    point = {"eta": 0.6, "e_opt_fraction": 0.5}
+    s_agg, s_w = agg.score(point), weighted.score(point)
+    assert np.isfinite(s_agg) and np.isfinite(s_w)
+    # the tight task schedules worse than the slack one, so weighting it
+    # 9:1 must move the score away from the aggregate
+    assert s_agg != pytest.approx(s_w)
+    with pytest.raises(ValueError):
+        adapt.TuneProblem(task=tasks, harvesters=HARVESTERS[:2],
+                          task_weights=(1.0,))._base
+
+
+def test_per_task_exit_thresholds_address_one_task():
+    """exit_thr_t<k> must move only task k's cells — and changing the
+    slack task's threshold must change the simulated outcome without
+    touching the other task's threshold column."""
+    prob = adapt.TuneProblem(task=make_task_set(), harvesters=HARVESTERS[:2],
+                             seeds=(0,), horizon=20.0)
+    base, _ = prob._base
+    d = base.n_devices
+    cfg = adapt.apply_params(base, {"exit_thr_t1": jnp.full((d,), 0.9)})
+    np.testing.assert_allclose(np.asarray(cfg.exit_thr)[:, 1, :], 0.9)
+    np.testing.assert_allclose(np.asarray(cfg.exit_thr)[:, 0, :],
+                               np.asarray(base.exit_thr)[:, 0, :])
+    cell = adapt.apply_params(base, {"exit_thr_t0_u2": jnp.full((d,), 0.7)})
+    assert np.asarray(cell.exit_thr)[:, 0, 2] == pytest.approx(0.7)
+    assert np.asarray(cell.exit_thr)[:, 1, 2] == pytest.approx(
+        np.asarray(base.exit_thr)[:, 1, 2])
+    # end-to-end: a prohibitive threshold on the slack task changes the
+    # objective (the simulator reads the (D, K, U) table per task)
+    objective = prob.objective()
+    lo = objective({"eta": [0.8], "e_opt_fraction": [0.7],
+                    "exit_thr_t1": [0.0]})[0]
+    hi = objective({"eta": [0.8], "e_opt_fraction": [0.7],
+                    "exit_thr_t1": [0.99]})[0]
+    assert lo != hi
 
 
 # --------------------------------------------------------------------------- #
