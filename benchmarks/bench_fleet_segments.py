@@ -1,0 +1,123 @@
+"""Segmented vs monolithic fleet execution: the cost of checkpointability.
+
+``fleet.run_segments`` trades one long ``lax.scan`` for ``n_segments``
+shorter jitted scans with the full carry pytree materialised on the host
+at every boundary — the substrate online adaptation hooks into.  This
+bench quantifies what that costs on a mid-size grid:
+
+* **compile time** — first-call wall time (the segmented path compiles at
+  most two scan lengths, amortised across all segments, so its compile
+  time should *drop* vs the monolithic scan's single long unroll);
+* **steady state** — device-steps/sec on the second call, isolating the
+  per-boundary host round-trip overhead for n_segments in {1, 8, 32}.
+
+Rows carry the usual throughput keys plus a ``result`` digest taken from
+``FleetResult.as_dict()`` (the JSON export mirroring ``SimResult.as_dict``)
+— also asserting segmented results stay bit-identical to the monolithic
+scan while the clock runs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import fleet
+from repro.core import energy
+from repro.core.scheduler import JobProfile, TaskSpec
+
+from .common import emit
+
+
+def _task(n_jobs=25, n_units=4, exit_at=1, unit_t=0.1):
+    margins = np.linspace(0.05, 0.5, n_units)
+    passes = np.zeros(n_units, bool)
+    passes[exit_at:] = True
+    prof = JobProfile(margins, passes, np.ones(n_units, bool))
+    return TaskSpec(
+        task_id=0, period=1.0, deadline=2.0,
+        unit_time=np.full(n_units, unit_t),
+        unit_energy=np.full(n_units, 8e-3),
+        profiles=[prof] * n_jobs,
+    )
+
+
+def _grid(horizon):
+    return fleet.SweepGrid(
+        task=_task(),
+        policies=("zygarde", "edf", "edf-m", "rr"),
+        etas=(0.3, 0.6, 0.9),
+        harvesters=(energy.Harvester("h", 0.95, 0.95, 0.08),),
+        capacitors=tuple(energy.Capacitor(capacitance_f=c)
+                         for c in (0.025, 0.05, 0.1)),
+        seeds=(0, 1),
+        horizon=horizon,
+    )
+
+
+def _digest(res: fleet.FleetResult) -> dict:
+    """Compact summary of a FleetResult via its JSON export."""
+    d = res.as_dict()
+    return dict(
+        devices=len(d["released"]),
+        released=int(np.sum(d["released"])),
+        scheduled=int(np.sum(d["scheduled"])),
+        correct=int(np.sum(d["correct"])),
+        deadline_misses=int(np.sum(d["deadline_misses"])),
+    )
+
+
+def run(quick: bool = True) -> None:
+    horizon = 20.0 if quick else 120.0
+    cfg, statics, _ = fleet.build(_grid(horizon))
+    n_dev, n_steps = cfg.n_devices, statics.n_steps
+
+    def dsteps(wall: float) -> float:
+        return round(n_dev * n_steps / wall, 1)
+
+    # monolithic scan: compile (first call) + steady state (second call)
+    t0 = time.perf_counter()
+    ref = fleet.simulate_fleet(cfg, statics)
+    ref.released.block_until_ready()
+    mono_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = fleet.simulate_fleet(cfg, statics)
+    ref.released.block_until_ready()
+    mono_steady = time.perf_counter() - t0
+
+    rows = [dict(mode="monolithic", n_segments=0, devices=n_dev,
+                 n_steps=n_steps, compile_s=round(mono_compile, 3),
+                 steady_s=round(mono_steady, 3),
+                 device_steps_per_sec=dsteps(mono_steady),
+                 result=_digest(ref))]
+
+    for n_seg in (1, 8, 32):
+        # fresh compile per segment count is impossible to isolate inside
+        # one process (the two chunk lengths cache across counts), so the
+        # first-call number for n_segments=1 carries the compile cost and
+        # the later counts show the amortised boundary overhead
+        t0 = time.perf_counter()
+        res, _ = fleet.run_segments(cfg, statics, n_seg)
+        res.released.block_until_ready()
+        first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res, _ = fleet.run_segments(cfg, statics, n_seg)
+        res.released.block_until_ready()
+        steady = time.perf_counter() - t0
+        for name in ref._fields:       # segmented == monolithic, always
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, name)),
+                np.asarray(getattr(res, name)), err_msg=name)
+        rows.append(dict(
+            mode="run_segments", n_segments=n_seg, devices=n_dev,
+            n_steps=n_steps, compile_s=round(first, 3),
+            steady_s=round(steady, 3),
+            device_steps_per_sec=dsteps(steady),
+            vs_monolithic=round(mono_steady / steady, 3),
+            result=_digest(res)))
+
+    emit("fleet_segments", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,7 @@ from . import (
     bench_early_termination,
     bench_eta,
     bench_fleet,
+    bench_fleet_segments,
     bench_loss_functions,
     bench_overhead,
     bench_scheduler,
@@ -40,6 +41,7 @@ BENCHES = (
     ("early_termination_fig16", bench_early_termination),
     ("scheduler_figs17_20", bench_scheduler),
     ("fleet_throughput", bench_fleet),
+    ("fleet", bench_fleet_segments),
     ("adapt_tune", bench_adapt),
     ("capacitor_fig21", bench_capacitor),
     ("clock_table5", bench_clock),
@@ -49,7 +51,7 @@ BENCHES = (
     ("roofline", roofline),
 )
 
-SMOKE_BENCHES = ("fleet_throughput", "adapt_tune")
+SMOKE_BENCHES = ("fleet_throughput", "fleet", "adapt_tune")
 
 
 def write_bench_json(name: str, wall_s: float, rows: dict,

@@ -1,0 +1,184 @@
+"""Online eta re-estimation on a nonstationary harvester, mid-trajectory.
+
+The paper's deployment story: a batteryless device ships with constants —
+eta measured from a reference trace, E_opt fixed at 70% of capacity — but
+the harvesting pattern it actually meets is *nonstationary*.  This demo
+drives one simulated device through three repeating supply regimes:
+
+* **solar**  — steady full-power sun: predictable and rich.  Optional DNN
+  units are free accuracy; the gate should be wide open.
+* **RF**     — choppy ambient RF at ~30% duty: unpredictable, supply just
+  covers the mandatory units.  Every optional unit is paid for out of the
+  capacitor reserve that the next regime will need.
+* **occluded** — near-blackout (rare sparse bursts): the device lives off
+  whatever reserve it banked; each wasted optional tail converts
+  one-for-one into deadline misses.
+
+A static (eta, E_opt) point cannot be right in all three regimes: the
+aggressive corner wins solar but bleeds the reserve, the conservative
+corner protects the reserve but forfeits solar accuracy, and — because the
+capacitor is large relative to the RF bursts — no stored-energy threshold
+can tell "full because the sun is out" from "momentarily full before an
+outage".  The online loop (:class:`repro.adapt.OnlineAdapter` on
+:func:`repro.fleet.run_segments`) re-estimates eta from the observed trace
+(EWMA over per-segment Eq. 3 measurements) and re-tunes E_opt from the
+observed harvest-rate headroom and miss statistics, segment by segment,
+*inside* the trajectory — and beats every constant on the tuned 10 x 10
+(eta, E_opt-fraction) grid.
+
+Run: ``PYTHONPATH=src python examples/online_adapt.py``
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import adapt, fleet
+from repro.core import energy
+from repro.core.scheduler import JobProfile, TaskSpec
+from repro.core.utility import scalarized_objective
+from repro.fleet import grid as fgrid
+
+SEED = 11
+P_ON = 0.06                  # harvest power in the ON state (W)
+SOLAR_S, RF_S, OCC_S = 32, 40, 34   # seconds per regime
+CYCLES = 3
+HORIZON = float((SOLAR_S + RF_S + OCC_S) * CYCLES)
+CAPACITANCE_F = 0.1          # large: RF bursts cannot fill it
+MISS_WEIGHT = 1.5            # scalarization: a miss costs 1.5 corrects
+SEGMENT_S = 2.5              # online adaptation period
+
+
+def make_task() -> TaskSpec:
+    """One periodic sensing task whose accuracy lives in the optional tail:
+    the utility test is willing to exit after unit 1 (cheap mandatory
+    part), but predictions only become correct at full depth — running the
+    optional units is pure accuracy when energy allows, pure waste when it
+    doesn't."""
+    n_units = 5
+    margins = np.linspace(0.05, 0.5, n_units)
+    passes = np.zeros(n_units, bool)
+    passes[1:] = True                  # utility test passes after unit 1
+    correct = np.zeros(n_units, bool)
+    correct[n_units - 1:] = True       # correct only at full depth
+    prof = JobProfile(margins, passes, correct)
+    return TaskSpec(
+        task_id=0, period=1.0, deadline=1.3,
+        unit_time=np.full(n_units, 0.1),
+        unit_energy=np.full(n_units, 8e-3),
+        profiles=[prof] * (int(HORIZON) + 2),
+    )
+
+
+def nonstationary_trace(seed: int) -> np.ndarray:
+    """solar -> RF -> occluded, repeated; one slot per second (+2 pad)."""
+    rng = np.random.default_rng(seed)
+    rf = energy.Harvester("rf", 0.50, 0.72, P_ON)        # ~30% duty, choppy
+    occ = energy.Harvester("occluded", 0.20, 0.97, P_ON)  # rare sparse bursts
+    segs = []
+    for _ in range(CYCLES):
+        segs.append(np.ones(SOLAR_S))
+        segs.append(rf.sample_events(rng, RF_S, init=1))
+        segs.append(occ.sample_events(rng, OCC_S, init=0))
+    segs.append(np.zeros(2))
+    return np.concatenate(segs).astype(np.float32)
+
+
+def build_fleet(points, events) -> tuple:
+    """One device per (eta, e_opt_fraction) point, all on the same trace."""
+    task = make_task()
+    cap = energy.Capacitor(capacitance_f=CAPACITANCE_F)
+    # the Harvester here only contributes power_on/slot_s metadata — the
+    # actual supply is the explicit nonstationary `events` trace
+    harv = energy.Harvester("nonstationary", 0.5, 0.5, P_ON)
+    devices = [
+        fgrid.device_config(task, harv, eta, cap, policy="zygarde",
+                            horizon=HORIZON, events=events,
+                            e_opt_fraction=frac)
+        for eta, frac in points
+    ]
+    statics = fleet.FleetStatics(queue_size=3, dt=0.025, horizon=HORIZON,
+                                 slot_s=1.0)
+    return fgrid.stack_configs(devices), statics
+
+
+def score(res) -> np.ndarray:
+    """On-time accuracy with the deadline-miss penalty (higher is better)."""
+    return np.asarray(scalarized_objective(
+        res.correct, res.released, res.deadline_misses,
+        miss_weight=MISS_WEIGHT))
+
+
+def run_demo(seed: int = SEED, verbose: bool = False) -> dict:
+    events = nonstationary_trace(seed)
+
+    # --- best static constants: tune (eta, E_opt) on the full trace ------- #
+    grid_pts = [(eta, frac)
+                for eta in np.linspace(0.1, 1.0, 10)
+                for frac in np.linspace(0.05, 0.95, 10)]
+    cfg, statics = build_fleet(grid_pts, events)
+    static_res = fleet.simulate_fleet(cfg, statics)   # one jitted call
+    static_scores = score(static_res)
+    best = int(np.argmax(static_scores))
+
+    # --- paper defaults: eta measured offline on the whole trace ---------- #
+    eta0 = max(energy.eta_factor((events > 0).astype(np.int8)), 0.05)
+    default_pt = (eta0, adapt.PAPER_E_OPT_FRACTION)
+    cfg1, statics1 = build_fleet([default_pt], events)
+    default_score = float(score(fleet.simulate_fleet(cfg1, statics1))[0])
+
+    # --- online: same starting point, adapted mid-trajectory -------------- #
+    adapter = adapt.OnlineAdapter(statics1, cfg1, rho=0.5, window_s=20.0,
+                                  n_max=4, supply_window_s=5.0,
+                                  supply_rho=0.7, e_opt_bounds=(0.05, 0.95),
+                                  miss_target=0.1)
+    online_res, _ = fleet.run_segments(
+        cfg1, statics1, int(HORIZON / SEGMENT_S), hook=adapter.hook)
+    online_score = float(score(online_res)[0])
+
+    out = dict(
+        best_static=dict(eta=grid_pts[best][0], e_opt_fraction=grid_pts[best][1],
+                         score=float(static_scores[best]),
+                         correct=int(static_res.correct[best]),
+                         misses=int(static_res.deadline_misses[best])),
+        default=dict(eta=eta0, e_opt_fraction=adapt.PAPER_E_OPT_FRACTION,
+                     score=default_score),
+        online=dict(score=online_score,
+                    correct=int(online_res.correct[0]),
+                    misses=int(online_res.deadline_misses[0])),
+        released=int(online_res.released[0]),
+        history=adapter.history,
+    )
+    if verbose:
+        b, o = out["best_static"], out["online"]
+        print(f"trace: {CYCLES} x (solar {SOLAR_S}s -> rf {RF_S}s -> "
+              f"occluded {OCC_S}s), {out['released']} jobs")
+        print(f"paper defaults  eta={eta0:.3f} e_opt=0.70       "
+              f"score={default_score:+.4f}")
+        print(f"best static     eta={b['eta']:.2f}  e_opt={b['e_opt_fraction']:.2f}   "
+              f"score={b['score']:+.4f}  (correct={b['correct']}, "
+              f"misses={b['misses']}; best of {len(grid_pts)} tuned points)")
+        print(f"online adapted  (starts at defaults)    "
+              f"score={o['score']:+.4f}  (correct={o['correct']}, "
+              f"misses={o['misses']})")
+        print(f"online - best static: {o['score'] - b['score']:+.4f}")
+        print("\neta_hat / E_opt-fraction trajectory (every 8th segment):")
+        for h in adapter.history[::8]:
+            frac = h["e_opt_frac"]
+            print(f"  t={h['t_end']:5.1f}s  measured={h['measured'][0]:.2f}  "
+                  f"eta_hat={h['eta_hat'][0]:.2f}  "
+                  f"e_opt_frac={frac[0] if frac is not None else float('nan'):.2f}  "
+                  f"miss_rate={h['miss_rate'][0]:.2f}")
+    return out
+
+
+def main() -> None:
+    out = run_demo(verbose=True)
+    assert out["online"]["score"] > out["best_static"]["score"], (
+        "online adaptation should beat the best static constants")
+    assert out["online"]["score"] > out["default"]["score"]
+    print("\nonline re-estimation beats every static (eta, E_opt) constant "
+          "on this nonstationary trace")
+
+
+if __name__ == "__main__":
+    main()

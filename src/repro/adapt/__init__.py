@@ -22,12 +22,32 @@ Public API::
 Drivers: ``random`` / ``grid`` (vectorized one-shot search), ``es``
 ((mu+lambda) evolution strategy), ``es-grad`` (antithetic-perturbation ES
 gradients) — see :mod:`repro.adapt.search`.
+
+Offline tuning picks constants *between* runs; :mod:`repro.adapt.online`
+closes the loop *inside* a run — an :class:`OnlineAdapter` hook on
+:func:`repro.fleet.run_segments` re-estimates eta from the observed
+harvest pattern (EWMA / rolling quantile over per-segment Eq. 3
+measurements) and rewrites the tunable FleetConfig fields mid-trajectory::
+
+    adapter = adapt.OnlineAdapter(statics)
+    res, carry = fleet.run_segments(cfg, statics, n_segments=24,
+                                    hook=adapter.hook)
 """
 from .objective import (  # noqa: F401
     PAPER_E_OPT_FRACTION,
     Objective,
     TuneProblem,
     apply_params,
+)
+from .online import (  # noqa: F401
+    ESTIMATORS,
+    EwmaEstimator,
+    OnlineAdapter,
+    QuantileEstimator,
+    miss_rate,
+    observed_eta,
+    observed_supply,
+    workload_demand,
 )
 from .search import DRIVERS, TuneResult, tune  # noqa: F401
 from .space import Param, SearchSpace  # noqa: F401

@@ -1,0 +1,332 @@
+"""In-trajectory online adaptation: the paper's runtime eta loop.
+
+Zygarde's headline contribution is that the scheduler *re-estimates* eta —
+the harvesting-pattern predictability factor of Eq. 3 — from the pattern it
+actually observes while deployed, instead of shipping a constant measured
+offline.  This module implements that loop on top of segmented fleet
+simulation (:func:`repro.fleet.run_segments`).  After every segment the
+host hook:
+
+* measures eta over the trailing window of the *observed* harvest trace
+  (exactly :func:`repro.core.energy.eta_factor`, the offline estimator,
+  applied online to the prefix the device has lived through) and smooths
+  the per-segment measurements with an EWMA or rolling-quantile estimator —
+  by construction the estimate never leaves the envelope of the
+  measurements it has seen, and converges geometrically on a stationary
+  trace (``tests/test_online.py`` pins both properties);
+* re-tunes the E_opt threshold from two observed statistics: the
+  *harvest-rate headroom* (observed supply vs the task set's
+  mandatory/full-execution demand, a feedforward signal that closes the
+  optional-unit gate before a lean phase can drain the reserve) and the
+  per-segment *deadline-miss rate* (a fast-attack feedback override —
+  any missy segment snaps the threshold to its conservative bound);
+* writes the new values *mid-trajectory* into the tunable
+  :class:`repro.fleet.state.FleetConfig` array fields (``eta``, ``e_opt``,
+  ``persistent``) that the priority math in :mod:`repro.core.policy` reads
+  live — no recompilation, the next segment's scan just sees new arrays.
+
+Usage::
+
+    adapter = OnlineAdapter(statics, cfg)
+    res, carry = fleet.run_segments(cfg, statics, n_segments=128,
+                                    hook=adapter.hook)
+    adapter.history[-1]["eta_hat"]      # the estimator's trajectory
+
+``examples/online_adapt.py`` runs this loop on a nonstationary
+(solar -> occluded -> RF) trace where it beats the best static tuned
+(eta, E_opt) constants.  The measurements loop over devices in python
+(``eta_factor`` is a host-side numpy routine), so the hook is meant for
+the adaptation regime — one to a few hundred devices — not for
+10^5-device throughput sweeps; those keep the monolithic scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..core.energy import eta_factor
+from ..fleet.state import DeviceState, FleetConfig, FleetStatics
+
+_F32 = np.float32
+
+
+# --------------------------------------------------------------------------- #
+# Estimators: smooth per-segment measurements into a running estimate.
+# --------------------------------------------------------------------------- #
+
+
+class EwmaEstimator:
+    """Exponentially-weighted moving average over measurement vectors.
+
+    The first measurement initialises the estimate; each later one moves it
+    by ``rho`` of the residual.  Two properties the online loop relies on
+    (and the hypothesis tests in ``tests/test_online.py`` verify):
+
+    * **envelope**: for ``rho`` in (0, 1] the estimate is a convex
+      combination of past measurements, so it always stays within
+      ``[min, max]`` of the measurements seen so far;
+    * **convergence**: on a stationary stream (constant measurement ``m``)
+      the error contracts geometrically,
+      ``|est - m| <= (1 - rho)^n |e0 - m|``.
+    """
+
+    def __init__(self, rho: float = 0.5):
+        if not 0.0 < rho <= 1.0:
+            raise ValueError(f"rho must be in (0, 1], got {rho}")
+        self.rho = float(rho)
+        self.estimate: Optional[np.ndarray] = None
+
+    def update(self, measurement: np.ndarray) -> np.ndarray:
+        m = np.asarray(measurement, np.float64)
+        if self.estimate is None:
+            self.estimate = m.copy()
+        else:
+            self.estimate = self.estimate + self.rho * (m - self.estimate)
+        return self.estimate
+
+
+class QuantileEstimator:
+    """Rolling-window quantile over the last ``window`` measurements.
+
+    ``q = 0.5`` is a robust (median) alternative to the EWMA when single
+    segments can produce outlier eta measurements (very short windows, or a
+    burst boundary splitting a segment).  A quantile of observed values
+    lies between the window's min and max, so the same envelope property
+    holds.
+    """
+
+    def __init__(self, q: float = 0.5, window: int = 8):
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.q = float(q)
+        self.measurements: deque = deque(maxlen=int(window))
+        self.estimate: Optional[np.ndarray] = None
+
+    def update(self, measurement: np.ndarray) -> np.ndarray:
+        self.measurements.append(np.asarray(measurement, np.float64))
+        self.estimate = np.quantile(
+            np.stack(tuple(self.measurements)), self.q, axis=0)
+        return self.estimate
+
+
+ESTIMATORS = {"ewma": EwmaEstimator, "quantile": QuantileEstimator}
+
+
+# --------------------------------------------------------------------------- #
+# Per-segment observed statistics.
+# --------------------------------------------------------------------------- #
+
+
+def observed_eta(events: np.ndarray, t_end: float, slot_s: float,
+                 window_s: float, n_max: int = 5) -> np.ndarray:
+    """Measure eta per device from the harvest trace observed so far.
+
+    ``events`` is the ``(D, S)`` FleetConfig event stream (0/1 flags or
+    fractional amplitudes); only slots strictly before ``t_end`` — the part
+    of the trace the device has actually lived through — participate, and
+    of those only the trailing ``window_s`` seconds, so the estimate tracks
+    a *nonstationary* supply instead of averaging over the whole past.
+    Returns ``(D,)`` eta values via :func:`repro.core.energy.eta_factor`
+    (Eq. 3) on the binarized window.
+    """
+    events = np.atleast_2d(np.asarray(events))
+    n_seen = int(min(t_end / slot_s, events.shape[1]))
+    window = max(int(round(window_s / slot_s)), 2)
+    seen = events[:, max(0, n_seen - window):n_seen]
+    if seen.shape[1] < 2:
+        # nothing observed yet: a patternless prior
+        return np.zeros(events.shape[0])
+    binary = (seen > 0.0).astype(np.int8)
+    return np.array([eta_factor(row, n_max=n_max) for row in binary])
+
+
+def observed_supply(events: np.ndarray, power_on: np.ndarray, t_end: float,
+                    slot_s: float, window_s: float) -> np.ndarray:
+    """Mean observed harvest power (W) per device over the trailing
+    ``window_s`` seconds before ``t_end`` — the abundance statistic that
+    complements :func:`observed_eta`'s predictability statistic."""
+    events = np.atleast_2d(np.asarray(events))
+    n_seen = int(min(t_end / slot_s, events.shape[1]))
+    window = max(int(round(window_s / slot_s)), 1)
+    seen = events[:, max(0, n_seen - window):n_seen]
+    if seen.shape[1] == 0:
+        return np.zeros(events.shape[0])
+    return seen.mean(axis=1) * np.asarray(power_on, np.float64)
+
+
+def workload_demand(cfg: FleetConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Per-device (mandatory_rate, full_rate) power demand in watts.
+
+    ``mandatory_rate`` averages each task's mandatory depth over its job
+    profiles (first unit whose utility test passes, else the full depth);
+    ``full_rate`` assumes every unit of every task runs.  Both are static
+    workload facts the deployed scheduler knows, used by
+    :class:`OnlineAdapter` to turn an observed supply rate into an
+    energy-headroom fraction.
+    """
+    ue = np.asarray(cfg.unit_energy)           # (D, K, U)
+    nu = np.asarray(cfg.n_units)               # (D, K)
+    period = np.asarray(cfg.period)            # (D, K)
+    passes = np.asarray(cfg.passes)            # (D, K, J, U)
+    n_rel = np.asarray(cfg.n_releases)         # (D, K)
+    d_dev, k_task, _ = ue.shape
+    mand = np.zeros(d_dev)
+    full = np.zeros(d_dev)
+    for d in range(d_dev):
+        for k in range(k_task):
+            n = int(nu[d, k])
+            full[d] += ue[d, k, :n].sum() / period[d, k]
+            depths = [
+                (int(np.flatnonzero(passes[d, k, j, :n])[0]) + 1
+                 if passes[d, k, j, :n].any() else n)
+                for j in range(int(n_rel[d, k]))
+            ]
+            if depths:
+                mand[d] += np.mean(
+                    [ue[d, k, :dd].sum() for dd in depths]) / period[d, k]
+    return mand, full
+
+
+def miss_rate(carry: DeviceState, prev: Optional[DeviceState]) -> np.ndarray:
+    """Per-device deadline-miss fraction of the jobs released during the
+    last segment (difference of the carry's cumulative counters)."""
+    miss = np.asarray(carry.m_misses, np.float64).sum(axis=-1)
+    rel = np.asarray(carry.next_rel, np.float64).sum(axis=-1)
+    if prev is not None:
+        miss = miss - np.asarray(prev.m_misses, np.float64).sum(axis=-1)
+        rel = rel - np.asarray(prev.next_rel, np.float64).sum(axis=-1)
+    return miss / np.maximum(rel, 1.0)
+
+
+# --------------------------------------------------------------------------- #
+# The adaptation hook.
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class OnlineAdapter:
+    """Runtime eta re-estimation + E_opt re-tuning as a
+    :func:`repro.fleet.run_segments` hook.
+
+    Construct one per trajectory (it carries mutable estimator state),
+    passing the run's ``statics`` and the initial ``cfg`` (for the workload
+    demand rates), then hand ``adapter.hook`` to ``run_segments``.
+
+    Fields:
+
+    * ``estimator`` — ``"ewma"`` (weight ``rho``) or ``"quantile"``
+      (``q``/``window`` segments), per :data:`ESTIMATORS`; smooths the
+      per-segment eta measurements.
+    * ``window_s`` / ``n_max`` — trailing trace window and h(N) depth for
+      the per-segment :func:`observed_eta`; shorter windows track faster
+      but measure noisier.
+    * ``adapt_e_opt`` — enable the threshold controller: the E_opt
+      fraction interpolates between ``e_opt_bounds`` by the observed
+      *energy headroom* ``(supply - mandatory) / (full - mandatory)``
+      (supply EWMA-smoothed with ``supply_rho`` over ``supply_window_s``
+      trailing seconds), and any segment whose miss fraction exceeds
+      ``miss_target`` snaps it to the conservative upper bound.
+    """
+
+    statics: FleetStatics
+    cfg: dataclasses.InitVar[Optional[FleetConfig]] = None
+    estimator: str = "ewma"
+    rho: float = 0.5
+    q: float = 0.5
+    window: int = 8
+    window_s: float = 20.0
+    n_max: int = 4
+    adapt_e_opt: bool = True
+    supply_window_s: float = 5.0
+    supply_rho: float = 0.7
+    e_opt_bounds: tuple[float, float] = (0.05, 0.95)
+    miss_target: float = 0.1
+    history: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self, cfg: Optional[FleetConfig]):
+        if self.estimator not in ESTIMATORS:
+            raise ValueError(
+                f"unknown estimator {self.estimator!r}; "
+                f"choose from {sorted(ESTIMATORS)}")
+        if self.estimator == "ewma":
+            self._est = EwmaEstimator(self.rho)
+        else:
+            self._est = QuantileEstimator(self.q, self.window)
+        self._supply_hat: Optional[np.ndarray] = None
+        self._base_persistent: Optional[np.ndarray] = None
+        self._demand = (workload_demand(cfg) if cfg is not None
+                        and self.adapt_e_opt else None)
+        self._prev_carry: Optional[DeviceState] = None
+        # host-side snapshots of the config leaves the adapter reads but
+        # never rewrites (events is the largest leaf — fetching it from
+        # device once instead of at every segment boundary)
+        self._events: Optional[np.ndarray] = None
+        self._power_on: Optional[np.ndarray] = None
+        self._capacity: Optional[np.ndarray] = None
+
+    @property
+    def eta_hat(self) -> Optional[np.ndarray]:
+        """The current ``(D,)`` eta estimate (None before the first hook)."""
+        return self._est.estimate
+
+    def hook(self, seg: int, t_end: float, cfg: FleetConfig,
+             carry: DeviceState) -> FleetConfig:
+        """``run_segments`` hook: measure, re-estimate, rewrite the tunable
+        config fields for the next segment."""
+        if self._base_persistent is None:
+            # the builder's persistent flag conflates harvester and eta;
+            # remember the harvester half so a recovering eta can re-widen
+            self._base_persistent = np.asarray(cfg.persistent)
+            self._events = np.asarray(cfg.events)
+            self._power_on = np.asarray(cfg.power_on)
+            self._capacity = np.asarray(cfg.capacity, np.float64)
+        events = self._events
+        slot_s = self.statics.slot_s
+        measured = observed_eta(events, t_end, slot_s, self.window_s,
+                                self.n_max)
+        eta_hat = np.clip(self._est.update(measured), 0.0, 1.0)
+        upd = dict(
+            eta=jnp.asarray(eta_hat.astype(_F32)),
+            # the Eq. 6 fast path needs BOTH a persistent harvester and a
+            # saturated eta estimate (mirrors adapt.objective.apply_params)
+            persistent=jnp.asarray(self._base_persistent
+                                   & (eta_hat >= 1.0)),
+        )
+        rate = miss_rate(carry, self._prev_carry)
+        frac = None
+        supply = None
+        if self.adapt_e_opt:
+            if self._demand is None:
+                self._demand = workload_demand(cfg)
+            mand, full = self._demand
+            supply = observed_supply(events, self._power_on, t_end,
+                                     slot_s, self.supply_window_s)
+            self._supply_hat = (
+                supply if self._supply_hat is None
+                else self._supply_hat
+                + self.supply_rho * (supply - self._supply_hat))
+            headroom = ((self._supply_hat - mand)
+                        / np.maximum(full - mand, 1e-9))
+            lo, hi = self.e_opt_bounds
+            frac = np.clip(hi - (hi - lo) * headroom, lo, hi)
+            # fast-attack feedback: a missy segment overrides the
+            # feedforward term outright
+            frac = np.where(rate > self.miss_target, hi, frac)
+            upd["e_opt"] = jnp.asarray((frac * self._capacity).astype(_F32))
+        self._prev_carry = carry
+        self.history.append(dict(
+            seg=seg, t_end=float(t_end),
+            measured=measured.copy(), eta_hat=eta_hat.copy(),
+            miss_rate=rate.copy(),
+            supply_hat=(None if self._supply_hat is None
+                        else self._supply_hat.copy()),
+            e_opt_frac=None if frac is None else frac.copy(),
+        ))
+        return cfg._replace(**upd)

@@ -215,6 +215,58 @@ class SimConfig:
     start_charged: bool = False
 
 
+def simulate_stepped(
+    tasks: Sequence[TaskSpec],
+    harvester: Harvester,
+    eta: float,
+    cap: Optional[Capacitor] = None,
+    sim: Optional[SimConfig] = None,
+    dt: Optional[float] = None,
+) -> SimResult:
+    """Discretized single-device frontend over the unified step core.
+
+    Same signature and :class:`SimResult` contract as :func:`simulate`, but
+    instead of the event-driven python loop it runs the pure
+    ``(StepParams, DeviceCarry, t) -> DeviceCarry`` transition from
+    :mod:`repro.core.step` with one scalar ``lax.scan`` — no ``vmap``, no
+    device axis.  Because the fleet path is exactly ``vmap`` of the same
+    functions, results here are *bit-exact* against the corresponding
+    device of :func:`repro.fleet.simulate_fleet` on the shared fixed clock
+    (asserted in ``tests/test_parity.py``), while the event-driven
+    :func:`simulate` agrees only within the documented discretization
+    bounds.  ``dt`` defaults to one fragment time of the finest-grained
+    task — the scalar path's execution quantum.
+    """
+    # local imports: the grid builders live fleet-side (they translate the
+    # scalar objects into step-core arrays) and pull in jax
+    import jax
+
+    from ..fleet.grid import from_sim_config
+    from .step import simulate_device
+
+    cfg, statics = from_sim_config(tasks, harvester, eta, cap=cap, sim=sim,
+                                   dt=dt)
+    params = jax.tree.map(lambda l: l[0], cfg)   # strip the device axis
+    r = simulate_device(params, statics)
+    return SimResult(
+        released=int(r.released),
+        scheduled=int(r.scheduled),
+        correct=int(r.correct),
+        deadline_misses=int(r.deadline_misses),
+        units_executed=int(r.units_executed),
+        optional_units=int(r.optional_units),
+        busy_time=float(r.busy_time),
+        idle_no_energy=float(r.idle_no_energy),
+        reboots=int(r.reboots),
+        wasted_reexec=float(r.wasted_reexec),
+        sim_time=float(r.sim_time),
+        task_released=np.asarray(r.task_released, np.int64),
+        task_scheduled=np.asarray(r.task_scheduled, np.int64),
+        task_correct=np.asarray(r.task_correct, np.int64),
+        task_misses=np.asarray(r.task_misses, np.int64),
+    )
+
+
 def simulate(
     tasks: Sequence[TaskSpec],
     harvester: Harvester,

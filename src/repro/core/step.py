@@ -1,0 +1,548 @@
+"""The unified per-device step core: ONE implementation of the scheduler
+transition shared by every simulation frontend.
+
+Everything that happens to a single intermittently-powered device in one
+fixed timestep — release/admit, expiry, priority pick via
+:mod:`repro.core.policy`, fragment execution, capacitor charge/discharge,
+metric accumulation — lives here as pure functions over two pytrees:
+
+* :class:`StepParams` — immutable per-device configuration (task tables,
+  harvester event stream, scheduler scalars).  No device axis; batching is
+  the caller's job.
+* :class:`DeviceCarry` — the mutable simulation state threaded through
+  ``(params, carry, t) -> carry`` transitions: capacitor energy, the
+  fixed-size job queue as parallel arrays, metric accumulators.
+
+Three frontends consume the same functions:
+
+* :func:`repro.core.scheduler.simulate_stepped` — the scalar discretized
+  frontend: one device, one ``lax.scan``, no ``vmap``.
+* :mod:`repro.fleet.simulator` — ``jax.vmap`` adds the device axis and
+  ``lax.scan`` the time axis (optionally chunked into segments with a host
+  hook between chunks, the substrate for in-trajectory online adaptation).
+* :mod:`repro.kernels.fleet_priority` — the Pallas kernel evaluates the
+  pick stage on VMEM tiles; its post-score selection semantics are
+  :func:`select_and_charge`, imported from here so the in-tile math can
+  never drift from the reference.
+
+Because the fleet path is literally ``vmap`` of these functions, the
+scalar-stepped and fleet paths are *bit-exact* on the shared clock — the
+parity harness in ``tests/test_parity.py`` asserts exact equality, not
+calibrated tolerances.
+
+Shapes use ``K`` tasks per device, ``Q`` queue slots, ``U`` units per job,
+``J`` jobs per task, ``S`` harvester slots.  Static (python) dimensions and
+step sizes live in the hashable :class:`StepStatics` (a ``jax.jit`` static
+argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import policy as P
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class StepStatics:
+    """Hashable static configuration (jit static argument)."""
+
+    queue_size: int = 3
+    dt: float = 0.025            # fixed timestep (s); keep <= min unit_time
+    horizon: float = 600.0
+    slot_s: float = 1.0          # harvester slot length (s)
+
+    @property
+    def n_steps(self) -> int:
+        return int(round(self.horizon / self.dt))
+
+
+class StepParams(NamedTuple):
+    """Immutable per-device configuration arrays.
+
+    The shapes below are the *per-device* view consumed by the step
+    functions; the fleet path stacks a leading ``D`` (device) axis on every
+    leaf (see :class:`repro.fleet.state.FleetConfig`, an alias of this
+    class) and ``vmap`` strips it back off.
+    """
+
+    # scheduler / energy scalars
+    policy: jax.Array        # int32, repro.core.policy.POLICY_IDS
+    imprecise: jax.Array     # bool: early exit enabled (zygarde, edf-m)
+    is_edfm: jax.Array       # bool: EDF-M never runs optional units
+    eta: jax.Array           # f32
+    alpha: jax.Array         # f32, 1 / max relative deadline over the task set
+    beta: jax.Array          # f32
+    persistent: jax.Array    # bool: use zeta (Eq. 6) instead of zeta_I (Eq. 7)
+    capacity: jax.Array      # f32, usable capacitor energy (J)
+    start_energy: jax.Array  # f32; negative = cold-boot dead-zone debt
+    e_man: jax.Array         # f32, minimum energy to run a fragment
+    e_opt: jax.Array         # f32, Eq. 7 optional-unit energy threshold
+    power_on: jax.Array      # f32, harvester power in the ON state (W)
+    # timekeeping: deterministic linear clock drift (fleet-path CHRT model;
+    # the scalar CHRTClock's random per-read offset has no batched
+    # equivalent, so the step core models the *accumulated* error as a rate:
+    # t_read = t * (1 + clock_drift))
+    clock_drift: jax.Array   # f32; 0 = exact RTC
+    # tunable per-unit utility-test thresholds (repro.adapt): when
+    # use_exit_thr is set the utility test compares the live margin against
+    # exit_thr instead of the precomputed `passes` table.  These are the
+    # fields in-trajectory online adaptation rewrites between segments.
+    use_exit_thr: jax.Array  # bool
+    exit_thr: jax.Array      # (K, U) f32
+    # task-set table, (K,): K periodic task streams per device
+    period: jax.Array        # f32
+    rel_deadline: jax.Array  # f32, relative deadline
+    fragments: jax.Array     # f32, fragments per unit
+    n_units: jax.Array       # int32, <= U (live units of each task)
+    n_releases: jax.Array    # int32, jobs released within the horizon (<= J)
+    # per-task workload tables
+    unit_time: jax.Array     # (K, U) f32, seconds per unit
+    unit_energy: jax.Array   # (K, U) f32, joules per unit
+    margins: jax.Array       # (K, J, U) f32, utility-test margins
+    passes: jax.Array        # (K, J, U) bool, utility test passes after unit
+    correct: jax.Array       # (K, J, U) bool, unit prediction correct
+    # harvester event stream, (S,) f32 — 0/1 flags or fractional amplitudes
+    events: jax.Array
+
+    @property
+    def n_devices(self) -> int:
+        """Fleet-level accessor (leading device axis stacked on every leaf)."""
+        return self.policy.shape[0]
+
+    @property
+    def n_tasks(self) -> int:
+        return self.period.shape[-1]
+
+
+class DeviceCarry(NamedTuple):
+    """Mutable per-device simulation state (no device axis; vmap adds it)."""
+
+    energy: jax.Array        # f32 scalar; < 0 while paying cold-boot debt
+    was_off: jax.Array       # bool scalar: last activity was a power-down
+    next_rel: jax.Array      # int32 (K,): next job index to release, per task
+    # round-robin task cursor: the task id the rr policy serves next (the
+    # scalar simulator's rr_cursor); unused by the other policies
+    rr_cursor: jax.Array     # int32 scalar
+    # limited preemption (paper §4.1): once a unit starts, it runs to its
+    # boundary — the scheduler only re-picks between units.  lock_job guards
+    # against the slot being recycled for a new job while locked.
+    lock_slot: jax.Array     # int32 scalar: queue slot mid-unit, -1 if none
+    lock_job: jax.Array      # int32 scalar: job id the lock belongs to
+    # fixed-size job queue, (Q,) each
+    q_active: jax.Array      # bool
+    q_release: jax.Array     # f32
+    q_deadline: jax.Array    # f32 (absolute)
+    q_task: jax.Array        # int32, index into the (K, ...) task tables
+    q_job: jax.Array         # int32, index into the (K, J, U) profile tables
+    q_unit: jax.Array        # int32, next unit to execute
+    q_time_left: jax.Array   # f32, seconds left in the current unit
+    q_exited: jax.Array      # int32, unit where the utility test passed (-1)
+    q_last_pred: jax.Array   # int32, deepest executed unit (-1)
+    q_mand_time: jax.Array   # f32, mandatory-completion time (-1)
+    # metric accumulators, (K,) per task (mirror scheduler.SimResult.task_*)
+    m_scheduled: jax.Array   # int32
+    m_correct: jax.Array     # int32
+    m_misses: jax.Array      # int32
+    m_units: jax.Array       # int32
+    m_optional: jax.Array    # int32
+    # device-level energy/time accumulators (scalars)
+    m_reboots: jax.Array     # int32
+    m_busy: jax.Array        # f32
+    m_idle: jax.Array        # f32
+    m_wasted: jax.Array      # f32
+
+
+class StepResult(NamedTuple):
+    """Finalized metrics — SimResult-shaped, per device.
+
+    With the fleet's stacked device axis, aggregate fields are ``(D,)``
+    (summed over the task set, matching the scalar ``SimResult`` totals) and
+    the ``task_*`` fields break the job counters down per task as ``(D, K)``
+    arrays (see :class:`repro.fleet.state.FleetResult`, an alias).
+    """
+
+    released: jax.Array
+    scheduled: jax.Array
+    correct: jax.Array
+    deadline_misses: jax.Array
+    units_executed: jax.Array
+    optional_units: jax.Array
+    busy_time: jax.Array
+    idle_no_energy: jax.Array
+    reboots: jax.Array
+    wasted_reexec: jax.Array
+    sim_time: jax.Array
+    # per-task breakdowns, (K,) / fleet (D, K)
+    task_released: jax.Array
+    task_scheduled: jax.Array
+    task_correct: jax.Array
+    task_misses: jax.Array
+    task_units: jax.Array
+    task_optional: jax.Array
+
+    def device(self, i: int) -> dict:
+        """Metrics of device ``i`` as a python dict (SimResult field names);
+        scalar metrics become python numbers, per-task rows become lists."""
+        out = {}
+        for k, v in self._asdict().items():
+            row = v[i]
+            out[k] = row.item() if row.ndim == 0 else row.tolist()
+        return out
+
+    def as_dict(self) -> dict:
+        """JSON-serializable dict mirroring ``SimResult.as_dict``: scalar
+        leaves become python numbers, array leaves (the ``(D,)`` metric
+        columns and ``(D, K)`` ``task_*`` breakdowns) become nested lists —
+        what ``benchmarks/run.py`` writes into ``BENCH_<name>.json``."""
+        out = {}
+        for k, v in self._asdict().items():
+            a = np.asarray(v)
+            out[k] = a.item() if a.ndim == 0 else a.tolist()
+        return out
+
+
+def init_carry(params: StepParams, statics: StepStatics) -> DeviceCarry:
+    """Initial carry for one device (call under vmap for a fleet)."""
+    q = statics.queue_size
+    k = params.period.shape[0]   # per-device view: task axis is leading
+    f32 = jnp.float32
+    i32 = jnp.int32
+    zero_i = jnp.zeros((), i32)
+    zeros_k = jnp.zeros((k,), i32)
+    return DeviceCarry(
+        energy=params.start_energy.astype(f32),
+        was_off=jnp.zeros((), bool),
+        next_rel=zeros_k,
+        rr_cursor=zero_i,
+        lock_slot=jnp.full((), -1, i32),
+        lock_job=jnp.full((), -1, i32),
+        q_active=jnp.zeros((q,), bool),
+        q_release=jnp.zeros((q,), f32),
+        q_deadline=jnp.zeros((q,), f32),
+        q_task=jnp.zeros((q,), i32),
+        q_job=jnp.zeros((q,), i32),
+        q_unit=jnp.zeros((q,), i32),
+        q_time_left=jnp.zeros((q,), f32),
+        q_exited=jnp.full((q,), -1, i32),
+        q_last_pred=jnp.full((q,), -1, i32),
+        q_mand_time=jnp.full((q,), -1.0, f32),
+        m_scheduled=zeros_k,
+        m_correct=zeros_k,
+        m_misses=zeros_k,
+        m_units=zeros_k,
+        m_optional=zeros_k,
+        m_reboots=zero_i,
+        m_busy=jnp.zeros((), f32),
+        m_idle=jnp.zeros((), f32),
+        m_wasted=jnp.zeros((), f32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Transition stages.
+# --------------------------------------------------------------------------- #
+
+
+def finish_counts(params: StepParams, st: DeviceCarry, mask: jax.Array):
+    """Tally (scheduled, correct, missed) for the queue slots in ``mask``,
+    broken down per task — ``(K,)`` int arrays each."""
+    n_tasks = params.period.shape[0]
+    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
+    sched = mask & (st.q_mand_time >= 0.0) & (st.q_mand_time <= st.q_deadline)
+    job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
+    lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
+    corr = sched & (st.q_last_pred >= 0) & params.correct[tk, job, lp]
+    miss = mask & ~sched
+    onehot = tk[:, None] == jnp.arange(n_tasks)[None, :]   # (Q, K)
+
+    def per_task(m):
+        return jnp.sum(m[:, None] & onehot, axis=0)
+
+    return per_task(sched), per_task(corr), per_task(miss)
+
+
+def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics
+          ) -> DeviceCarry:
+    """Admit at most one released job per task (the builder asserts
+    dt < period).  The static python loop over the task axis admits in task
+    order — the same order the scalar path's stable release sort yields for
+    simultaneous releases."""
+    q = statics.queue_size
+    n_tasks = params.period.shape[0]
+    for k in range(n_tasks):
+        rel_time = st.next_rel[k].astype(_F32) * params.period[k]
+        releasing = (st.next_rel[k] < params.n_releases[k]) & (rel_time <= t)
+
+        free = ~st.q_active
+        has_free = jnp.any(free)
+        # overflow: evict the earliest-deadline job whose mandatory part is
+        # done (optional-only work yields to the new arrival — mandatory
+        # first, §5.2)
+        evictable = st.q_active & (st.q_exited >= 0)
+        has_evict = jnp.any(evictable)
+        victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf))
+        evict = releasing & ~has_free & has_evict
+        vmask = evict & (jnp.arange(q) == victim)
+        d_sched, d_corr, d_miss = finish_counts(params, st, vmask)
+
+        insert = releasing & (has_free | has_evict)
+        slot = jnp.where(has_free, jnp.argmax(free), victim)
+        ins = insert & (jnp.arange(q) == slot)
+        dropped = releasing & ~insert   # queue overflow, nothing evictable
+        k_hot = jnp.arange(n_tasks) == k
+
+        st = st._replace(
+            next_rel=st.next_rel.at[k].add(releasing),
+            q_active=(st.q_active & ~vmask) | ins,
+            q_release=jnp.where(ins, rel_time, st.q_release),
+            q_deadline=jnp.where(ins, rel_time + params.rel_deadline[k],
+                                 st.q_deadline),
+            q_task=jnp.where(ins, k, st.q_task),
+            q_job=jnp.where(ins, st.next_rel[k], st.q_job),
+            q_unit=jnp.where(ins, 0, st.q_unit),
+            q_time_left=jnp.where(ins, params.unit_time[k, 0],
+                                  st.q_time_left),
+            q_exited=jnp.where(ins, -1, st.q_exited),
+            q_last_pred=jnp.where(ins, -1, st.q_last_pred),
+            q_mand_time=jnp.where(ins, -1.0, st.q_mand_time),
+            m_scheduled=st.m_scheduled + d_sched,
+            m_correct=st.m_correct + d_corr,
+            m_misses=st.m_misses + d_miss + (dropped & k_hot),
+        )
+    return st
+
+
+def drop_expired(params: StepParams, st: DeviceCarry, t) -> DeviceCarry:
+    # the device expires jobs against its *drifting* clock (fleet CHRT
+    # model): a fast clock (drift > 0) drops jobs before their true deadline
+    t_read = t * (1.0 + params.clock_drift)
+    expired = st.q_active & (t_read >= st.q_deadline)
+    d_sched, d_corr, d_miss = finish_counts(params, st, expired)
+    return st._replace(
+        q_active=st.q_active & ~expired,
+        m_scheduled=st.m_scheduled + d_sched,
+        m_correct=st.m_correct + d_corr,
+        m_misses=st.m_misses + d_miss,
+    )
+
+
+def pick_inputs(params: StepParams, st: DeviceCarry, t,
+                statics: StepStatics):
+    """Per-slot priority/energy ingredients shared by the jnp pick and the
+    Pallas kernel: each slot gathers its own task's row of the (K, U) /
+    (K, J, U) tables before the shared priority math runs."""
+    n_tasks = params.period.shape[0]
+    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
+    u = jnp.clip(st.q_unit, 0, params.unit_time.shape[1] - 1)
+    unit_t = params.unit_time[tk, u]
+    unit_e = params.unit_energy[tk, u]
+    gate_e = jnp.maximum(unit_e / params.fragments[tk], params.e_man)
+    drain = unit_e * (statics.dt / unit_t)
+    job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
+    lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
+    utility = jnp.where(st.q_last_pred >= 0, params.margins[tk, job, lp], 0.0)
+    mandatory = st.q_exited < 0
+    laxity = st.q_deadline - t
+    n_slots = params.events.shape[0]
+    slot = jnp.minimum((t / statics.slot_s).astype(jnp.int32), n_slots - 1)
+    charge = params.events[slot] * params.power_on * statics.dt
+    # limited preemption: a slot mid-unit is forced until the unit boundary
+    # (unless it expired or its slot was recycled for a newer job)
+    ls = jnp.clip(st.lock_slot, 0, st.q_active.shape[0] - 1)
+    locked = ((st.lock_slot >= 0) & st.q_active[ls]
+              & (st.q_job[ls] == st.lock_job))
+    forced = jnp.where(locked, ls, -1).astype(jnp.int32)
+    # rr task rotation: distance of each slot's task from the rr cursor
+    # (identically 0 when K == 1, keeping the FIFO key bit-identical)
+    task_rank = jnp.mod(tk - st.rr_cursor, n_tasks).astype(_F32)
+    return (laxity, utility, mandatory, gate_e, drain, charge, forced,
+            task_rank)
+
+
+def select_and_charge(scores, threshold, forced, energy, charge, capacity,
+                      gate_e, drain):
+    """Post-score selection + fused capacitor update — the shared reference
+    semantics of the pick stage.
+
+    Reduces over the trailing (queue) axis; leading axes batch.  The jnp
+    pick calls this with ``(Q,)`` scores and scalar per-device operands, the
+    Pallas ``fleet_priority`` kernel with ``(block_d, Q)`` VMEM tiles — both
+    therefore apply the exact same argmax / threshold / energy-gate math.
+    Uses only iota/arithmetic (no gathers) so the body is Mosaic-safe.
+    """
+    sel = jnp.where(forced >= 0, forced,
+                    jnp.argmax(scores, axis=-1)).astype(jnp.int32)
+    picked = (forced >= 0) | (jnp.max(scores, axis=-1) > threshold)
+    # lane-select the chosen slot's energy gate / drain (iota keeps the
+    # expression gather-free inside Pallas tiles)
+    onehot = (lax.broadcasted_iota(jnp.int32, scores.shape, scores.ndim - 1)
+              == sel[..., None])
+    gate_sel = jnp.sum(jnp.where(onehot, gate_e, 0.0), axis=-1)
+    drain_sel = jnp.sum(jnp.where(onehot, drain, 0.0), axis=-1)
+    run = picked & (energy >= gate_sel)
+    e_new = jnp.minimum(energy + charge, capacity) - run * drain_sel
+    return sel, picked, run, e_new
+
+
+def pick(params: StepParams, st: DeviceCarry, t, statics: StepStatics):
+    """Priority-argmax + fused capacitor charge/discharge (pure-jnp path)."""
+    (laxity, utility, mandatory, gate_e, drain, charge, forced,
+     task_rank) = pick_inputs(params, st, t, statics)
+    scores, thr = P.policy_scores(
+        params.policy, st.q_active, laxity, st.q_release, utility, mandatory,
+        params.alpha, params.beta, params.eta, st.energy, params.e_opt,
+        params.persistent, task_rank)
+    return select_and_charge(scores, thr, forced, st.energy, charge,
+                             params.capacity, gate_e, drain)
+
+
+def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
+               e_new, statics: StepStatics) -> DeviceCarry:
+    """Advance the selected job by dt; handle unit/job completion."""
+    q = statics.queue_size
+    n_tasks = params.period.shape[0]
+    u_max = params.unit_time.shape[1] - 1
+    oh = jnp.arange(q) == sel
+    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
+    tk_sel = tk[sel]
+
+    u_sel = jnp.clip(st.q_unit[sel], 0, u_max)
+    frag_t = params.unit_time[tk_sel, u_sel] / params.fragments[tk_sel]
+
+    # power-down / reboot bookkeeping (the initial cold boot counts wasted
+    # half-fragment re-execution but not a reboot — matches the scalar path)
+    reboot = run & st.was_off
+    was_off = jnp.where(run, False, jnp.where(picked, True, st.was_off))
+    idle_inc = jnp.where(picked & ~run, statics.dt, 0.0)
+
+    # execute dt of the selected unit
+    time_left = st.q_time_left - jnp.where(run & oh, statics.dt, 0.0)
+    complete = run & oh & (time_left <= statics.dt * 1e-3)
+
+    u = jnp.clip(st.q_unit, 0, u_max)
+    job = jnp.clip(st.q_job, 0, params.passes.shape[1] - 1)
+    n_units = params.n_units[tk]                   # (Q,) per-slot task depth
+    next_u = jnp.clip(st.q_unit + 1, 0, u_max)
+    done_any = jnp.any(complete)
+    mandatory = st.q_exited < 0
+
+    last_pred = jnp.where(complete, u, st.q_last_pred)
+    unit = jnp.where(complete, st.q_unit + 1, st.q_unit)
+    time_left = jnp.where(complete, params.unit_time[tk, next_u], time_left)
+
+    # utility test at the unit boundary (imprecise policies only); tuned
+    # per-unit thresholds (repro.adapt) re-evaluate the test against the
+    # live margin, otherwise the precomputed passes table applies
+    passed = jnp.where(params.use_exit_thr,
+                       P.exit_test(params.margins[tk, job, u],
+                                   params.exit_thr[tk, u]),
+                       params.passes[tk, job, u])
+    exit_now = complete & params.imprecise & (st.q_exited < 0) & passed
+    exited = jnp.where(exit_now, u, st.q_exited)
+    # never-confident full execution => the whole DNN was mandatory
+    full_mand = complete & (exited < 0) & (st.q_unit + 1 >= n_units)
+    exited = jnp.where(full_mand, n_units - 1, exited)
+    t_end = t + statics.dt
+    mand_time = jnp.where(exit_now | full_mand, t_end, st.q_mand_time)
+
+    job_done = complete & (
+        (st.q_unit + 1 >= n_units) | (params.is_edfm & (exited >= 0))
+    )
+    st_done = st._replace(q_last_pred=last_pred, q_mand_time=mand_time)
+    d_sched, d_corr, d_miss = finish_counts(params, st_done, job_done)
+
+    # hold the lock while the unit is in progress (including power-gated
+    # waits, like the scalar fragment loop); release at the unit boundary
+    lock_on = picked & ~done_any
+    # rr task rotation advances past the task whose unit just completed —
+    # the unit-boundary analogue of the scalar rotation at each pick
+    is_rr = params.policy == P.POLICY_IDS["rr"]
+    rr_cursor = jnp.where(is_rr & done_any, jnp.mod(tk_sel + 1, n_tasks),
+                          st.rr_cursor).astype(jnp.int32)
+    sel_hot = jnp.arange(n_tasks) == tk_sel
+    return st._replace(
+        energy=e_new,
+        was_off=was_off,
+        rr_cursor=rr_cursor,
+        lock_slot=jnp.where(lock_on, sel, -1).astype(jnp.int32),
+        lock_job=jnp.where(lock_on, st.q_job[sel], -1).astype(jnp.int32),
+        q_active=st.q_active & ~job_done,
+        q_unit=unit,
+        q_time_left=time_left,
+        q_exited=exited,
+        q_last_pred=last_pred,
+        q_mand_time=mand_time,
+        m_scheduled=st.m_scheduled + d_sched,
+        m_correct=st.m_correct + d_corr,
+        m_misses=st.m_misses + d_miss,
+        m_units=st.m_units + (done_any & sel_hot),
+        m_optional=st.m_optional + (done_any & ~mandatory[sel] & sel_hot),
+        m_reboots=st.m_reboots + (reboot & (st.m_busy > 0)),
+        m_busy=st.m_busy + jnp.where(run, statics.dt, 0.0),
+        m_idle=st.m_idle + idle_inc,
+        m_wasted=st.m_wasted + jnp.where(reboot, 0.5 * frag_t, 0.0),
+    )
+
+
+def device_step(params: StepParams, st: DeviceCarry, t,
+                statics: StepStatics) -> DeviceCarry:
+    """One full per-device transition: admit -> expire -> pick -> apply."""
+    st = admit(params, st, t, statics)
+    st = drop_expired(params, st, t)
+    sel, picked, run, e_new = pick(params, st, t, statics)
+    return apply_step(params, st, t, sel, picked, run, e_new, statics)
+
+
+def finalize(params: StepParams, st: DeviceCarry,
+             statics: StepStatics) -> StepResult:
+    """Flush live jobs and count never-admitted releases as misses; emit
+    both the per-task (K,) counters and their aggregates."""
+    d_sched, d_corr, d_miss = finish_counts(params, st, st.q_active)
+    unreleased = params.n_releases - st.next_rel    # (K,)
+    t_sched = st.m_scheduled + d_sched
+    t_corr = st.m_correct + d_corr
+    t_miss = st.m_misses + d_miss + unreleased
+    return StepResult(
+        released=jnp.sum(params.n_releases),
+        scheduled=jnp.sum(t_sched),
+        correct=jnp.sum(t_corr),
+        deadline_misses=jnp.sum(t_miss),
+        units_executed=jnp.sum(st.m_units),
+        optional_units=jnp.sum(st.m_optional),
+        busy_time=st.m_busy,
+        idle_no_energy=st.m_idle,
+        reboots=st.m_reboots,
+        wasted_reexec=st.m_wasted,
+        sim_time=jnp.full((), statics.horizon, _F32),
+        task_released=params.n_releases,
+        task_scheduled=t_sched,
+        task_correct=t_corr,
+        task_misses=t_miss,
+        task_units=st.m_units,
+        task_optional=st.m_optional,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("statics",))
+def simulate_device(params: StepParams, statics: StepStatics) -> StepResult:
+    """Simulate ONE device: a scalar ``lax.scan`` over the step core with no
+    ``vmap`` anywhere — the reference the fleet path is bit-exact against
+    (see :func:`repro.core.scheduler.simulate_stepped`)."""
+    carry0 = init_carry(params, statics)
+
+    def step(st, i):
+        return device_step(params, st, i.astype(_F32) * statics.dt,
+                           statics), None
+
+    carry, _ = lax.scan(step, carry0, jnp.arange(statics.n_steps))
+    return finalize(params, carry, statics)

@@ -8,10 +8,16 @@ with the Pallas ``fleet_priority`` kernel as the hot inner step).  Each
 device runs a *task set*: K periodic DNN streams contending for one
 harvested-energy budget, with per-task ``(D, K)`` metrics in the result.
 
+The per-device transition itself lives in :mod:`repro.core.step`; this
+package adds the device batching, the grid builders, and segmented
+execution (``run_segments``) whose carry pytree a host hook can adapt
+mid-trajectory (:mod:`repro.adapt.online`).
+
 Public API::
 
     result, meta = fleet.sweep(fleet.SweepGrid(task=..., policies=(...)))
     result = fleet.simulate_fleet(cfg, statics)          # pre-built configs
+    result, carry = fleet.run_segments(cfg, statics, n_segments=8, hook=...)
     cfg, statics = fleet.from_sim_config(tasks, harv, eta, cap, sim)
     result.task_scheduled / result.task_released         # (D, K) on-time
 """
@@ -25,7 +31,13 @@ from .grid import (  # noqa: F401
     stack_configs,
     sweep,
 )
-from .simulator import simulate_fleet, simulate_fleet_sharded  # noqa: F401
+from .simulator import (  # noqa: F401
+    finalize_fleet,
+    init_fleet,
+    run_segments,
+    simulate_fleet,
+    simulate_fleet_sharded,
+)
 from .state import (  # noqa: F401
     DeviceState,
     FleetConfig,

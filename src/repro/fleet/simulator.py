@@ -1,29 +1,35 @@
-"""Fixed-timestep, JAX-native reimplementation of the intermittent scheduler
-simulation, batched over thousands of devices.
+"""Fixed-timestep, JAX-native fleet frontend over the unified step core.
 
 Where :func:`repro.core.scheduler.simulate` is a scalar python event loop
 (one device / seed / config per call), this simulator steps the *entire*
 fleet state — capacitor energies, fixed-size job queues, harvester event
 streams — with one ``jax.lax.scan`` over time, ``jax.vmap``-ing the
-per-device step across the device axis.  One jitted call therefore evaluates
-a whole policy × eta × harvester × capacitor × seed grid.
+per-device transition across the device axis.  One jitted call therefore
+evaluates a whole policy × eta × harvester × capacitor × seed grid.
 
-Each device runs a *task set*: ``K`` periodic DNN task streams (the paper's
-multi-app audio+camera deployments) share one capacitor and one scheduler.
-Queue slots carry a ``task_id`` and every helper below gathers the right
-task row — period, deadline, unit times/energies, profile tables — before
-applying the exact same per-slot logic the single-task path used.  With
-``K = 1`` the task axis is a size-1 gather and the simulation is
-bit-identical to the pre-task-set fleet path.
+The per-device transition itself — release/admit, drop-expired, priority
+pick via :mod:`repro.core.policy`, fragment apply, capacitor
+charge/discharge, metric accumulation — lives in :mod:`repro.core.step` as
+pure ``(StepParams, DeviceCarry, t) -> DeviceCarry`` functions with no
+device axis; this module only adds the batching (``vmap``), the time scan,
+and the optional Pallas pick (:mod:`repro.kernels.fleet_priority`, whose
+in-tile semantics are the same :func:`repro.core.step.select_and_charge`).
+Because batching elementwise transitions is exact, the fleet path is
+*bit-exact* against the scalar-stepped frontend
+:func:`repro.core.scheduler.simulate_stepped` on the shared clock — the
+parity harness in ``tests/test_parity.py`` asserts equality, not calibrated
+tolerances.
 
-Per step (dt), each device: admits at most one released job per task
-(evicting an optional-only job on overflow, paper §5.2), expires
-past-deadline jobs, picks a queue slot with the shared priority functions
-from :mod:`repro.core.policy` (or the Pallas kernel
-:mod:`repro.kernels.fleet_priority` when ``use_pallas=True``), and then
-either executes ``dt`` seconds of the selected unit (draining the capacitor
-at the unit's power) or idles/charges.  Unit boundaries run the utility
-test against the precomputed job profiles, exactly like the scalar path.
+Two execution shapes:
+
+* :func:`simulate_fleet` — one monolithic scan over the whole horizon.
+* :func:`run_segments` — the same horizon in ``n_segments`` chunks,
+  returning/accepting the full carry pytree (:class:`DeviceState`) between
+  chunks and calling a host ``hook`` at each boundary.  The hook may
+  rewrite the *tunable* FleetConfig fields (eta, e_opt, exit thresholds)
+  mid-trajectory — the substrate of the paper's online adaptation loop
+  (:mod:`repro.adapt.online`).  With no hook the chunked scan is
+  bit-identical to the monolithic one for any ``n_segments``.
 
 Fidelity notes vs the event-driven scalar simulator: execution is quantized
 to ``dt`` (keep ``dt`` at or below one fragment time), fragment energy is
@@ -40,149 +46,19 @@ array analogue of the scalar simulator's rotation at each pick.
 from __future__ import annotations
 
 import functools
+from typing import Callable, Optional
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core import policy as P
-from .state import DeviceState, FleetConfig, FleetResult, FleetStatics, init_state
+from ..core import step as S
+from .state import DeviceState, FleetConfig, FleetResult, FleetStatics, \
+    init_state
 
 _F32 = jnp.float32
-
-
-# --------------------------------------------------------------------------- #
-# Per-device helpers (scalar state; jax.vmap supplies the device axis).
-# --------------------------------------------------------------------------- #
-
-
-def _finish_counts(cfg: FleetConfig, st: DeviceState, mask: jax.Array):
-    """Tally (scheduled, correct, missed) for the queue slots in ``mask``,
-    broken down per task — ``(K,)`` int arrays each."""
-    n_tasks = cfg.period.shape[0]
-    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
-    sched = mask & (st.q_mand_time >= 0.0) & (st.q_mand_time <= st.q_deadline)
-    job = jnp.clip(st.q_job, 0, cfg.margins.shape[1] - 1)
-    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[2] - 1)
-    corr = sched & (st.q_last_pred >= 0) & cfg.correct[tk, job, lp]
-    miss = mask & ~sched
-    onehot = tk[:, None] == jnp.arange(n_tasks)[None, :]   # (Q, K)
-
-    def per_task(m):
-        return jnp.sum(m[:, None] & onehot, axis=0)
-
-    return per_task(sched), per_task(corr), per_task(miss)
-
-
-def _admit(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
-    """Admit at most one released job per task (the builder asserts
-    dt < period).  The static python loop over the task axis admits in task
-    order — the same order the scalar path's stable release sort yields for
-    simultaneous releases."""
-    q = statics.queue_size
-    n_tasks = cfg.period.shape[0]
-    for k in range(n_tasks):
-        rel_time = st.next_rel[k].astype(_F32) * cfg.period[k]
-        releasing = (st.next_rel[k] < cfg.n_releases[k]) & (rel_time <= t)
-
-        free = ~st.q_active
-        has_free = jnp.any(free)
-        # overflow: evict the earliest-deadline job whose mandatory part is
-        # done (optional-only work yields to the new arrival — mandatory
-        # first, §5.2)
-        evictable = st.q_active & (st.q_exited >= 0)
-        has_evict = jnp.any(evictable)
-        victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf))
-        evict = releasing & ~has_free & has_evict
-        vmask = evict & (jnp.arange(q) == victim)
-        d_sched, d_corr, d_miss = _finish_counts(cfg, st, vmask)
-
-        insert = releasing & (has_free | has_evict)
-        slot = jnp.where(has_free, jnp.argmax(free), victim)
-        ins = insert & (jnp.arange(q) == slot)
-        dropped = releasing & ~insert   # queue overflow, nothing evictable
-        k_hot = jnp.arange(n_tasks) == k
-
-        st = st._replace(
-            next_rel=st.next_rel.at[k].add(releasing),
-            q_active=(st.q_active & ~vmask) | ins,
-            q_release=jnp.where(ins, rel_time, st.q_release),
-            q_deadline=jnp.where(ins, rel_time + cfg.rel_deadline[k],
-                                 st.q_deadline),
-            q_task=jnp.where(ins, k, st.q_task),
-            q_job=jnp.where(ins, st.next_rel[k], st.q_job),
-            q_unit=jnp.where(ins, 0, st.q_unit),
-            q_time_left=jnp.where(ins, cfg.unit_time[k, 0], st.q_time_left),
-            q_exited=jnp.where(ins, -1, st.q_exited),
-            q_last_pred=jnp.where(ins, -1, st.q_last_pred),
-            q_mand_time=jnp.where(ins, -1.0, st.q_mand_time),
-            m_scheduled=st.m_scheduled + d_sched,
-            m_correct=st.m_correct + d_corr,
-            m_misses=st.m_misses + d_miss + (dropped & k_hot),
-        )
-    return st
-
-
-def _drop_expired(cfg: FleetConfig, st: DeviceState, t):
-    # the device expires jobs against its *drifting* clock (fleet CHRT
-    # model): a fast clock (drift > 0) drops jobs before their true deadline
-    t_read = t * (1.0 + cfg.clock_drift)
-    expired = st.q_active & (t_read >= st.q_deadline)
-    d_sched, d_corr, d_miss = _finish_counts(cfg, st, expired)
-    return st._replace(
-        q_active=st.q_active & ~expired,
-        m_scheduled=st.m_scheduled + d_sched,
-        m_correct=st.m_correct + d_corr,
-        m_misses=st.m_misses + d_miss,
-    )
-
-
-def _pick_inputs(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
-    """Per-slot priority/energy ingredients shared by the jnp pick and the
-    Pallas kernel: each slot gathers its own task's row of the (K, U) /
-    (K, J, U) tables before the shared priority math runs."""
-    n_tasks = cfg.period.shape[0]
-    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
-    u = jnp.clip(st.q_unit, 0, cfg.unit_time.shape[1] - 1)
-    unit_t = cfg.unit_time[tk, u]
-    unit_e = cfg.unit_energy[tk, u]
-    gate_e = jnp.maximum(unit_e / cfg.fragments[tk], cfg.e_man)
-    drain = unit_e * (statics.dt / unit_t)
-    job = jnp.clip(st.q_job, 0, cfg.margins.shape[1] - 1)
-    lp = jnp.clip(st.q_last_pred, 0, cfg.margins.shape[2] - 1)
-    utility = jnp.where(st.q_last_pred >= 0, cfg.margins[tk, job, lp], 0.0)
-    mandatory = st.q_exited < 0
-    laxity = st.q_deadline - t
-    n_slots = cfg.events.shape[0]
-    slot = jnp.minimum((t / statics.slot_s).astype(jnp.int32), n_slots - 1)
-    charge = cfg.events[slot] * cfg.power_on * statics.dt
-    # limited preemption: a slot mid-unit is forced until the unit boundary
-    # (unless it expired or its slot was recycled for a newer job)
-    ls = jnp.clip(st.lock_slot, 0, st.q_active.shape[0] - 1)
-    locked = ((st.lock_slot >= 0) & st.q_active[ls]
-              & (st.q_job[ls] == st.lock_job))
-    forced = jnp.where(locked, ls, -1).astype(jnp.int32)
-    # rr task rotation: distance of each slot's task from the rr cursor
-    # (identically 0 when K == 1, keeping the FIFO key bit-identical)
-    task_rank = jnp.mod(tk - st.rr_cursor, n_tasks).astype(_F32)
-    return (laxity, utility, mandatory, gate_e, drain, charge, forced,
-            task_rank)
-
-
-def _pick(cfg: FleetConfig, st: DeviceState, t, statics: FleetStatics):
-    """Priority-argmax + fused capacitor charge/discharge (pure-jnp path)."""
-    (laxity, utility, mandatory, gate_e, drain, charge, forced,
-     task_rank) = _pick_inputs(cfg, st, t, statics)
-    scores, thr = P.policy_scores(
-        cfg.policy, st.q_active, laxity, st.q_release, utility, mandatory,
-        cfg.alpha, cfg.beta, cfg.eta, st.energy, cfg.e_opt, cfg.persistent,
-        task_rank)
-    sel = jnp.where(forced >= 0, forced,
-                    jnp.argmax(scores)).astype(jnp.int32)
-    picked = (forced >= 0) | (jnp.max(scores) > thr)
-    run = picked & (st.energy >= gate_e[sel])
-    e_new = jnp.minimum(st.energy + charge, cfg.capacity) - run * drain[sel]
-    return sel, picked, run, e_new
 
 
 def _pick_pallas(cfg: FleetConfig, states: DeviceState, t,
@@ -196,7 +72,7 @@ def _pick_pallas(cfg: FleetConfig, states: DeviceState, t,
 
     (laxity, utility, mandatory, gate_e, drain, charge, forced,
      _task_rank) = jax.vmap(
-        lambda c, s: _pick_inputs(c, s, t, statics))(cfg, states)
+        lambda c, s: S.pick_inputs(c, s, t, statics))(cfg, states)
     return ops.fleet_priority(
         cfg.policy, states.q_active, laxity, states.q_release, utility,
         mandatory, cfg.alpha, cfg.beta, cfg.eta, cfg.persistent,
@@ -205,127 +81,50 @@ def _pick_pallas(cfg: FleetConfig, states: DeviceState, t,
         n_tasks=cfg.period.shape[-1])
 
 
-def _apply(cfg: FleetConfig, st: DeviceState, t, sel, picked, run, e_new,
-           statics: FleetStatics):
-    """Advance the selected job by dt; handle unit/job completion."""
-    q = statics.queue_size
-    n_tasks = cfg.period.shape[0]
-    u_max = cfg.unit_time.shape[1] - 1
-    oh = jnp.arange(q) == sel
-    tk = jnp.clip(st.q_task, 0, n_tasks - 1)
-    tk_sel = tk[sel]
-
-    u_sel = jnp.clip(st.q_unit[sel], 0, u_max)
-    frag_t = cfg.unit_time[tk_sel, u_sel] / cfg.fragments[tk_sel]
-
-    # power-down / reboot bookkeeping (the initial cold boot counts wasted
-    # half-fragment re-execution but not a reboot — matches the scalar path)
-    reboot = run & st.was_off
-    was_off = jnp.where(run, False, jnp.where(picked, True, st.was_off))
-    idle_inc = jnp.where(picked & ~run, statics.dt, 0.0)
-
-    # execute dt of the selected unit
-    time_left = st.q_time_left - jnp.where(run & oh, statics.dt, 0.0)
-    complete = run & oh & (time_left <= statics.dt * 1e-3)
-
-    u = jnp.clip(st.q_unit, 0, u_max)
-    job = jnp.clip(st.q_job, 0, cfg.passes.shape[1] - 1)
-    n_units = cfg.n_units[tk]                      # (Q,) per-slot task depth
-    next_u = jnp.clip(st.q_unit + 1, 0, u_max)
-    done_any = jnp.any(complete)
-    mandatory = st.q_exited < 0
-
-    last_pred = jnp.where(complete, u, st.q_last_pred)
-    unit = jnp.where(complete, st.q_unit + 1, st.q_unit)
-    time_left = jnp.where(complete, cfg.unit_time[tk, next_u], time_left)
-
-    # utility test at the unit boundary (imprecise policies only); tuned
-    # per-unit thresholds (repro.adapt) re-evaluate the test against the
-    # live margin, otherwise the precomputed passes table applies
-    passed = jnp.where(cfg.use_exit_thr,
-                       P.exit_test(cfg.margins[tk, job, u],
-                                   cfg.exit_thr[tk, u]),
-                       cfg.passes[tk, job, u])
-    exit_now = complete & cfg.imprecise & (st.q_exited < 0) & passed
-    exited = jnp.where(exit_now, u, st.q_exited)
-    # never-confident full execution => the whole DNN was mandatory
-    full_mand = complete & (exited < 0) & (st.q_unit + 1 >= n_units)
-    exited = jnp.where(full_mand, n_units - 1, exited)
-    t_end = t + statics.dt
-    mand_time = jnp.where(exit_now | full_mand, t_end, st.q_mand_time)
-
-    job_done = complete & (
-        (st.q_unit + 1 >= n_units) | (cfg.is_edfm & (exited >= 0))
-    )
-    st_done = st._replace(q_last_pred=last_pred, q_mand_time=mand_time)
-    d_sched, d_corr, d_miss = _finish_counts(cfg, st_done, job_done)
-
-    # hold the lock while the unit is in progress (including power-gated
-    # waits, like the scalar fragment loop); release at the unit boundary
-    lock_on = picked & ~done_any
-    # rr task rotation advances past the task whose unit just completed —
-    # the unit-boundary analogue of the scalar rotation at each pick
-    is_rr = cfg.policy == P.POLICY_IDS["rr"]
-    rr_cursor = jnp.where(is_rr & done_any, jnp.mod(tk_sel + 1, n_tasks),
-                          st.rr_cursor).astype(jnp.int32)
-    sel_hot = jnp.arange(n_tasks) == tk_sel
-    return st._replace(
-        energy=e_new,
-        was_off=was_off,
-        rr_cursor=rr_cursor,
-        lock_slot=jnp.where(lock_on, sel, -1).astype(jnp.int32),
-        lock_job=jnp.where(lock_on, st.q_job[sel], -1).astype(jnp.int32),
-        q_active=st.q_active & ~job_done,
-        q_unit=unit,
-        q_time_left=time_left,
-        q_exited=exited,
-        q_last_pred=last_pred,
-        q_mand_time=mand_time,
-        m_scheduled=st.m_scheduled + d_sched,
-        m_correct=st.m_correct + d_corr,
-        m_misses=st.m_misses + d_miss,
-        m_units=st.m_units + (done_any & sel_hot),
-        m_optional=st.m_optional + (done_any & ~mandatory[sel] & sel_hot),
-        m_reboots=st.m_reboots + (reboot & (st.m_busy > 0)),
-        m_busy=st.m_busy + jnp.where(run, statics.dt, 0.0),
-        m_idle=st.m_idle + idle_inc,
-        m_wasted=st.m_wasted + jnp.where(reboot, 0.5 * frag_t, 0.0),
-    )
+def _fleet_step(cfg: FleetConfig, states: DeviceState, i,
+                statics: FleetStatics, use_pallas: bool) -> DeviceState:
+    """One fleet timestep: vmap of the step core's device transition (or
+    the split admit/expire/Pallas-pick/apply pipeline when the pick runs in
+    the kernel, which needs the whole device batch at once)."""
+    t = i.astype(_F32) * statics.dt
+    if not use_pallas:
+        return jax.vmap(
+            lambda c, s: S.device_step(c, s, t, statics))(cfg, states)
+    states = jax.vmap(lambda c, s: S.admit(c, s, t, statics))(cfg, states)
+    states = jax.vmap(lambda c, s: S.drop_expired(c, s, t))(cfg, states)
+    sel, picked, run, e_new = _pick_pallas(cfg, states, t, statics)
+    return jax.vmap(
+        lambda c, s, a, p, r, e: S.apply_step(c, s, t, a, p, r, e, statics)
+    )(cfg, states, sel, picked, run, e_new)
 
 
-def _finalize(cfg: FleetConfig, st: DeviceState,
-              statics: FleetStatics) -> FleetResult:
-    """Flush live jobs and count never-admitted releases as misses; emit
-    both the per-task (K,) counters and their aggregates."""
-    d_sched, d_corr, d_miss = _finish_counts(cfg, st, st.q_active)
-    unreleased = cfg.n_releases - st.next_rel       # (K,)
-    t_sched = st.m_scheduled + d_sched
-    t_corr = st.m_correct + d_corr
-    t_miss = st.m_misses + d_miss + unreleased
-    return FleetResult(
-        released=jnp.sum(cfg.n_releases),
-        scheduled=jnp.sum(t_sched),
-        correct=jnp.sum(t_corr),
-        deadline_misses=jnp.sum(t_miss),
-        units_executed=jnp.sum(st.m_units),
-        optional_units=jnp.sum(st.m_optional),
-        busy_time=st.m_busy,
-        idle_no_energy=st.m_idle,
-        reboots=st.m_reboots,
-        wasted_reexec=st.m_wasted,
-        sim_time=jnp.full((), statics.horizon, _F32),
-        task_released=cfg.n_releases,
-        task_scheduled=t_sched,
-        task_correct=t_corr,
-        task_misses=t_miss,
-        task_units=st.m_units,
-        task_optional=st.m_optional,
-    )
+@functools.partial(jax.jit, static_argnames=("statics",))
+def init_fleet(cfg: FleetConfig, statics: FleetStatics) -> DeviceState:
+    """The t=0 carry pytree for every device in ``cfg`` (the value
+    :func:`run_segments` accepts/returns between horizon chunks)."""
+    return jax.vmap(lambda c: init_state(c, statics))(cfg)
 
 
-# --------------------------------------------------------------------------- #
-# Fleet entry point: scan over time, vmap over devices, one jit.
-# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit,
+                   static_argnames=("statics", "n_steps", "use_pallas"))
+def _scan_steps(cfg: FleetConfig, states: DeviceState, i0,
+                statics: FleetStatics, n_steps: int,
+                use_pallas: bool) -> DeviceState:
+    """Scan ``n_steps`` timesteps starting at step index ``i0`` (traced, so
+    all equal-length segments share one compilation)."""
+    def step(states, i):
+        return _fleet_step(cfg, states, i, statics, use_pallas), None
+
+    states, _ = lax.scan(step, states, i0 + jnp.arange(n_steps))
+    return states
+
+
+@functools.partial(jax.jit, static_argnames=("statics",))
+def finalize_fleet(cfg: FleetConfig, states: DeviceState,
+                   statics: FleetStatics) -> FleetResult:
+    """Flush the carry into a :class:`FleetResult` (vmap of the step core's
+    finalize)."""
+    return jax.vmap(lambda c, s: S.finalize(c, s, statics))(cfg, states)
 
 
 @functools.partial(jax.jit, static_argnames=("statics", "use_pallas"))
@@ -340,21 +139,96 @@ def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
     states0 = jax.vmap(lambda c: init_state(c, statics))(cfg)
 
     def step(states, i):
-        t = i.astype(_F32) * statics.dt
-        states = jax.vmap(lambda c, s: _admit(c, s, t, statics))(cfg, states)
-        states = jax.vmap(lambda c, s: _drop_expired(c, s, t))(cfg, states)
-        if use_pallas:
-            sel, picked, run, e_new = _pick_pallas(cfg, states, t, statics)
-        else:
-            sel, picked, run, e_new = jax.vmap(
-                lambda c, s: _pick(c, s, t, statics))(cfg, states)
-        states = jax.vmap(
-            lambda c, s, a, p, r, e: _apply(c, s, t, a, p, r, e, statics)
-        )(cfg, states, sel, picked, run, e_new)
-        return states, None
+        return _fleet_step(cfg, states, i, statics, use_pallas), None
 
     states, _ = lax.scan(step, states0, jnp.arange(statics.n_steps))
-    return jax.vmap(lambda c, s: _finalize(c, s, statics))(cfg, states)
+    return jax.vmap(lambda c, s: S.finalize(c, s, statics))(cfg, states)
+
+
+# hook signature: (segment_index, t_end, cfg, carry) -> new cfg or None
+SegmentHook = Callable[[int, float, FleetConfig, DeviceState],
+                       Optional[FleetConfig]]
+
+
+def run_segments(cfg: FleetConfig, statics: FleetStatics,
+                 n_segments: int = 1, *,
+                 hook: Optional[SegmentHook] = None,
+                 carry: Optional[DeviceState] = None,
+                 start_step: int = 0,
+                 use_pallas: bool = False,
+                 mesh=None) -> tuple[FleetResult, DeviceState]:
+    """Segment-at-a-time fleet simulation over the checkpointable carry.
+
+    Splits the scan over steps ``[start_step, statics.n_steps)`` into
+    ``n_segments`` contiguous chunks (lengths differ by at most one step,
+    so at most two distinct compilations) and materialises the full carry
+    pytree (:class:`DeviceState`) at every boundary.  After each segment
+    the host ``hook(seg, t_end, cfg, carry)`` runs and may return a
+    modified FleetConfig — rewriting *tunable* fields (``eta``, ``e_opt``,
+    ``exit_thr``/``use_exit_thr``, ``persistent``) mid-trajectory is how
+    :mod:`repro.adapt.online` implements the paper's runtime eta
+    re-estimation loop.  Returning ``None`` keeps the current config.
+
+    ``carry`` + ``start_step`` resume a previous run: pass the returned
+    carry together with the number of steps it has already lived through
+    (the simulation clock is ``t = step * dt``, and the carry holds
+    absolute release/deadline times, so resuming must NOT restart the
+    clock at zero).  ``carry=None`` starts from :func:`init_fleet` at step
+    ``start_step`` (normally 0).  ``mesh`` partitions the device axis
+    exactly like :func:`simulate_fleet_sharded` — the carry shards
+    alongside the config (:func:`repro.launch.sharding.shard_fleet_carry`),
+    the hook then observes the padded device axis (hook-returned configs
+    are re-placed on the mesh so config and carry stay aligned
+    shard-for-shard), and the returned result/carry are sliced back to the
+    real devices.
+
+    With ``hook=None`` the chunked scan is bit-identical to
+    :func:`simulate_fleet` for any ``n_segments``: the same step indices
+    run through the same jitted step body, only the carry round-trips
+    through host memory between chunks.
+
+    Returns ``(FleetResult, DeviceState)`` — the finalized metrics and the
+    end-of-horizon carry.
+    """
+    remaining = statics.n_steps - int(start_step)
+    if not 0 <= int(start_step) <= statics.n_steps:
+        raise ValueError(
+            f"start_step must be in [0, {statics.n_steps}], got {start_step}")
+    if not 1 <= n_segments <= max(remaining, 1):
+        raise ValueError(
+            f"n_segments must be in [1, {max(remaining, 1)}], "
+            f"got {n_segments}")
+    n_real = cfg.n_devices
+    if mesh is not None:
+        from ..launch.sharding import shard_fleet_carry, shard_fleet_config
+
+        cfg = shard_fleet_config(mesh, cfg)
+        if carry is not None:
+            carry = shard_fleet_carry(mesh, carry)
+    if carry is None:
+        carry = init_fleet(cfg, statics)
+
+    sizes = [len(c) for c in np.array_split(np.arange(remaining),
+                                            n_segments)]
+    i0 = int(start_step)
+    for seg, n in enumerate(sizes):
+        if n:
+            carry = _scan_steps(cfg, carry, jnp.int32(i0), statics, n,
+                                use_pallas)
+            i0 += n
+        if hook is not None:
+            new_cfg = hook(seg, i0 * statics.dt, cfg, carry)
+            if new_cfg is not None:
+                cfg = new_cfg
+                if mesh is not None:
+                    # keep hook-returned leaves placed like the carry (the
+                    # hook typically swaps in fresh host arrays)
+                    cfg = shard_fleet_config(mesh, cfg)
+    res = finalize_fleet(cfg, carry, statics)
+    if mesh is not None and jax.tree.leaves(res)[0].shape[0] != n_real:
+        res = jax.tree.map(lambda x: x[:n_real], res)
+        carry = jax.tree.map(lambda x: x[:n_real], carry)
+    return res, carry
 
 
 def simulate_fleet_sharded(cfg: FleetConfig, statics: FleetStatics,

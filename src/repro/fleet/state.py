@@ -1,15 +1,24 @@
 """Pytree containers for the vectorized fleet simulator.
 
-Everything the fixed-timestep simulator touches lives in two NamedTuple
-pytrees of arrays:
+These are the *fleet-level names* for the unified step core's containers in
+:mod:`repro.core.step` — the fleet path is literally ``jax.vmap`` over the
+same pytrees, so the classes are shared (aliased, not copied):
 
-* :class:`FleetConfig` — immutable per-device configuration: one leading
-  ``D`` (device) axis over the sweep grid (policy × eta × harvester ×
-  capacitor × seed), plus the per-task workload tables and pre-sampled
-  harvester event streams.
-* :class:`DeviceState` — the mutable simulation state for ONE device
-  (``jax.vmap`` adds the device axis): capacitor energy, the fixed-size job
-  queue as parallel arrays, and the metric accumulators.
+* :class:`FleetConfig` (= :class:`repro.core.step.StepParams`) — immutable
+  per-device configuration with one leading ``D`` (device) axis over the
+  sweep grid (policy × eta × harvester × capacitor × seed), plus the
+  per-task workload tables and pre-sampled harvester event streams.
+* :class:`DeviceState` (= :class:`repro.core.step.DeviceCarry`) — the
+  mutable simulation state for ONE device (``jax.vmap`` adds the device
+  axis): capacitor energy, the fixed-size job queue as parallel arrays, and
+  the metric accumulators.  This is the *segment carry*:
+  :func:`repro.fleet.simulator.run_segments` returns/accepts it between
+  horizon chunks, and :func:`repro.launch.sharding.shard_fleet_carry`
+  shards it exactly like a FleetConfig.
+* :class:`FleetResult` (= :class:`repro.core.step.StepResult`) — stacked
+  per-device results: ``(D,)`` aggregates plus ``(D, K)`` per-task
+  breakdowns, with ``.device(i)`` / ``.as_dict()`` dict exports mirroring
+  ``SimResult.as_dict``.
 
 Shapes use ``D`` devices, ``K`` tasks per device (the task-set axis: each
 device runs ``K`` periodic DNN task streams contending for one harvested
@@ -18,192 +27,29 @@ energy budget, paper §3/§5's multi-app deployments), ``Q`` queue slots,
 of heterogeneous depth/length are padded to common ``U``/``J`` by the grid
 builder; per-task ``n_units``/``n_releases`` bound the live region.  Static
 (python) dimensions and step sizes live in the hashable
-:class:`FleetStatics`, which is a ``jax.jit`` static argument.
+:class:`FleetStatics` (= :class:`repro.core.step.StepStatics`), a
+``jax.jit`` static argument.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
+from ..core.step import (
+    DeviceCarry,
+    StepParams,
+    StepResult,
+    StepStatics,
+    init_carry,
+)
 
-import jax
-import jax.numpy as jnp
+FleetStatics = StepStatics
+FleetConfig = StepParams
+DeviceState = DeviceCarry
+FleetResult = StepResult
+init_state = init_carry
 
-
-@dataclasses.dataclass(frozen=True)
-class FleetStatics:
-    """Hashable static configuration (jit static argument)."""
-
-    queue_size: int = 3
-    dt: float = 0.025            # fixed timestep (s); keep <= min unit_time
-    horizon: float = 600.0
-    slot_s: float = 1.0          # harvester slot length (s)
-
-    @property
-    def n_steps(self) -> int:
-        return int(round(self.horizon / self.dt))
-
-
-class FleetConfig(NamedTuple):
-    """Per-device configuration arrays (leading axis: D devices)."""
-
-    # scheduler / energy scalars, (D,)
-    policy: jax.Array        # int32, repro.core.policy.POLICY_IDS
-    imprecise: jax.Array     # bool: early exit enabled (zygarde, edf-m)
-    is_edfm: jax.Array       # bool: EDF-M never runs optional units
-    eta: jax.Array           # f32
-    alpha: jax.Array         # f32, 1 / max relative deadline over the task set
-    beta: jax.Array          # f32
-    persistent: jax.Array    # bool: use zeta (Eq. 6) instead of zeta_I (Eq. 7)
-    capacity: jax.Array      # f32, usable capacitor energy (J)
-    start_energy: jax.Array  # f32; negative = cold-boot dead-zone debt
-    e_man: jax.Array         # f32, minimum energy to run a fragment
-    e_opt: jax.Array         # f32, Eq. 7 optional-unit energy threshold
-    power_on: jax.Array      # f32, harvester power in the ON state (W)
-    # timekeeping: deterministic linear clock drift (fleet-path CHRT model;
-    # the scalar CHRTClock's random per-read offset has no batched
-    # equivalent, so the fleet models the *accumulated* error as a rate:
-    # t_read = t * (1 + clock_drift))
-    clock_drift: jax.Array   # f32, (D,); 0 = exact RTC
-    # tunable per-unit utility-test thresholds (repro.adapt): when
-    # use_exit_thr is set the utility test compares the live margin against
-    # exit_thr instead of the precomputed `passes` table
-    use_exit_thr: jax.Array  # bool, (D,)
-    exit_thr: jax.Array      # (D, K, U) f32
-    # task-set table, (D, K): K periodic task streams per device
-    period: jax.Array        # f32
-    rel_deadline: jax.Array  # f32, relative deadline
-    fragments: jax.Array     # f32, fragments per unit
-    n_units: jax.Array       # int32, <= U (live units of each task)
-    n_releases: jax.Array    # int32, jobs released within the horizon (<= J)
-    # per-task workload tables
-    unit_time: jax.Array     # (D, K, U) f32, seconds per unit
-    unit_energy: jax.Array   # (D, K, U) f32, joules per unit
-    margins: jax.Array       # (D, K, J, U) f32, utility-test margins
-    passes: jax.Array        # (D, K, J, U) bool, utility test passes after unit
-    correct: jax.Array       # (D, K, J, U) bool, unit prediction correct
-    # harvester event stream, (D, S) f32 in {0, 1}
-    events: jax.Array
-
-    @property
-    def n_devices(self) -> int:
-        return self.policy.shape[0]
-
-    @property
-    def n_tasks(self) -> int:
-        return self.period.shape[-1]
-
-
-class DeviceState(NamedTuple):
-    """Mutable per-device simulation state (no device axis; vmap adds it)."""
-
-    energy: jax.Array        # f32 scalar; < 0 while paying cold-boot debt
-    was_off: jax.Array       # bool scalar: last activity was a power-down
-    next_rel: jax.Array      # int32 (K,): next job index to release, per task
-    # round-robin task cursor: the task id the rr policy serves next (the
-    # scalar simulator's rr_cursor); unused by the other policies
-    rr_cursor: jax.Array     # int32 scalar
-    # limited preemption (paper §4.1): once a unit starts, it runs to its
-    # boundary — the scheduler only re-picks between units.  lock_job guards
-    # against the slot being recycled for a new job while locked.
-    lock_slot: jax.Array     # int32 scalar: queue slot mid-unit, -1 if none
-    lock_job: jax.Array      # int32 scalar: job id the lock belongs to
-    # fixed-size job queue, (Q,) each
-    q_active: jax.Array      # bool
-    q_release: jax.Array     # f32
-    q_deadline: jax.Array    # f32 (absolute)
-    q_task: jax.Array        # int32, index into the (K, ...) task tables
-    q_job: jax.Array         # int32, index into the (K, J, U) profile tables
-    q_unit: jax.Array        # int32, next unit to execute
-    q_time_left: jax.Array   # f32, seconds left in the current unit
-    q_exited: jax.Array      # int32, unit where the utility test passed (-1)
-    q_last_pred: jax.Array   # int32, deepest executed unit (-1)
-    q_mand_time: jax.Array   # f32, mandatory-completion time (-1)
-    # metric accumulators, (K,) per task (mirror scheduler.SimResult.task_*)
-    m_scheduled: jax.Array   # int32
-    m_correct: jax.Array     # int32
-    m_misses: jax.Array      # int32
-    m_units: jax.Array       # int32
-    m_optional: jax.Array    # int32
-    # device-level energy/time accumulators (scalars)
-    m_reboots: jax.Array     # int32
-    m_busy: jax.Array        # f32
-    m_idle: jax.Array        # f32
-    m_wasted: jax.Array      # f32
-
-
-class FleetResult(NamedTuple):
-    """Stacked per-device results — SimResult over the fleet.
-
-    Aggregate fields are ``(D,)`` (summed over the task set, matching the
-    scalar ``SimResult`` totals); the ``task_*`` fields break the job
-    counters down per task as ``(D, K)`` arrays (matching
-    ``SimResult.task_*``).
-    """
-
-    released: jax.Array
-    scheduled: jax.Array
-    correct: jax.Array
-    deadline_misses: jax.Array
-    units_executed: jax.Array
-    optional_units: jax.Array
-    busy_time: jax.Array
-    idle_no_energy: jax.Array
-    reboots: jax.Array
-    wasted_reexec: jax.Array
-    sim_time: jax.Array
-    # per-task breakdowns, (D, K)
-    task_released: jax.Array
-    task_scheduled: jax.Array
-    task_correct: jax.Array
-    task_misses: jax.Array
-    task_units: jax.Array
-    task_optional: jax.Array
-
-    def device(self, i: int) -> dict:
-        """Metrics of device ``i`` as a python dict (SimResult field names);
-        scalar metrics become python numbers, per-task rows become lists."""
-        out = {}
-        for k, v in self._asdict().items():
-            row = v[i]
-            out[k] = row.item() if row.ndim == 0 else row.tolist()
-        return out
-
-    def as_dict(self) -> dict:
-        return {k: jnp.asarray(v) for k, v in self._asdict().items()}
-
-
-def init_state(cfg: FleetConfig, statics: FleetStatics) -> DeviceState:
-    """Initial state for one device (call under vmap over cfg)."""
-    q = statics.queue_size
-    k = cfg.period.shape[0]      # per-device view: task axis is leading
-    f32 = jnp.float32
-    i32 = jnp.int32
-    zero_i = jnp.zeros((), i32)
-    zeros_k = jnp.zeros((k,), i32)
-    return DeviceState(
-        energy=cfg.start_energy.astype(f32),
-        was_off=jnp.zeros((), bool),
-        next_rel=zeros_k,
-        rr_cursor=zero_i,
-        lock_slot=jnp.full((), -1, i32),
-        lock_job=jnp.full((), -1, i32),
-        q_active=jnp.zeros((q,), bool),
-        q_release=jnp.zeros((q,), f32),
-        q_deadline=jnp.zeros((q,), f32),
-        q_task=jnp.zeros((q,), i32),
-        q_job=jnp.zeros((q,), i32),
-        q_unit=jnp.zeros((q,), i32),
-        q_time_left=jnp.zeros((q,), f32),
-        q_exited=jnp.full((q,), -1, i32),
-        q_last_pred=jnp.full((q,), -1, i32),
-        q_mand_time=jnp.full((q,), -1.0, f32),
-        m_scheduled=zeros_k,
-        m_correct=zeros_k,
-        m_misses=zeros_k,
-        m_units=zeros_k,
-        m_optional=zeros_k,
-        m_reboots=zero_i,
-        m_busy=jnp.zeros((), f32),
-        m_idle=jnp.zeros((), f32),
-        m_wasted=jnp.zeros((), f32),
-    )
+__all__ = [
+    "DeviceState",
+    "FleetConfig",
+    "FleetResult",
+    "FleetStatics",
+    "init_state",
+]

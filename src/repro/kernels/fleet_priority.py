@@ -16,6 +16,14 @@ as each slot's task id plus the per-device round-robin cursor: the RR task
 rotation rank is computed in VMEM, right next to the priority-argmax
 (``n_tasks`` is a compile-time constant).
 
+The post-score selection — forced-slot override, threshold test, energy
+gate, fused capacitor charge/discharge — is
+:func:`repro.core.step.select_and_charge`, imported from the unified step
+core and evaluated directly on the VMEM tiles (it is written gather-free,
+iota-only, for exactly this reason), so the kernel's in-tile reference
+semantics can never drift from what the scalar-stepped and vmap frontends
+execute.
+
 Boolean operands are passed as f32 0/1 masks and the flag outputs returned
 as int32 (TPU-friendly dtypes); :mod:`repro.kernels.ops` re-casts.
 """
@@ -25,10 +33,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 
 from ..core import policy as P
+from ..core.step import select_and_charge
 
 
 def _fleet_priority_kernel(
@@ -57,23 +65,12 @@ def _fleet_priority_kernel(
         persistent_ref[...][:, None],
         task_rank,
     )
-    # limited preemption: a forced slot (unit in progress) bypasses scoring
-    forced = forced_ref[...]
-    sel = jnp.where(forced >= 0, forced,
-                    jnp.argmax(scores, axis=1)).astype(jnp.int32)
-    best = jnp.max(scores, axis=1)
-    picked = (forced >= 0) | (best > thr[:, 0])
-
-    # lane-select the chosen slot's energy gate / drain (2D iota: TPU-safe)
-    onehot = lax.broadcasted_iota(jnp.int32, scores.shape, 1) == sel[:, None]
-    gate_sel = jnp.sum(jnp.where(onehot, gate_ref[...], 0.0), axis=1)
-    drain_sel = jnp.sum(jnp.where(onehot, drain_ref[...], 0.0), axis=1)
-
-    run = picked & (energy >= gate_sel)
-    e_new = (
-        jnp.minimum(energy + charge_ref[...], capacity_ref[...])
-        - run * drain_sel
-    )
+    # limited preemption (forced slot), threshold test, energy gate and the
+    # fused capacitor update: the step core's shared selection semantics,
+    # evaluated in-tile
+    sel, picked, run, e_new = select_and_charge(
+        scores, thr[:, 0], forced_ref[...], energy, charge_ref[...],
+        capacity_ref[...], gate_ref[...], drain_ref[...])
     sel_ref[...] = sel
     picked_ref[...] = picked.astype(jnp.int32)
     run_ref[...] = run.astype(jnp.int32)

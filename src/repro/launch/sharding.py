@@ -213,11 +213,13 @@ def named(mesh: Mesh, spec_tree: Any) -> Any:
 
 def fleet_specs(mesh: Mesh, cfg: Any) -> Any:
     """PartitionSpecs for a :class:`repro.fleet.state.FleetConfig` (or any
-    pytree of ``(D, ...)`` leaves): the leading device axis shards over the
-    whole mesh; every trailing dim replicates — including the task-set axis
-    ``K`` and the per-task workload tables ``(D, K, U)`` / ``(D, K, J, U)``,
-    which stay whole per shard because each device steps its entire task set
-    locally (the fleet axis is the only data-parallel dimension).
+    pytree of ``(D, ...)`` leaves — the segment carry
+    :class:`repro.fleet.state.DeviceState` included): the leading device
+    axis shards over the whole mesh; every trailing dim replicates —
+    including the task-set axis ``K`` and the per-task workload tables
+    ``(D, K, U)`` / ``(D, K, J, U)``, which stay whole per shard because
+    each device steps its entire task set locally (the fleet axis is the
+    only data-parallel dimension).
     """
     axes = tuple(mesh.axis_names)
     return jax.tree.map(lambda l: P(axes, *([None] * (l.ndim - 1))), cfg)
@@ -241,3 +243,17 @@ def shard_fleet_config(mesh: Mesh, cfg: Any) -> Any:
         lambda l, s: jax.device_put(l, NamedSharding(mesh, s)),
         cfg, fleet_specs(mesh, cfg),
     )
+
+
+def shard_fleet_carry(mesh: Mesh, carry: Any) -> Any:
+    """Place a segment carry (:class:`repro.fleet.state.DeviceState`) with
+    its device axis partitioned over ``mesh``.
+
+    The carry is a pytree of ``(D, ...)`` leaves just like a FleetConfig,
+    and :func:`repro.fleet.simulator.run_segments` must keep the two
+    aligned shard-for-shard between horizon chunks — same wrap-around
+    padding to a mesh-size multiple, same leading-axis ``NamedSharding``.
+    It is therefore the same placement rule; the separate name documents
+    (and pins, via tests) the contract that carries shard like configs.
+    """
+    return shard_fleet_config(mesh, carry)

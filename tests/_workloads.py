@@ -1,0 +1,107 @@
+"""Shared workload builders + tolerance calibration for the parity suites.
+
+One home for the task/profile generators and the calibrated
+discretization bounds that ``tests/test_fleet.py`` and
+``tests/test_parity.py`` both use, so the tolerance story lives in exactly
+one place:
+
+* **bit-exact**: fleet vs the step-core scalar frontend
+  (:func:`repro.core.scheduler.simulate_stepped`) — both run
+  :mod:`repro.core.step` on the same fixed clock, so equality is exact and
+  no bound applies;
+* **calibrated** (:func:`per_task_bound`): fleet/stepped vs the
+  *event-driven* :func:`repro.core.scheduler.simulate` — the fixed
+  timestep quantizes execution and drains fragment energy continuously, so
+  energy-starved boundary jobs can land on the other side of a deadline.
+  Empirically (48 seeded runs per mode) the per-task deviation stays
+  <= 1 job under persistent power and <= 3 jobs (<= 25% of a task's
+  releases) under intermittent power; the bounds add headroom on top while
+  still failing loudly on any systematic task-row mix-up (which mis-counts
+  whole streams, not boundary jobs).
+
+Workload note: unit times are quantized to multiples of ``4 * DT`` so one
+fleet timestep is exactly one fragment of every task — the regime the
+simulator documents as its fidelity envelope.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import energy
+from repro.core.scheduler import JobProfile, TaskSpec
+
+DT = 0.005          # fleet timestep; unit times are multiples of 4*DT
+HORIZON = 12.0
+TASK_SET_SEEDS = {1: 11, 2: 22, 4: 44}
+
+# (harvester, eta) per persistence mode: `persistent` takes the Eq. 6 zeta
+# fast path (eta = 1, p_stay_on = 1), `intermittent` the eta-gated Eq. 7
+MODES = {
+    "persistent": (energy.Harvester("battery", 1.0, 0.0, 10.0), 1.0),
+    "intermittent": (energy.Harvester("rf", 0.93, 0.93, 0.07), 0.7),
+}
+
+
+def profile(n_units=4, exit_at=None, correct_from=0) -> JobProfile:
+    margins = np.linspace(0.05, 0.5, n_units)
+    passes = np.zeros(n_units, bool)
+    if exit_at is not None:
+        passes[exit_at:] = True
+    correct = np.zeros(n_units, bool)
+    correct[correct_from:] = True
+    return JobProfile(margins, passes, correct)
+
+
+def make_task(n_jobs=20, period=1.0, deadline=2.0, unit_t=0.1, unit_e=1e-3,
+              n_units=4, exit_at=1) -> TaskSpec:
+    return TaskSpec(
+        task_id=0,
+        period=period,
+        deadline=deadline,
+        unit_time=np.full(n_units, unit_t),
+        unit_energy=np.full(n_units, unit_e),
+        profiles=[profile(n_units, exit_at) for _ in range(n_jobs)],
+    )
+
+
+def random_task_set(seed: int, k: int) -> list[TaskSpec]:
+    """K tasks with distinct periods/deadlines/depths; full-execution
+    utilization of the whole set ~0.6 so even EDF (no early exit) is loaded
+    but not hopeless."""
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for tid in range(k):
+        n_units = int(rng.integers(3, 6))
+        period = float(rng.choice([0.8, 1.0, 1.2, 1.6]))
+        deadline = period * float(rng.uniform(1.5, 2.5))
+        grains = max(1, round(0.6 * period / (k * n_units) / (4 * DT)))
+        unit_t = grains * 4 * DT
+        unit_e = float(rng.uniform(4e-3, 1e-2))
+        exit_at = int(rng.integers(0, n_units - 1))
+        correct_from = int(rng.integers(0, n_units))
+        n_jobs = int(np.ceil(HORIZON / period)) + 1
+        profiles = []
+        for _ in range(n_jobs):
+            margins = np.sort(rng.uniform(0.05, 0.6, n_units))
+            passes = np.zeros(n_units, bool)
+            passes[exit_at:] = True
+            correct = np.zeros(n_units, bool)
+            correct[correct_from:] = True
+            profiles.append(JobProfile(margins, passes, correct))
+        tasks.append(TaskSpec(
+            task_id=tid, period=period, deadline=deadline,
+            unit_time=np.full(n_units, unit_t),
+            unit_energy=np.full(n_units, unit_e),
+            profiles=profiles,
+        ))
+    return tasks
+
+
+def per_task_bound(released, mode: str) -> np.ndarray:
+    """Calibrated event-driven-vs-discretized bound (see module docstring).
+    Applies ONLY to comparisons against the event-driven ``simulate()``;
+    fleet vs ``simulate_stepped`` is asserted exactly."""
+    rel = np.maximum(np.asarray(released, np.float64), 1.0)
+    if mode == "persistent":
+        return np.maximum(2.0, np.ceil(0.1 * rel))
+    return np.maximum(3.0, np.ceil(0.35 * rel))

@@ -16,42 +16,21 @@ import numpy as np
 import pytest
 
 from _subproc import sub_env
+from _workloads import MODES, make_task, profile
 from repro import fleet
 from repro.core import energy, policy
 from repro.core.scheduler import (
     CHRTClock,
     Job,
-    JobProfile,
     SimConfig,
-    TaskSpec,
     simulate,
     zeta,
     zeta_intermittent,
 )
 
-PERSISTENT = energy.Harvester("battery", 1.0, 0.0, 10.0)
-
-
-def profile(n_units=4, exit_at=None, correct_from=0):
-    margins = np.linspace(0.05, 0.5, n_units)
-    passes = np.zeros(n_units, bool)
-    if exit_at is not None:
-        passes[exit_at:] = True
-    correct = np.zeros(n_units, bool)
-    correct[correct_from:] = True
-    return JobProfile(margins, passes, correct)
-
-
-def make_task(n_jobs=20, period=1.0, deadline=2.0, unit_t=0.1, unit_e=1e-3,
-              n_units=4, exit_at=1):
-    return TaskSpec(
-        task_id=0,
-        period=period,
-        deadline=deadline,
-        unit_time=np.full(n_units, unit_t),
-        unit_energy=np.full(n_units, unit_e),
-        profiles=[profile(n_units, exit_at) for _ in range(n_jobs)],
-    )
+# workload builders (profile/make_task) and the calibrated parity bounds are
+# shared with tests/test_parity.py via tests/_workloads.py
+PERSISTENT = MODES["persistent"][0]
 
 
 def fleet_device(task, harvester, eta, sim, **kw):
@@ -284,6 +263,19 @@ for name in res_u._fields:
                                   np.asarray(getattr(res_s, name)),
                                   err_msg=name)
 
+# segmented execution shards the carry pytree alongside the config
+# (launch.sharding.shard_fleet_carry): still bit-identical, and the
+# returned result/carry are sliced back to the 6 real devices
+cfg_b, statics_b, _ = fleet.build(grid)
+res_g, carry_g = fleet.run_segments(cfg_b, statics_b, 5,
+                                    mesh=make_fleet_mesh())
+for name in res_u._fields:
+    np.testing.assert_array_equal(np.asarray(getattr(res_u, name)),
+                                  np.asarray(getattr(res_g, name)),
+                                  err_msg="segmented " + name)
+import jax
+assert all(leaf.shape[0] == 6 for leaf in jax.tree.leaves(carry_g))
+
 # the adapt objective shards its candidate population the same way
 import dataclasses
 from repro import adapt
@@ -325,6 +317,16 @@ def test_sharded_sweep_trivial_mesh_inprocess():
         np.testing.assert_array_equal(
             np.asarray(getattr(res_u, name)),
             np.asarray(getattr(res_s, name)), err_msg=name)
+    # run_segments on the same mesh shards the carry like the config
+    cfg, statics, _ = fleet.build(grid)
+    res_g, carry = fleet.run_segments(cfg, statics, 3, mesh=make_fleet_mesh())
+    for name in res_u._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_u, name)),
+            np.asarray(getattr(res_g, name)), err_msg="segmented " + name)
+    import jax
+    assert all(leaf.shape[0] == cfg.n_devices
+               for leaf in jax.tree.leaves(carry))
 
 
 # --------------------------------------------------------------------------- #

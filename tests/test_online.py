@@ -1,0 +1,200 @@
+"""In-trajectory online adaptation (`repro.adapt.online`).
+
+Three layers:
+
+* hypothesis property tests for the estimators — the EWMA (and quantile)
+  eta estimate must never leave the envelope of the measurements it has
+  seen, and must converge geometrically on a stationary stream;
+* integration: the full :class:`OnlineAdapter` hook on a *stationary*
+  harvester trace keeps its estimate inside the observed per-segment
+  measurement envelope and lands near the offline Eq. 3 measurement;
+* the seeded nonstationary regression: on the solar -> RF -> occluded
+  trace of ``examples/online_adapt.py``, mid-trajectory re-estimation must
+  beat the best static tuned (eta, E_opt) constants — the paper's claim
+  that runtime adaptation dominates shipped constants.
+"""
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from repro import adapt, fleet
+from repro.core import energy
+
+
+def _load_example():
+    path = (pathlib.Path(__file__).resolve().parent.parent / "examples"
+            / "online_adapt.py")
+    spec = importlib.util.spec_from_file_location("online_adapt_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# --------------------------------------------------------------------------- #
+# Estimator properties.
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1,
+             max_size=30),
+    st.floats(min_value=0.01, max_value=1.0),
+)
+def test_ewma_stays_within_observed_envelope(measurements, rho):
+    est = adapt.EwmaEstimator(rho)
+    seen = []
+    for m in measurements:
+        seen.append(m)
+        e = float(est.update(np.asarray([m]))[0])
+        assert min(seen) - 1e-12 <= e <= max(seen) + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.floats(min_value=0.0, max_value=1.0),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.floats(min_value=0.05, max_value=1.0),
+    st.integers(min_value=1, max_value=50),
+)
+def test_ewma_converges_geometrically_on_stationary_stream(e0, m, rho, n):
+    """|est - m| after n constant measurements is bounded by the geometric
+    contraction (1 - rho)^n of the initial error."""
+    est = adapt.EwmaEstimator(rho)
+    est.update(np.asarray([e0]))
+    for _ in range(n):
+        est.update(np.asarray([m]))
+    err = abs(float(est.estimate[0]) - m)
+    assert err <= (1.0 - rho) ** n * abs(e0 - m) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1,
+             max_size=30),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.integers(min_value=1, max_value=10),
+)
+def test_quantile_estimator_stays_within_envelope(measurements, q, window):
+    est = adapt.QuantileEstimator(q, window)
+    seen = []
+    for m in measurements:
+        seen.append(m)
+        e = float(est.update(np.asarray([m]))[0])
+        assert min(seen) - 1e-12 <= e <= max(seen) + 1e-12
+
+
+def test_estimator_registry_and_validation():
+    assert set(adapt.ESTIMATORS) == {"ewma", "quantile"}
+    with pytest.raises(ValueError, match="rho"):
+        adapt.EwmaEstimator(0.0)
+    with pytest.raises(ValueError, match="q must"):
+        adapt.QuantileEstimator(q=1.5)
+    with pytest.raises(ValueError, match="estimator"):
+        adapt.OnlineAdapter(fleet.FleetStatics(), estimator="nope")
+
+
+# --------------------------------------------------------------------------- #
+# Observed statistics.
+# --------------------------------------------------------------------------- #
+
+
+def test_observed_eta_matches_offline_measurement():
+    """On a window fully inside the observed prefix, observed_eta is exactly
+    eta_factor of that (binarized) window."""
+    rng = np.random.default_rng(0)
+    harv = energy.Harvester("h", 0.9, 0.9, 0.05)
+    ev = harv.sample_events(rng, 100, init=1).astype(np.float32)[None, :]
+    got = adapt.observed_eta(ev, t_end=60.0, slot_s=1.0, window_s=25.0,
+                             n_max=5)
+    want = energy.eta_factor(ev[0, 35:60].astype(np.int8), n_max=5)
+    assert got.shape == (1,)
+    assert got[0] == pytest.approx(want)
+    # before anything is observed: patternless prior
+    assert adapt.observed_eta(ev, 0.0, 1.0, 25.0)[0] == 0.0
+
+
+def test_observed_supply_is_windowed_mean_power():
+    ev = np.zeros((2, 50), np.float32)
+    ev[0, 20:30] = 1.0
+    ev[1, :] = 0.5                       # fractional amplitudes count pro rata
+    got = adapt.observed_supply(ev, np.asarray([0.1, 0.2]), t_end=30.0,
+                                slot_s=1.0, window_s=10.0)
+    np.testing.assert_allclose(got, [0.1, 0.5 * 0.2])
+
+
+def test_workload_demand_mandatory_below_full():
+    ex = _load_example()
+    cfg, _ = ex.build_fleet([(0.5, 0.5)], ex.nonstationary_trace(0))
+    mand, full = adapt.workload_demand(cfg)
+    # mandatory = 2 of 5 units per 1 s period, full = all 5
+    assert mand[0] == pytest.approx(2 * 8e-3, rel=1e-6)
+    assert full[0] == pytest.approx(5 * 8e-3, rel=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Integration: stationary trace convergence.
+# --------------------------------------------------------------------------- #
+
+
+def test_online_eta_converges_on_stationary_trace():
+    """On a stationary bursty harvester the adapter's estimate stays inside
+    the envelope of its per-segment measurements and ends near the offline
+    whole-trace Eq. 3 value."""
+    from repro.core.scheduler import JobProfile, TaskSpec
+    from repro.fleet import grid as fgrid
+
+    horizon = 120.0
+    harv = energy.Harvester("h", 0.9, 0.9, 0.05)
+    events = fgrid.sample_events(harv, horizon, seed=4)
+    n_units = 4
+    prof = JobProfile(np.linspace(0.1, 0.5, n_units),
+                      np.array([False, True, True, True]),
+                      np.ones(n_units, bool))
+    task = TaskSpec(task_id=0, period=1.0, deadline=2.0,
+                    unit_time=np.full(n_units, 0.1),
+                    unit_energy=np.full(n_units, 5e-3),
+                    profiles=[prof] * (int(horizon) + 2))
+    dev = fgrid.device_config(task, harv, 0.5, energy.Capacitor(),
+                              policy="zygarde", horizon=horizon,
+                              events=events)
+    cfg = fgrid.stack_configs([dev])
+    statics = fleet.FleetStatics(dt=0.025, horizon=horizon, slot_s=1.0)
+    adapter = adapt.OnlineAdapter(statics, cfg, rho=0.4, window_s=40.0,
+                                  n_max=5, adapt_e_opt=False)
+    fleet.run_segments(cfg, statics, 12, hook=adapter.hook)
+
+    measured = np.array([h["measured"][0] for h in adapter.history])
+    eta_hat = np.array([h["eta_hat"][0] for h in adapter.history])
+    for i in range(len(measured)):
+        lo, hi = measured[: i + 1].min(), measured[: i + 1].max()
+        assert lo - 1e-9 <= eta_hat[i] <= hi + 1e-9
+    offline = energy.eta_factor(events.astype(np.int8), n_max=5)
+    # stationary source: the tracked estimate lands near the offline value
+    assert abs(eta_hat[-1] - offline) < 0.25
+    assert eta_hat[-1] > 0.3           # clearly not the patternless prior
+
+
+# --------------------------------------------------------------------------- #
+# The nonstationary regression: online beats the best static constants.
+# --------------------------------------------------------------------------- #
+
+
+def test_online_beats_best_static_on_nonstationary_trace():
+    """Pins the example's seeded win: on the solar -> RF -> occluded trace,
+    mid-trajectory re-estimation beats the best of 100 statically tuned
+    (eta, E_opt) points, which itself beats nothing-to-sneeze-at paper
+    defaults.  Fully deterministic (seeded trace, fixed grids)."""
+    out = _load_example().run_demo()
+    assert out["online"]["score"] > out["best_static"]["score"] + 0.01
+    assert out["best_static"]["score"] >= out["default"]["score"]
+    # the adaptation actually moved: eta estimates span the regimes
+    eta_hat = np.array([h["eta_hat"][0] for h in out["history"]])
+    assert eta_hat.max() > 0.9 and eta_hat.min() < 0.3
+    fracs = np.array([h["e_opt_frac"][0] for h in out["history"]])
+    assert fracs.max() > 0.9 and fracs.min() < 0.1

@@ -1,89 +1,141 @@
 """Scalar↔fleet parity harness over randomized multi-task workloads.
 
-A seeded generator draws task *sets* (K periodic DNN streams with
-heterogeneous unit counts, periods, deadlines and utility profiles) plus a
-harvester trace, runs the SAME configuration through the scalar
-event-driven :func:`repro.core.scheduler.simulate` and the vectorized
-:func:`repro.fleet.simulate_fleet`, and asserts the per-task
-on-time/accuracy/drop counts agree within the timestep-discretization
-bound — parametrized over all four policies and both persistence modes,
-for K ∈ {1, 2, 4}.
+Two tiers, now that every discretized frontend runs the ONE step core in
+:mod:`repro.core.step`:
 
-Tolerances are calibrated against the fidelity gap documented in
-``repro.fleet.simulator``: the fleet path quantizes execution to ``dt``
-and drains fragment energy continuously, so energy-starved boundary jobs
-can land on the other side of a deadline.  Empirically (48 seeded runs per
-mode) the per-task deviation stays ≤ 1 job under persistent power and
-≤ 3 jobs (≤ 25% of a task's releases) under intermittent power; the bounds
-below add headroom on top while still failing loudly on any systematic
-task-row mix-up (which mis-counts whole streams, not boundary jobs).
+* **bit-exact** — :func:`repro.core.scheduler.simulate_stepped` (scalar
+  ``lax.scan`` over the step core, no vmap) vs
+  :func:`repro.fleet.simulate_fleet` (vmap of the same functions): every
+  metric equal, for all four policies x both persistence modes x
+  K in {1, 2, 4}.  No tolerances — batching must not change a single
+  count, and the segmented runner must be bit-identical to the monolithic
+  scan for any segment count.
+* **calibrated** — the *event-driven* :func:`repro.core.scheduler.simulate`
+  vs the discretized paths agrees only within the documented
+  discretization bound (:func:`_workloads.per_task_bound`); those
+  comparisons keep their tolerance, everything else is exact.
 
-Workload note: unit times are quantized to multiples of ``4 * DT`` so one
-fleet timestep is exactly one fragment of every task — the regime the
-simulator documents as its fidelity envelope.
+Workload generation and the tolerance calibration live in
+``tests/_workloads.py`` (shared with ``tests/test_fleet.py``).
 """
 import numpy as np
 import pytest
 
+from _workloads import (
+    DT,
+    HORIZON,
+    MODES,
+    TASK_SET_SEEDS,
+    per_task_bound,
+    random_task_set,
+)
 from repro import fleet
-from repro.core import energy
-from repro.core.scheduler import JobProfile, SimConfig, TaskSpec, simulate
+from repro.core.scheduler import SimConfig, simulate, simulate_stepped
 
-DT = 0.005          # fleet timestep; unit times are multiples of 4*DT
-HORIZON = 12.0
-TASK_SET_SEEDS = {1: 11, 2: 22, 4: 44}
+ALL_POLICIES = ["zygarde", "edf", "edf-m", "rr"]
 
-# (harvester, eta) per persistence mode: `persistent` takes the Eq. 6 zeta
-# fast path (eta = 1, p_stay_on = 1), `intermittent` the eta-gated Eq. 7
-MODES = {
-    "persistent": (energy.Harvester("battery", 1.0, 0.0, 10.0), 1.0),
-    "intermittent": (energy.Harvester("rf", 0.93, 0.93, 0.07), 0.7),
-}
+EXACT_FIELDS = (
+    "released", "scheduled", "correct", "deadline_misses", "units_executed",
+    "optional_units", "busy_time", "idle_no_energy", "reboots",
+    "wasted_reexec",
+)
 
 
-def random_task_set(seed: int, k: int) -> list[TaskSpec]:
-    """K tasks with distinct periods/deadlines/depths; full-execution
-    utilization of the whole set ~0.6 so even EDF (no early exit) is loaded
-    but not hopeless."""
-    rng = np.random.default_rng(seed)
-    tasks = []
-    for tid in range(k):
-        n_units = int(rng.integers(3, 6))
-        period = float(rng.choice([0.8, 1.0, 1.2, 1.6]))
-        deadline = period * float(rng.uniform(1.5, 2.5))
-        grains = max(1, round(0.6 * period / (k * n_units) / (4 * DT)))
-        unit_t = grains * 4 * DT
-        unit_e = float(rng.uniform(4e-3, 1e-2))
-        exit_at = int(rng.integers(0, n_units - 1))
-        correct_from = int(rng.integers(0, n_units))
-        n_jobs = int(np.ceil(HORIZON / period)) + 1
-        profiles = []
-        for _ in range(n_jobs):
-            margins = np.sort(rng.uniform(0.05, 0.6, n_units))
-            passes = np.zeros(n_units, bool)
-            passes[exit_at:] = True
-            correct = np.zeros(n_units, bool)
-            correct[correct_from:] = True
-            profiles.append(JobProfile(margins, passes, correct))
-        tasks.append(TaskSpec(
-            task_id=tid, period=period, deadline=deadline,
-            unit_time=np.full(n_units, unit_t),
-            unit_energy=np.full(n_units, unit_e),
-            profiles=profiles,
-        ))
-    return tasks
-
-
-def _per_task_bound(released, mode: str) -> np.ndarray:
-    rel = np.maximum(np.asarray(released, np.float64), 1.0)
-    if mode == "persistent":
-        return np.maximum(2.0, np.ceil(0.1 * rel))
-    return np.maximum(3.0, np.ceil(0.35 * rel))
+# --------------------------------------------------------------------------- #
+# Tier 1: bit-exact — fleet (vmap of core.step) vs simulate_stepped (scalar
+# scan of core.step).
+# --------------------------------------------------------------------------- #
 
 
 @pytest.mark.parametrize("k", sorted(TASK_SET_SEEDS))
 @pytest.mark.parametrize("mode", sorted(MODES))
-@pytest.mark.parametrize("pol", ["zygarde", "edf", "edf-m", "rr"])
+@pytest.mark.parametrize("pol", ALL_POLICIES)
+def test_stepped_fleet_parity_bit_exact(pol, mode, k):
+    """The fleet path IS vmap of the step core: every aggregate metric and
+    every per-task counter must be exactly equal to the scalar-stepped
+    frontend on the shared clock — no calibrated bounds."""
+    tasks = random_task_set(TASK_SET_SEEDS[k], k)
+    harv, eta = MODES[mode]
+    sim = SimConfig(policy=pol, horizon=HORIZON, seed=3)
+    stepped = simulate_stepped(tasks, harv, eta, sim=sim, dt=DT)
+    cfg, statics = fleet.from_sim_config(tasks, harv, eta, sim=sim, dt=DT)
+    d = fleet.simulate_fleet(cfg, statics).device(0)
+
+    for name in EXACT_FIELDS:
+        assert getattr(stepped, name) == d[name], name
+    for name in ("released", "scheduled", "correct", "misses"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(stepped, f"task_{name}")),
+            np.asarray(d[f"task_{name}"]), err_msg=f"task_{name}")
+    # job conservation per task
+    np.testing.assert_array_equal(
+        stepped.task_scheduled + stepped.task_misses, stepped.task_released)
+
+
+@pytest.mark.parametrize("n_segments", [1, 3, 7, 32])
+def test_run_segments_bit_identical_to_monolithic(n_segments):
+    """Chunked execution over the checkpointable carry must reproduce the
+    monolithic scan exactly, for any segment count (including ones that do
+    not divide the step count)."""
+    harv, _ = MODES["intermittent"]
+    grid = fleet.SweepGrid(
+        task=random_task_set(TASK_SET_SEEDS[2], 2),
+        policies=("zygarde", "edf", "edf-m", "rr"),
+        etas=(0.5, 1.0),
+        harvesters=(harv,),
+        horizon=HORIZON,
+        dt=DT,
+    )
+    cfg, statics, _ = fleet.build(grid)
+    mono = fleet.simulate_fleet(cfg, statics)
+    seg, carry = fleet.run_segments(cfg, statics, n_segments)
+    for name in mono._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mono, name)), np.asarray(getattr(seg, name)),
+            err_msg=name)
+    # the returned carry is the end-of-horizon state: finalizing it again
+    # must be idempotent
+    again = fleet.finalize_fleet(cfg, carry, statics)
+    np.testing.assert_array_equal(np.asarray(again.correct),
+                                  np.asarray(mono.correct))
+
+
+def test_run_segments_carry_resume():
+    """Checkpoint/resume through the public API: run the first half on a
+    half-horizon statics, then resume the returned carry with
+    ``start_step`` — bit-identical to one uninterrupted run.  The clock is
+    ``t = step * dt`` and the carry holds absolute release/deadline times,
+    so the resumed run must continue the step index, not restart at 0."""
+    import dataclasses
+
+    harv, eta = MODES["intermittent"]
+    tasks = random_task_set(TASK_SET_SEEDS[2], 2)
+    sim = SimConfig(policy="zygarde", horizon=HORIZON, seed=3)
+    cfg, statics = fleet.from_sim_config(tasks, harv, eta, sim=sim, dt=DT)
+    full, _ = fleet.run_segments(cfg, statics, 4)
+
+    half = dataclasses.replace(statics, horizon=HORIZON / 2)
+    _, carry = fleet.run_segments(cfg, half, 2)
+    res, _ = fleet.run_segments(cfg, statics, 2, carry=carry,
+                                start_step=half.n_steps)
+    for name in res._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, name)), np.asarray(getattr(full, name)),
+            err_msg=name)
+    with pytest.raises(ValueError, match="start_step"):
+        fleet.run_segments(cfg, statics, 1, carry=carry,
+                           start_step=statics.n_steps + 1)
+
+
+# --------------------------------------------------------------------------- #
+# Tier 2: calibrated — the event-driven scalar simulator vs the stepped
+# paths (the only comparison that keeps tolerances).
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("k", sorted(TASK_SET_SEEDS))
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("pol", ALL_POLICIES)
 def test_scalar_fleet_task_parity(pol, mode, k):
     tasks = random_task_set(TASK_SET_SEEDS[k], k)
     harv, eta = MODES[mode]
@@ -96,7 +148,7 @@ def test_scalar_fleet_task_parity(pol, mode, k):
     np.testing.assert_array_equal(scalar.task_released, d["task_released"])
     assert scalar.released == d["released"]
 
-    bound = _per_task_bound(scalar.task_released, mode)
+    bound = per_task_bound(scalar.task_released, mode)
     for name in ("scheduled", "correct", "misses"):
         s = np.asarray(getattr(scalar, f"task_{name}"), np.int64)
         f = np.asarray(d[f"task_{name}"], np.int64)
@@ -185,8 +237,10 @@ def test_rr_rotation_horizon_guard():
 
 
 def test_sim_result_dicts_json_serializable():
-    """Both result containers must survive json.dumps with the per-task
-    arrays included (launch/serve.py dumps SimResult.as_dict verbatim)."""
+    """All three result exports must survive json.dumps with the per-task
+    arrays included: SimResult.as_dict (launch/serve.py dumps it verbatim),
+    FleetResult.device(i), and the whole-fleet FleetResult.as_dict
+    (benchmarks/run.py writes it into BENCH_<name>.json)."""
     import json
 
     tasks = random_task_set(TASK_SET_SEEDS[2], 2)
@@ -194,12 +248,18 @@ def test_sim_result_dicts_json_serializable():
     sim = SimConfig(policy="zygarde", horizon=HORIZON, seed=0)
     scalar = simulate(tasks, harv, eta, sim=sim)
     json.dumps(scalar.as_dict())
+    stepped = simulate_stepped(tasks, harv, eta, sim=sim, dt=DT)
+    json.dumps(stepped.as_dict())
     cfg, statics = fleet.from_sim_config(tasks, harv, eta, sim=sim, dt=DT)
-    json.dumps(fleet.simulate_fleet(cfg, statics).device(0))
+    res = fleet.simulate_fleet(cfg, statics)
+    json.dumps(res.device(0))
+    d = json.loads(json.dumps(res.as_dict()))   # fleet-level export
+    assert d["task_scheduled"] == np.asarray(res.task_scheduled).tolist()
+    assert d["released"] == np.asarray(res.released).tolist()
 
 
 def test_scalar_per_task_metrics_consistent():
-    """The scalar simulator's new per-task counters sum to its aggregates."""
+    """The scalar simulator's per-task counters sum to its aggregates."""
     tasks = random_task_set(TASK_SET_SEEDS[2], 2)
     harv, eta = MODES["intermittent"]
     res = simulate(tasks, harv, eta,
