@@ -1,0 +1,80 @@
+"""Forecast-aware vs feedback-only online adaptation, plus forecaster
+ingest throughput.
+
+Two claims feed the CI regression gate (``benchmarks/check_regression.py``):
+
+* **demo scores** — the seeded nonstationary solar -> RF -> occluded demo
+  (``examples/online_adapt.py``): the forecast-aware controller's
+  scalarized score must stay at or above the PR-4 feedback-only
+  controller's, which itself beats the best statically tuned constants.
+  Both numbers are fully deterministic, so the gate holds them to a tight
+  tolerance.
+* **ingest throughput** — windows/sec of the fleet-batched
+  featurize -> L1-classify -> centroid-adapt pipeline
+  (:meth:`repro.adapt.HarvestForecaster.observe` over ``(D, W, F)``
+  batches through the Pallas ``fleet_l1_topk2`` / ``fleet_centroid_update``
+  dispatch), the hot path when a whole fleet's windows stream through one
+  shared forecaster.
+"""
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import time
+
+import numpy as np
+
+from repro import adapt
+
+from .common import emit
+
+
+def _load_demo():
+    path = (pathlib.Path(__file__).resolve().parent.parent / "examples"
+            / "online_adapt.py")
+    spec = importlib.util.spec_from_file_location("online_adapt_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _ingest_row(n_dev: int, n_win: int, n_steps: int) -> dict:
+    rng = np.random.default_rng(0)
+    fc = adapt.HarvestForecaster(n_clusters=4)
+    batch = rng.random((n_dev, n_win, len(adapt.FEATURES))).astype(np.float32)
+    eta = batch[:, :, 0].astype(np.float64)
+    supply = batch[:, :, 2].astype(np.float64)
+    fc.observe(batch, eta, supply)          # warmup: spawn + compile
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        fc.observe(batch, eta, supply)
+        fc.predict(horizon=4.0)
+    wall = time.perf_counter() - t0
+    windows = n_dev * n_win * n_steps
+    return dict(mode="forecaster_ingest", devices=n_dev, windows_per_obs=n_win,
+                steps=n_steps, wall_s=round(wall, 3),
+                windows_per_sec=round(windows / wall, 1))
+
+
+def run(quick: bool = True) -> None:
+    demo = _load_demo()
+    t0 = time.perf_counter()
+    out = demo.run_demo()
+    wall = time.perf_counter() - t0
+    fb, fc = out["online"], out["forecast"]
+    rows = [
+        dict(mode="demo_feedback", score=round(fb["score"], 4),
+             correct=fb["correct"], misses=fb["misses"],
+             best_static_score=round(out["best_static"]["score"], 4)),
+        dict(mode="demo_forecast", score=round(fc["score"], 4),
+             correct=fc["correct"], misses=fc["misses"],
+             margin_over_feedback=round(fc["score"] - fb["score"], 4),
+             beats_feedback=bool(fc["score"] >= fb["score"]),
+             wall_s=round(wall, 3)),
+        _ingest_row(n_dev=64, n_win=8, n_steps=4 if quick else 32),
+    ]
+    emit("forecast", rows)
+
+
+if __name__ == "__main__":
+    run()

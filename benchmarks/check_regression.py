@@ -1,0 +1,174 @@
+"""CI benchmark-regression gate.
+
+Compares fresh ``experiments/BENCH_<name>.json`` artifacts (written by
+``benchmarks/run.py``) against the committed baselines under
+``experiments/baselines/`` and exits nonzero when a gated metric regressed
+beyond its tolerance band:
+
+* **throughput keys** (:data:`THROUGHPUT_KEYS` — device-steps/sec and
+  friends) are machine-dependent, so the band is wide: a fresh value must
+  stay above ``(1 - throughput_tolerance)`` of the baseline (default 0.75,
+  i.e. a 4x slowdown trips the gate — CI runners are noisy, the gate is
+  for order-of-magnitude rot, not percent-level tuning).
+* **score keys** (``score`` / ``*_score`` / ``gain``) are seeded and
+  deterministic, so the band is tight: fresh must stay within
+  ``score_tolerance`` (default 0.005) below the baseline.
+
+Rows are matched positionally per bench and verified by their identity
+keys (``mode`` / ``n_segments`` / ``budget`` / ``devices``): a structural
+mismatch means the benchmark changed shape and the baselines must be
+regenerated — run with ``--update`` to copy the fresh artifacts over the
+baselines (then commit them).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke   # write fresh JSONs
+    python -m benchmarks.check_regression             # gate them
+    python -m benchmarks.check_regression --update    # re-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FRESH_DIR = ROOT / "experiments"
+BASELINE_DIR = FRESH_DIR / "baselines"
+
+#: higher-is-better machine-dependent metrics, gated with the wide band
+THROUGHPUT_KEYS = ("device_steps_per_sec", "devices_per_sec",
+                   "candidates_per_sec", "windows_per_sec")
+#: row fields that identify a row (checked, never gated)
+IDENTITY_KEYS = ("mode", "n_segments", "budget", "devices", "n_tasks")
+
+
+def _is_score_key(key: str) -> bool:
+    return key == "score" or key.endswith("_score") or key == "gain"
+
+
+def _iter_rows(doc: dict):
+    """Yield (bench_name, row_index, row_dict) from a BENCH json."""
+    for bench, rows in sorted(doc.get("rows", {}).items()):
+        for i, row in enumerate(rows):
+            yield bench, i, row
+
+
+def compare_docs(name: str, base: dict, fresh: dict, *,
+                 throughput_tolerance: float,
+                 score_tolerance: float) -> list[str]:
+    """Return a list of human-readable violations (empty = pass)."""
+    problems: list[str] = []
+    if not fresh.get("ok", False):
+        problems.append(f"{name}: fresh run reported ok=false")
+    base_rows = list(_iter_rows(base))
+    fresh_rows = {(b, i): row for b, i, row in _iter_rows(fresh)}
+    for bench, i, brow in base_rows:
+        where = f"{name}:{bench}[{i}]"
+        frow = fresh_rows.get((bench, i))
+        if frow is None:
+            problems.append(f"{where}: row missing from fresh results "
+                            "(benchmark changed shape? re-baseline with "
+                            "--update)")
+            continue
+        for key in IDENTITY_KEYS:
+            if key in brow and brow.get(key) != frow.get(key):
+                problems.append(
+                    f"{where}: identity key {key!r} changed "
+                    f"({brow.get(key)!r} -> {frow.get(key)!r}); "
+                    "re-baseline with --update")
+        for key, bval in brow.items():
+            if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+                continue
+            fval = frow.get(key)
+            if not isinstance(fval, (int, float)) or isinstance(fval, bool):
+                continue
+            if key in THROUGHPUT_KEYS:
+                floor = (1.0 - throughput_tolerance) * bval
+                if fval < floor:
+                    problems.append(
+                        f"{where}: {key} regressed {bval:g} -> {fval:g} "
+                        f"(floor {floor:g} at tolerance "
+                        f"{throughput_tolerance:g})")
+            elif _is_score_key(key):
+                if fval < bval - score_tolerance:
+                    problems.append(
+                        f"{where}: {key} regressed {bval:g} -> {fval:g} "
+                        f"(allowed drop {score_tolerance:g})")
+    return problems
+
+
+def check(fresh_dir: Path = FRESH_DIR, baseline_dir: Path = BASELINE_DIR, *,
+          throughput_tolerance: float = 0.75,
+          score_tolerance: float = 0.005,
+          update: bool = False, out=sys.stdout) -> int:
+    """Gate every baselined bench; returns a process exit code."""
+    if update:
+        # copy every fresh artifact over (or into) the baselines — also the
+        # bootstrap path when no baseline exists yet
+        baseline_dir.mkdir(parents=True, exist_ok=True)
+        n = 0
+        for src in sorted(fresh_dir.glob("BENCH_*.json")):
+            shutil.copyfile(src, baseline_dir / src.name)
+            n += 1
+        print(f"updated {n} baselines under {baseline_dir}", file=out)
+        return 0 if n else 1
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {baseline_dir} — nothing to gate",
+              file=out)
+        return 1
+    problems: list[str] = []
+    checked = 0
+    for path in baselines:
+        name = path.stem.removeprefix("BENCH_")
+        fresh_path = fresh_dir / path.name
+        if not fresh_path.exists():
+            problems.append(
+                f"{name}: no fresh {path.name} under {fresh_dir} "
+                "(did benchmarks/run.py cover it?)")
+            continue
+        base = json.loads(path.read_text())
+        fresh = json.loads(fresh_path.read_text())
+        problems.extend(compare_docs(
+            name, base, fresh,
+            throughput_tolerance=throughput_tolerance,
+            score_tolerance=score_tolerance))
+        checked += 1
+    extra = [p.name for p in sorted(fresh_dir.glob("BENCH_*.json"))
+             if not (baseline_dir / p.name).exists()]
+    if extra:
+        print(f"note: {len(extra)} fresh artifacts have no baseline "
+              f"(ungated): {', '.join(extra)}", file=out)
+    if problems:
+        print(f"benchmark regression gate: {len(problems)} violation(s) "
+              f"across {checked} baselined bench(es):", file=out)
+        for p in problems:
+            print(f"  FAIL {p}", file=out)
+        return 1
+    print(f"benchmark regression gate: {checked} baselined bench(es) ok",
+          file=out)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", type=Path, default=FRESH_DIR)
+    ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
+    ap.add_argument("--throughput-tolerance", type=float, default=0.75,
+                    help="allowed fractional throughput drop (0.75 = fresh "
+                         "must stay above 25%% of baseline)")
+    ap.add_argument("--score-tolerance", type=float, default=0.005,
+                    help="allowed absolute drop on deterministic scores")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh artifacts over the baselines")
+    args = ap.parse_args(argv)
+    return check(args.fresh_dir, args.baseline_dir,
+                 throughput_tolerance=args.throughput_tolerance,
+                 score_tolerance=args.score_tolerance, update=args.update)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

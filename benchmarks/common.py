@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import functools
-import json
 import time
 from pathlib import Path
 
@@ -83,16 +82,11 @@ def timeit(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
 
 
 def emit(bench: str, rows: list[dict]) -> list[dict]:
-    """Print rows as CSV and append them to experiments/bench_results.json."""
+    """Print rows as CSV and queue them for the per-module
+    ``experiments/BENCH_<name>.json`` artifact (written by ``run.py``; the
+    legacy aggregate ``bench_results.json`` is gone — nothing read it)."""
     for r in rows:
         flat = ",".join(f"{k}={v}" for k, v in r.items())
         print(f"{bench},{flat}")
-    OUT_DIR.mkdir(exist_ok=True)
-    path = OUT_DIR / "bench_results.json"
-    existing = {}
-    if path.exists():
-        existing = json.loads(path.read_text())
-    existing[bench] = rows
-    path.write_text(json.dumps(existing, indent=2, default=str))
     PENDING_ROWS.setdefault(bench, []).extend(rows)
     return rows

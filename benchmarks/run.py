@@ -1,15 +1,16 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One module per paper table/figure (see DESIGN.md §6); each prints
-``bench,key=value,...`` CSV rows and appends to
-``experiments/bench_results.json``.  Additionally every module run writes a
+``bench,key=value,...`` CSV rows.  Every module run writes a
 machine-readable ``experiments/BENCH_<name>.json`` (wall time + the rows it
 emitted, which carry throughput / devices-per-sec where applicable) so the
-perf trajectory can be tracked across PRs.
+perf trajectory can be tracked across PRs —
+``benchmarks/check_regression.py`` gates those artifacts against the
+committed baselines under ``experiments/baselines/`` in CI.
 
 ``--full`` runs the 4-dataset variants; ``--smoke`` runs a fast subset
-(the fleet-throughput and policy-search benches) as a CI canary so the
-benchmark entrypoints can't silently rot.
+(the fleet-throughput, policy-search and forecast benches) as a CI canary
+so the benchmark entrypoints can't silently rot.
 """
 from __future__ import annotations
 
@@ -28,6 +29,7 @@ from . import (
     bench_eta,
     bench_fleet,
     bench_fleet_segments,
+    bench_forecast,
     bench_loss_functions,
     bench_overhead,
     bench_scheduler,
@@ -43,6 +45,7 @@ BENCHES = (
     ("fleet_throughput", bench_fleet),
     ("fleet", bench_fleet_segments),
     ("adapt_tune", bench_adapt),
+    ("forecast", bench_forecast),
     ("capacitor_fig21", bench_capacitor),
     ("clock_table5", bench_clock),
     ("adaptation_fig24", bench_adaptation),
@@ -51,7 +54,7 @@ BENCHES = (
     ("roofline", roofline),
 )
 
-SMOKE_BENCHES = ("fleet_throughput", "fleet", "adapt_tune")
+SMOKE_BENCHES = ("fleet_throughput", "fleet", "adapt_tune", "forecast")
 
 
 def write_bench_json(name: str, wall_s: float, rows: dict,
@@ -73,6 +76,13 @@ def main() -> None:
     args = ap.parse_args()
 
     selected = args.only or (SMOKE_BENCHES if args.smoke else None)
+    if args.only:
+        known = {name for name, _ in BENCHES}
+        unknown = sorted(set(args.only) - known)
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark name(s): {', '.join(unknown)}\n"
+                f"available: {', '.join(name for name, _ in BENCHES)}")
     failures = []
     for name, mod in BENCHES:
         if selected and name not in selected:
@@ -92,8 +102,7 @@ def main() -> None:
         print(f"# {name} done in {wall:.1f}s")
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
-    print("# all benchmarks complete -> experiments/bench_results.json "
-          "+ experiments/BENCH_<name>.json")
+    print("# all benchmarks complete -> experiments/BENCH_<name>.json")
 
 
 if __name__ == "__main__":

@@ -24,15 +24,32 @@ Drivers: ``random`` / ``grid`` (vectorized one-shot search), ``es``
 gradients) — see :mod:`repro.adapt.search`.
 
 Offline tuning picks constants *between* runs; :mod:`repro.adapt.online`
-closes the loop *inside* a run — an :class:`OnlineAdapter` hook on
-:func:`repro.fleet.run_segments` re-estimates eta from the observed
-harvest pattern (EWMA / rolling quantile over per-segment Eq. 3
-measurements) and rewrites the tunable FleetConfig fields mid-trajectory::
+closes the loop *inside* a run — an :class:`OnlineAdapter` composes
+pluggable controllers into a :func:`repro.fleet.run_segments` hook that
+rewrites the tunable FleetConfig fields mid-trajectory.  The default
+composition is the paper's runtime loop (an :class:`EtaController`
+re-estimating eta from the observed pattern + the reactive
+:class:`FeedbackController` for E_opt); :mod:`repro.adapt.forecast` adds
+the anticipatory :class:`ForecastController`, which clusters observed
+harvest windows online (k-means over window features, Pallas-kernel
+classify/adapt), learns per-cluster duration/transition statistics, and
+sets E_opt and the per-unit exit thresholds from the *predicted* next
+window::
 
-    adapter = adapt.OnlineAdapter(statics)
+    adapter = adapt.OnlineAdapter(statics, cfg)          # eta + feedback
+    adapter = adapt.OnlineAdapter(statics, cfg, controllers=[
+        adapt.EtaController(window_s=20.0),
+        adapt.ForecastController(window_s=8.0),          # forecast-aware
+    ])
     res, carry = fleet.run_segments(cfg, statics, n_segments=24,
                                     hook=adapter.hook)
 """
+from .forecast import (  # noqa: F401
+    FEATURES,
+    ForecastController,
+    HarvestForecaster,
+    window_features,
+)
 from .objective import (  # noqa: F401
     PAPER_E_OPT_FRACTION,
     Objective,
@@ -41,7 +58,11 @@ from .objective import (  # noqa: F401
 )
 from .online import (  # noqa: F401
     ESTIMATORS,
+    Controller,
+    EtaController,
     EwmaEstimator,
+    FeedbackController,
+    Observation,
     OnlineAdapter,
     QuantileEstimator,
     miss_rate,

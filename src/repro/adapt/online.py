@@ -4,36 +4,53 @@ Zygarde's headline contribution is that the scheduler *re-estimates* eta —
 the harvesting-pattern predictability factor of Eq. 3 — from the pattern it
 actually observes while deployed, instead of shipping a constant measured
 offline.  This module implements that loop on top of segmented fleet
-simulation (:func:`repro.fleet.run_segments`).  After every segment the
-host hook:
+simulation (:func:`repro.fleet.run_segments`) as a composition of pluggable
+**controllers**: after every segment the host hook measures shared
+statistics (per-segment deadline-miss rate, plus whatever trace windows
+each controller asks for) and hands an :class:`Observation` to each
+controller in turn; every controller returns updates for the *tunable*
+:class:`repro.fleet.state.FleetConfig` array fields (``eta``, ``e_opt``,
+``exit_thr``/``use_exit_thr``, ``persistent``) that the priority math in
+:mod:`repro.core.policy` reads live — no recompilation, the next segment's
+scan just sees new arrays.
 
-* measures eta over the trailing window of the *observed* harvest trace
-  (exactly :func:`repro.core.energy.eta_factor`, the offline estimator,
-  applied online to the prefix the device has lived through) and smooths
-  the per-segment measurements with an EWMA or rolling-quantile estimator —
-  by construction the estimate never leaves the envelope of the
-  measurements it has seen, and converges geometrically on a stationary
-  trace (``tests/test_online.py`` pins both properties);
-* re-tunes the E_opt threshold from two observed statistics: the
-  *harvest-rate headroom* (observed supply vs the task set's
-  mandatory/full-execution demand, a feedforward signal that closes the
-  optional-unit gate before a lean phase can drain the reserve) and the
-  per-segment *deadline-miss rate* (a fast-attack feedback override —
-  any missy segment snaps the threshold to its conservative bound);
-* writes the new values *mid-trajectory* into the tunable
-  :class:`repro.fleet.state.FleetConfig` array fields (``eta``, ``e_opt``,
-  ``persistent``) that the priority math in :mod:`repro.core.policy` reads
-  live — no recompilation, the next segment's scan just sees new arrays.
+Built-in controllers:
+
+* :class:`EtaController` — measures eta over the trailing window of the
+  *observed* harvest trace (exactly :func:`repro.core.energy.eta_factor`,
+  the offline estimator, applied online to the prefix the device has lived
+  through) and smooths the per-segment measurements with an EWMA or
+  rolling-quantile estimator — by construction the estimate never leaves
+  the envelope of the measurements it has seen, and converges geometrically
+  on a stationary trace (``tests/test_online.py`` pins both properties).
+* :class:`FeedbackController` — the PR-4 E_opt strategy: re-tunes the
+  threshold from two observed statistics, the *harvest-rate headroom*
+  (observed supply vs the task set's mandatory/full-execution demand, a
+  feedforward signal that closes the optional-unit gate before a lean
+  phase can drain the reserve) and the per-segment *deadline-miss rate*
+  (a fast-attack feedback override — any missy segment snaps the threshold
+  to its conservative bound).
+* :class:`repro.adapt.forecast.ForecastController` — the anticipatory
+  strategy: clusters observed harvest windows online, predicts the *next*
+  window's supply from per-cluster duration/transition statistics, and
+  sets both E_opt and the per-unit ``exit_thr`` tables from the prediction
+  (falling back to the feedback law until the forecaster is confident).
 
 Usage::
 
-    adapter = OnlineAdapter(statics, cfg)
+    adapter = OnlineAdapter(statics, cfg)          # eta + feedback E_opt
     res, carry = fleet.run_segments(cfg, statics, n_segments=128,
                                     hook=adapter.hook)
     adapter.history[-1]["eta_hat"]      # the estimator's trajectory
 
+    # explicit composition (the forecast-aware arm):
+    adapter = OnlineAdapter(statics, cfg, controllers=[
+        EtaController(rho=0.5, window_s=20.0),
+        forecast.ForecastController(window_s=8.0),
+    ])
+
 ``examples/online_adapt.py`` runs this loop on a nonstationary
-(solar -> occluded -> RF) trace where it beats the best static tuned
+(solar -> RF -> occluded) trace where it beats the best static tuned
 (eta, E_opt) constants.  The measurements loop over devices in python
 (``eta_factor`` is a host-side numpy routine), so the hook is meant for
 the adaptation regime — one to a few hundred devices — not for
@@ -43,7 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -167,9 +184,8 @@ def workload_demand(cfg: FleetConfig) -> tuple[np.ndarray, np.ndarray]:
     ``mandatory_rate`` averages each task's mandatory depth over its job
     profiles (first unit whose utility test passes, else the full depth);
     ``full_rate`` assumes every unit of every task runs.  Both are static
-    workload facts the deployed scheduler knows, used by
-    :class:`OnlineAdapter` to turn an observed supply rate into an
-    energy-headroom fraction.
+    workload facts the deployed scheduler knows, used by the E_opt
+    controllers to turn a supply rate into an energy-headroom fraction.
     """
     ue = np.asarray(cfg.unit_energy)           # (D, K, U)
     nu = np.asarray(cfg.n_units)               # (D, K)
@@ -205,21 +221,86 @@ def miss_rate(carry: DeviceState, prev: Optional[DeviceState]) -> np.ndarray:
     return miss / np.maximum(rel, 1.0)
 
 
+def ewma_supply(prev: Optional[np.ndarray], ctx: "AdapterContext",
+                t_end: float, window_s: float, rho: float) -> np.ndarray:
+    """One step of the supply tracker shared by the E_opt controllers:
+    measure the trailing-window supply and fold it into the running EWMA
+    (the first measurement initialises it)."""
+    supply = observed_supply(ctx.events, ctx.power_on, t_end,
+                             ctx.statics.slot_s, window_s)
+    return supply if prev is None else prev + rho * (supply - prev)
+
+
+def headroom_e_opt_fraction(
+    supply: np.ndarray, demand: tuple[np.ndarray, np.ndarray],
+    e_opt_bounds: tuple[float, float], miss_rate: np.ndarray,
+    miss_target: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """The E_opt law shared by the feedback and forecast controllers:
+    interpolate the fraction over the energy headroom
+    ``(supply - mandatory) / (full - mandatory)`` within ``e_opt_bounds``,
+    with the miss fast-attack snapping any missy device to the
+    conservative upper bound.  Returns ``(frac, headroom)``; keeping one
+    implementation makes the forecast controller's low-confidence
+    degradation to the feedback law exact by construction."""
+    mand, full = demand
+    headroom = (supply - mand) / np.maximum(full - mand, 1e-9)
+    lo, hi = e_opt_bounds
+    frac = np.clip(hi - (hi - lo) * headroom, lo, hi)
+    return np.where(miss_rate > miss_target, hi, frac), headroom
+
+
 # --------------------------------------------------------------------------- #
-# The adaptation hook.
+# The controller substrate.
 # --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterContext:
+    """Host-side snapshots of the run the controllers read but never
+    rewrite, fetched from device once at the first segment boundary
+    (``events`` is the largest leaf)."""
+
+    statics: FleetStatics
+    events: np.ndarray          # (D, S)
+    power_on: np.ndarray        # (D,)
+    capacity: np.ndarray        # (D,) float64
+    base_persistent: np.ndarray  # (D,) bool — the builder's harvester half
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    """What every controller sees at a segment boundary."""
+
+    seg: int
+    t_end: float
+    cfg: FleetConfig
+    carry: DeviceState
+    miss_rate: np.ndarray       # (D,) — jobs missed during the last segment
+    ctx: AdapterContext
+
+
+class Controller:
+    """One adaptation strategy composed into an :class:`OnlineAdapter`.
+
+    ``update`` returns ``(updates, log)``: ``updates`` maps tunable
+    FleetConfig field names to new ``(D, ...)`` arrays (merged across
+    controllers, later controllers win on conflicts) and ``log`` is merged
+    into the adapter's per-segment history entry.
+    """
+
+    def reset(self, cfg: Optional[FleetConfig],
+              statics: FleetStatics) -> None:
+        """Called once at adapter construction (``cfg`` may be None when
+        the adapter was built without one; derive lazily in update)."""
+
+    def update(self, obs: Observation) -> tuple[dict, dict]:
+        raise NotImplementedError
 
 
 @dataclasses.dataclass
-class OnlineAdapter:
-    """Runtime eta re-estimation + E_opt re-tuning as a
-    :func:`repro.fleet.run_segments` hook.
-
-    Construct one per trajectory (it carries mutable estimator state),
-    passing the run's ``statics`` and the initial ``cfg`` (for the workload
-    demand rates), then hand ``adapter.hook`` to ``run_segments``.
-
-    Fields:
+class EtaController(Controller):
+    """Runtime eta re-estimation (the paper's Eq. 3 loop, applied online).
 
     * ``estimator`` — ``"ewma"`` (weight ``rho``) or ``"quantile"``
       (``q``/``window`` segments), per :data:`ESTIMATORS`; smooths the
@@ -227,12 +308,111 @@ class OnlineAdapter:
     * ``window_s`` / ``n_max`` — trailing trace window and h(N) depth for
       the per-segment :func:`observed_eta`; shorter windows track faster
       but measure noisier.
-    * ``adapt_e_opt`` — enable the threshold controller: the E_opt
-      fraction interpolates between ``e_opt_bounds`` by the observed
-      *energy headroom* ``(supply - mandatory) / (full - mandatory)``
-      (supply EWMA-smoothed with ``supply_rho`` over ``supply_window_s``
-      trailing seconds), and any segment whose miss fraction exceeds
-      ``miss_target`` snaps it to the conservative upper bound.
+    """
+
+    estimator: str = "ewma"
+    rho: float = 0.5
+    q: float = 0.5
+    window: int = 8
+    window_s: float = 20.0
+    n_max: int = 4
+
+    def __post_init__(self):
+        if self.estimator not in ESTIMATORS:
+            raise ValueError(
+                f"unknown estimator {self.estimator!r}; "
+                f"choose from {sorted(ESTIMATORS)}")
+        self._build_estimator()
+
+    def _build_estimator(self) -> None:
+        if self.estimator == "ewma":
+            self._est = EwmaEstimator(self.rho)
+        else:
+            self._est = QuantileEstimator(self.q, self.window)
+
+    def reset(self, cfg: Optional[FleetConfig],
+              statics: FleetStatics) -> None:
+        # fresh estimator per trajectory, so one controller list can be
+        # reused across adapters without leaking the previous eta_hat
+        self._build_estimator()
+
+    @property
+    def eta_hat(self) -> Optional[np.ndarray]:
+        return self._est.estimate
+
+    def update(self, obs: Observation) -> tuple[dict, dict]:
+        ctx = obs.ctx
+        measured = observed_eta(ctx.events, obs.t_end, ctx.statics.slot_s,
+                                self.window_s, self.n_max)
+        eta_hat = np.clip(self._est.update(measured), 0.0, 1.0)
+        upd = dict(
+            eta=jnp.asarray(eta_hat.astype(_F32)),
+            # the Eq. 6 fast path needs BOTH a persistent harvester and a
+            # saturated eta estimate (mirrors adapt.objective.apply_params)
+            persistent=jnp.asarray(ctx.base_persistent & (eta_hat >= 1.0)),
+        )
+        return upd, dict(measured=measured.copy(), eta_hat=eta_hat.copy())
+
+
+@dataclasses.dataclass
+class FeedbackController(Controller):
+    """The PR-4 E_opt strategy: feedforward supply headroom + miss feedback.
+
+    The E_opt fraction interpolates between ``e_opt_bounds`` by the
+    observed *energy headroom* ``(supply - mandatory) / (full - mandatory)``
+    (supply EWMA-smoothed with ``supply_rho`` over ``supply_window_s``
+    trailing seconds), and any segment whose miss fraction exceeds
+    ``miss_target`` snaps it to the conservative upper bound.
+    """
+
+    supply_window_s: float = 5.0
+    supply_rho: float = 0.7
+    e_opt_bounds: tuple[float, float] = (0.05, 0.95)
+    miss_target: float = 0.1
+
+    def reset(self, cfg: Optional[FleetConfig],
+              statics: FleetStatics) -> None:
+        self._demand = workload_demand(cfg) if cfg is not None else None
+        self._supply_hat: Optional[np.ndarray] = None
+
+    def update(self, obs: Observation) -> tuple[dict, dict]:
+        if self._demand is None:
+            self._demand = workload_demand(obs.cfg)
+        self._supply_hat = ewma_supply(self._supply_hat, obs.ctx, obs.t_end,
+                                       self.supply_window_s, self.supply_rho)
+        frac, _ = headroom_e_opt_fraction(
+            self._supply_hat, self._demand, self.e_opt_bounds,
+            obs.miss_rate, self.miss_target)
+        upd = dict(e_opt=jnp.asarray((frac * obs.ctx.capacity).astype(_F32)))
+        return upd, dict(supply_hat=self._supply_hat.copy(),
+                         e_opt_frac=frac.copy())
+
+
+# --------------------------------------------------------------------------- #
+# The adaptation hook.
+# --------------------------------------------------------------------------- #
+
+
+# history keys every entry carries (controllers may add more)
+_LOG_DEFAULTS = ("measured", "eta_hat", "supply_hat", "e_opt_frac")
+
+
+@dataclasses.dataclass
+class OnlineAdapter:
+    """Controller composition driven as a :func:`repro.fleet.run_segments`
+    hook.
+
+    Construct one per trajectory (it carries mutable estimator state),
+    passing the run's ``statics`` and the initial ``cfg`` (for the workload
+    demand rates), then hand ``adapter.hook`` to ``run_segments``.
+
+    By default the adapter composes the paper's runtime loop —
+    ``[EtaController(...), FeedbackController(...)]`` built from the scalar
+    fields below (``adapt_e_opt=False`` drops the E_opt strategy); pass
+    ``controllers=[...]`` to compose explicitly, e.g. swapping the feedback
+    E_opt law for the anticipatory
+    :class:`repro.adapt.forecast.ForecastController`.  Updates from later
+    controllers override earlier ones on conflicting config fields.
     """
 
     statics: FleetStatics
@@ -248,85 +428,62 @@ class OnlineAdapter:
     supply_rho: float = 0.7
     e_opt_bounds: tuple[float, float] = (0.05, 0.95)
     miss_target: float = 0.1
+    controllers: Optional[Sequence[Controller]] = None
     history: list = dataclasses.field(default_factory=list)
 
     def __post_init__(self, cfg: Optional[FleetConfig]):
-        if self.estimator not in ESTIMATORS:
-            raise ValueError(
-                f"unknown estimator {self.estimator!r}; "
-                f"choose from {sorted(ESTIMATORS)}")
-        if self.estimator == "ewma":
-            self._est = EwmaEstimator(self.rho)
-        else:
-            self._est = QuantileEstimator(self.q, self.window)
-        self._supply_hat: Optional[np.ndarray] = None
-        self._base_persistent: Optional[np.ndarray] = None
-        self._demand = (workload_demand(cfg) if cfg is not None
-                        and self.adapt_e_opt else None)
+        if self.controllers is None:
+            self.controllers = [EtaController(
+                estimator=self.estimator, rho=self.rho, q=self.q,
+                window=self.window, window_s=self.window_s,
+                n_max=self.n_max)]
+            if self.adapt_e_opt:
+                self.controllers.append(FeedbackController(
+                    supply_window_s=self.supply_window_s,
+                    supply_rho=self.supply_rho,
+                    e_opt_bounds=self.e_opt_bounds,
+                    miss_target=self.miss_target))
+        self.controllers = list(self.controllers)
+        for c in self.controllers:
+            c.reset(cfg, self.statics)
+        self._ctx: Optional[AdapterContext] = None
         self._prev_carry: Optional[DeviceState] = None
-        # host-side snapshots of the config leaves the adapter reads but
-        # never rewrites (events is the largest leaf — fetching it from
-        # device once instead of at every segment boundary)
-        self._events: Optional[np.ndarray] = None
-        self._power_on: Optional[np.ndarray] = None
-        self._capacity: Optional[np.ndarray] = None
 
     @property
     def eta_hat(self) -> Optional[np.ndarray]:
-        """The current ``(D,)`` eta estimate (None before the first hook)."""
-        return self._est.estimate
+        """The current ``(D,)`` eta estimate (None before the first hook,
+        or when no :class:`EtaController` is composed)."""
+        for c in self.controllers:
+            if isinstance(c, EtaController):
+                return c.eta_hat
+        return None
 
     def hook(self, seg: int, t_end: float, cfg: FleetConfig,
              carry: DeviceState) -> FleetConfig:
-        """``run_segments`` hook: measure, re-estimate, rewrite the tunable
-        config fields for the next segment."""
-        if self._base_persistent is None:
-            # the builder's persistent flag conflates harvester and eta;
-            # remember the harvester half so a recovering eta can re-widen
-            self._base_persistent = np.asarray(cfg.persistent)
-            self._events = np.asarray(cfg.events)
-            self._power_on = np.asarray(cfg.power_on)
-            self._capacity = np.asarray(cfg.capacity, np.float64)
-        events = self._events
-        slot_s = self.statics.slot_s
-        measured = observed_eta(events, t_end, slot_s, self.window_s,
-                                self.n_max)
-        eta_hat = np.clip(self._est.update(measured), 0.0, 1.0)
-        upd = dict(
-            eta=jnp.asarray(eta_hat.astype(_F32)),
-            # the Eq. 6 fast path needs BOTH a persistent harvester and a
-            # saturated eta estimate (mirrors adapt.objective.apply_params)
-            persistent=jnp.asarray(self._base_persistent
-                                   & (eta_hat >= 1.0)),
-        )
+        """``run_segments`` hook: measure, run every controller, rewrite the
+        tunable config fields for the next segment."""
+        if self._ctx is None:
+            self._ctx = AdapterContext(
+                statics=self.statics,
+                events=np.asarray(cfg.events),
+                power_on=np.asarray(cfg.power_on),
+                capacity=np.asarray(cfg.capacity, np.float64),
+                # the builder's persistent flag conflates harvester and eta;
+                # remember the harvester half so a recovering eta can
+                # re-widen it
+                base_persistent=np.asarray(cfg.persistent),
+            )
         rate = miss_rate(carry, self._prev_carry)
-        frac = None
-        supply = None
-        if self.adapt_e_opt:
-            if self._demand is None:
-                self._demand = workload_demand(cfg)
-            mand, full = self._demand
-            supply = observed_supply(events, self._power_on, t_end,
-                                     slot_s, self.supply_window_s)
-            self._supply_hat = (
-                supply if self._supply_hat is None
-                else self._supply_hat
-                + self.supply_rho * (supply - self._supply_hat))
-            headroom = ((self._supply_hat - mand)
-                        / np.maximum(full - mand, 1e-9))
-            lo, hi = self.e_opt_bounds
-            frac = np.clip(hi - (hi - lo) * headroom, lo, hi)
-            # fast-attack feedback: a missy segment overrides the
-            # feedforward term outright
-            frac = np.where(rate > self.miss_target, hi, frac)
-            upd["e_opt"] = jnp.asarray((frac * self._capacity).astype(_F32))
+        obs = Observation(seg=seg, t_end=float(t_end), cfg=cfg, carry=carry,
+                          miss_rate=rate, ctx=self._ctx)
+        upd: dict = {}
+        entry: dict = dict(seg=seg, t_end=float(t_end),
+                           miss_rate=rate.copy(),
+                           **{k: None for k in _LOG_DEFAULTS})
+        for c in self.controllers:
+            c_upd, c_log = c.update(obs)
+            upd.update(c_upd)
+            entry.update(c_log)
         self._prev_carry = carry
-        self.history.append(dict(
-            seg=seg, t_end=float(t_end),
-            measured=measured.copy(), eta_hat=eta_hat.copy(),
-            miss_rate=rate.copy(),
-            supply_hat=(None if self._supply_hat is None
-                        else self._supply_hat.copy()),
-            e_opt_frac=None if frac is None else frac.copy(),
-        ))
+        self.history.append(entry)
         return cfg._replace(**upd)

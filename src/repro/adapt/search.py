@@ -76,7 +76,10 @@ class _Tracker:
     def result(self, driver: str) -> TuneResult:
         params = {}
         if self.best_x is not None:
-            params = {p.name: float(v)
+            # integer knobs (Param.integer) come back as python ints so the
+            # winning point can be splatted straight into constructors like
+            # ForecastController(n_clusters=...)
+            params = {p.name: (int(round(v)) if p.integer else float(v))
                       for p, v in zip(self._space.params, self.best_x)}
         return TuneResult(driver=driver, best_params=params,
                           best_score=float(self.best_score),

@@ -24,15 +24,23 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Param:
-    """One bounded continuous knob."""
+    """One bounded knob: continuous by default, integer-valued with
+    ``integer=True`` (candidates snap to whole numbers in :meth:`clip`, so
+    the continuous drivers — Gaussian ES offspring included — search the
+    lattice transparently; cluster counts and window lengths of the
+    forecast controller are the motivating knobs)."""
 
     name: str
     low: float
     high: float
+    integer: bool = False
 
     def __post_init__(self):
         if not self.high > self.low:
             raise ValueError(f"{self.name}: high must exceed low")
+        if self.integer and np.floor(self.high) < np.ceil(self.low):
+            raise ValueError(
+                f"{self.name}: no integer lies in [{self.low}, {self.high}]")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,9 +49,19 @@ class SearchSpace:
 
     @classmethod
     def of(cls, **bounds: Sequence[float]) -> "SearchSpace":
-        """``SearchSpace.of(eta=(0.05, 1.0), e_opt_fraction=(0.05, 0.95))``"""
-        return cls(tuple(Param(k, float(lo), float(hi))
-                         for k, (lo, hi) in bounds.items()))
+        """``SearchSpace.of(eta=(0.05, 1.0), e_opt_fraction=(0.05, 0.95),
+        n_clusters=(2, 6, int))`` — a third ``int`` (or ``"int"``) element
+        marks an integer knob."""
+        params = []
+        for k, bound in bounds.items():
+            lo, hi = bound[0], bound[1]
+            integer = len(bound) > 2 and bound[2] in (int, "int")
+            params.append(Param(k, float(lo), float(hi), integer=integer))
+        return cls(tuple(params))
+
+    @property
+    def _integer_mask(self) -> np.ndarray:
+        return np.array([p.integer for p in self.params], bool)
 
     @property
     def names(self) -> Tuple[str, ...]:
@@ -69,17 +87,36 @@ class SearchSpace:
         return 0.5 * (self.lows + self.highs)
 
     def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
-        """(n, P) uniform candidates."""
-        return rng.uniform(self.lows, self.highs, size=(n, self.n_dims))
+        """(n, P) uniform candidates (integer dims snap to the lattice)."""
+        return self.clip(rng.uniform(self.lows, self.highs,
+                                     size=(n, self.n_dims)))
 
     def clip(self, x: np.ndarray) -> np.ndarray:
-        return np.clip(x, self.lows, self.highs)
+        x = np.clip(x, self.lows, self.highs)
+        mask = self._integer_mask
+        if mask.any():
+            # snap to the integer lattice *inside* the bounds — rounding a
+            # clipped value can escape a fractional bound (5.4 in (2, 5.5)
+            # would round to 6), so clamp to [ceil(low), floor(high)]
+            snapped = np.clip(np.round(x), np.ceil(self.lows),
+                              np.floor(self.highs))
+            x = np.where(mask[None, :] if x.ndim == 2 else mask, snapped, x)
+        return x
 
     def grid(self, budget: int) -> np.ndarray:
         """The largest full-factorial lattice that fits in ``budget``
-        evaluations: ``r = floor(budget ** (1/P))`` points per dim."""
+        evaluations: ``r = floor(budget ** (1/P))`` points per dim
+        (integer dims enumerate at most their whole-number lattice)."""
         r = max(2, int(np.floor(budget ** (1.0 / self.n_dims))))
-        axes = [np.linspace(p.low, p.high, r) for p in self.params]
+        axes = []
+        for p in self.params:
+            if p.integer:
+                ilo, ihi = np.ceil(p.low), np.floor(p.high)
+                n_int = int(ihi - ilo) + 1
+                axes.append(np.unique(np.round(
+                    np.linspace(ilo, ihi, min(r, max(n_int, 2))))))
+            else:
+                axes.append(np.linspace(p.low, p.high, r))
         mesh = np.meshgrid(*axes, indexing="ij")
         return np.stack([m.ravel() for m in mesh], axis=1)
 

@@ -183,6 +183,56 @@ def propagate(
 
 
 # --------------------------------------------------------------------------- #
+# Raw-table online operations (fleet-batched, jit-safe).
+#
+# The :class:`UnitClassifier` API above wraps one classifier per DNN unit;
+# the harvest-pattern forecaster (:mod:`repro.adapt.forecast`) instead
+# clusters *feature windows* — ``(D, W, F)`` fleet batches with no labels,
+# no feature selection and no propagation.  These entry points expose the
+# same L1-classify / weighted-centroid-adapt machinery over raw centroid
+# tables, dispatching to the fleet-shaped Pallas wrappers in
+# :mod:`repro.kernels.ops` (``fleet_l1_topk2`` / ``fleet_centroid_update``).
+# Both are pure jnp-in/jnp-out and safe to call under ``jax.jit``.
+# --------------------------------------------------------------------------- #
+
+
+def classify_batch(centroids: jax.Array, x: jax.Array):
+    """L1-classify a fleet batch of feature windows against a raw table.
+
+    ``centroids``: ``(k, F)``; ``x``: ``(..., F)`` with any leading batch
+    shape (``(D, W, F)`` for W trailing windows of D devices).  Returns
+    ``(idx, d1, d2, margin)`` shaped like the batch — ``margin`` is the
+    same scale-free top-2 separation statistic as :func:`classify`.
+    """
+    d1, d2, idx = ops.fleet_l1_topk2(x, centroids)
+    margin = (d2 - d1) / jnp.maximum(d1 + d2, 1e-9)
+    return idx, d1, d2, margin
+
+
+def online_update(
+    centroids: jax.Array,
+    counts: jax.Array,
+    x: jax.Array,
+    idx: jax.Array,
+    weight: float = 32.0,
+):
+    """Weighted-average centroid adaptation over a fleet window batch.
+
+    The raw-table counterpart of :func:`adapt`: every window in ``x``
+    (``(..., F)``) moves its assigned centroid toward the batch mean with
+    inertia ``weight`` (rows with ``idx < 0`` are ignored).  Returns the
+    new ``(k, F)`` table and the updated ``(k,)`` member counts.
+    """
+    k = centroids.shape[0]
+    new_c = ops.fleet_centroid_update(centroids, x, idx, weight)
+    flat = jnp.asarray(idx, jnp.int32).reshape((-1,))
+    new_counts = counts + jnp.bincount(
+        jnp.where(flat >= 0, flat, k), length=k + 1
+    )[:k].astype(jnp.float32)
+    return new_c, new_counts
+
+
+# --------------------------------------------------------------------------- #
 # Bank helpers.
 # --------------------------------------------------------------------------- #
 

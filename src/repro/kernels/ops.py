@@ -4,10 +4,22 @@ On CPU (this container) the kernels execute in ``interpret=True`` mode —
 the kernel body runs as traced JAX ops — which validates tiling/indexing
 logic against the pure-jnp oracles in :mod:`repro.kernels.ref`.  On a real
 TPU backend the same calls compile to Mosaic.
+
+The ``fleet_*`` wrappers add *fleet-shaped* dispatch for the k-means
+kernels: the online harvest-pattern forecaster (:mod:`repro.adapt.forecast`)
+classifies and adapts over ``(D, W, F)`` window batches — ``D`` devices ×
+``W`` trailing windows × ``F`` features — so the wrappers flatten the
+leading batch axes, pad the feature (lane) dimension to a multiple of 128
+and the row (sublane) dimension to a tile multiple, run the 2-D kernel
+once over the whole fleet, and restore the batch shape.  L1 distances are
+invariant to zero-padded feature columns (both operands gain the same
+zeros), and padded rows carry assignment ``-1`` whose one-hot is all-zero,
+so the padding never leaks into results.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .centroid_update import centroid_update as _centroid_update
 from .decode_gqa import decode_gqa as _decode_gqa
@@ -50,6 +62,61 @@ def decode_gqa(q, k_cache, v_cache, slot_pos, my_pos, **kw):
 def flash_attention(q, k, v, **kw):
     kw.setdefault("interpret", _interpret())
     return _flash_attention(q, k, v, **kw)
+
+
+def _pad_axis(a, axis: int, multiple: int, value=0.0):
+    """Zero/constant-pad ``a`` along ``axis`` up to the next multiple."""
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def fleet_l1_topk2(x, centroids, *, block_b: int = 256, lane: int = 128,
+                   **kw):
+    """:func:`l1_topk2` over fleet-batched windows.
+
+    ``x``: ``(..., F)`` feature windows with any leading batch shape (the
+    forecaster passes ``(D, W, F)`` or ``(D, F)``); ``centroids``: ``(k, F)``.
+    Returns ``(d1, d2, idx)`` each shaped like the batch ``(...,)``.  Rows
+    are flattened and tile-padded, features are zero-padded to a lane
+    multiple — L1 distances are unchanged because both operands gain the
+    same zero columns.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    centroids = jnp.asarray(centroids, jnp.float32)
+    batch = x.shape[:-1]
+    flat = x.reshape((-1, x.shape[-1]))
+    n_rows = flat.shape[0]
+    flat = _pad_axis(_pad_axis(flat, 1, lane), 0, min(block_b, 8))
+    cents = _pad_axis(centroids, 1, lane)
+    d1, d2, idx = l1_topk2(flat, cents, block_b=block_b, **kw)
+    return (d1[:n_rows].reshape(batch), d2[:n_rows].reshape(batch),
+            idx[:n_rows].reshape(batch))
+
+
+def fleet_centroid_update(centroids, x, assign, weight, *, lane: int = 128,
+                          **kw):
+    """:func:`centroid_update` over fleet-batched windows.
+
+    ``x``: ``(..., F)``, ``assign``: ``(...,)`` int32 cluster ids (rows with
+    ``assign < 0`` are ignored — their one-hot is all-zero), ``centroids``:
+    ``(k, F)``.  Flattens the batch, pads rows with ``assign = -1`` and
+    features with zeros, and slices the padded columns back off the
+    ``(k, F)`` result.
+    """
+    centroids = jnp.asarray(centroids, jnp.float32)
+    k, f = centroids.shape
+    flat = jnp.asarray(x, jnp.float32).reshape((-1, f))
+    aflat = jnp.asarray(assign, jnp.int32).reshape((-1,))
+    flat = _pad_axis(_pad_axis(flat, 1, lane), 0, 8)
+    aflat = _pad_axis(aflat, 0, 8, value=-1)
+    new_c = centroid_update(_pad_axis(centroids, 1, lane), flat, aflat,
+                            weight, **kw)
+    return new_c[:, :f]
 
 
 def fleet_priority(policy, active, laxity, release, utility, mandatory,

@@ -32,6 +32,24 @@ def agile_model(trained_cnn):
     return AgileCNN(trained_cnn.cfg, trained_cnn.params, trained_cnn.bank)
 
 
+@pytest.fixture(scope="session")
+def online_adapt_demo():
+    """The seeded nonstationary demo of ``examples/online_adapt.py``, run
+    once per session (it sweeps a 10x10 static grid plus three adaptive
+    trajectories) and shared by the online- and forecast-adaptation
+    regression tests."""
+    import importlib.util
+    import pathlib
+
+    path = (pathlib.Path(__file__).resolve().parent.parent / "examples"
+            / "online_adapt.py")
+    spec = importlib.util.spec_from_file_location("online_adapt_example",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod, mod.run_demo()
+
+
 @pytest.fixture()
 def rng():
     return np.random.default_rng(0)

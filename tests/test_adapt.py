@@ -67,6 +67,39 @@ def test_space_grid_fits_budget():
     assert len(np.unique(lattice[:, 0])) == 7
 
 
+def test_integer_knobs_snap_and_tune_returns_ints():
+    """`(lo, hi, int)` bounds mark integer knobs (e.g. the forecast
+    controller's cluster count): samples, clipped ES offspring and the grid
+    lattice all land on whole numbers, and tune() reports python ints."""
+    space = adapt.SearchSpace.of(n_clusters=(2, 6, int), rho=(0.1, 0.9))
+    x = space.sample(np.random.default_rng(0), 64)
+    assert np.all(x[:, 0] == np.round(x[:, 0]))
+    assert np.all((x[:, 0] >= 2) & (x[:, 0] <= 6))
+    assert not np.all(x[:, 1] == np.round(x[:, 1]))
+    clipped = space.clip(np.array([[3.4, 0.5], [9.0, 0.5]]))
+    np.testing.assert_array_equal(clipped[:, 0], [3.0, 6.0])
+    lattice = space.grid(60)
+    assert set(np.unique(lattice[:, 0])) <= {2.0, 3.0, 4.0, 5.0, 6.0}
+    # fractional bounds: snapping must stay inside them (5.4 in (2, 5.5)
+    # must not round out to 6) and the grid lattice likewise
+    frac_space = adapt.SearchSpace.of(n=(2.0, 5.5, int))
+    np.testing.assert_array_equal(
+        frac_space.clip(np.array([[5.4], [1.2]]))[:, 0], [5.0, 2.0])
+    assert frac_space.grid(10)[:, 0].max() <= 5.0
+    with pytest.raises(ValueError, match="no integer"):
+        adapt.SearchSpace.of(n=(2.1, 2.9, int))
+
+    def objective(params):
+        # optimum at n_clusters=4, rho=0.5
+        return -(np.asarray(params["n_clusters"]) - 4) ** 2 \
+            - (np.asarray(params["rho"]) - 0.5) ** 2
+
+    res = adapt.tune(objective, space, budget=96, driver="es", seed=0)
+    assert isinstance(res.best_params["n_clusters"], int)
+    assert res.best_params["n_clusters"] == 4
+    assert isinstance(res.best_params["rho"], float)
+
+
 # --------------------------------------------------------------------------- #
 # Drivers on a known landscape: every driver must localise the optimum of a
 # smooth unimodal function with a modest budget.

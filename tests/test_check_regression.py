@@ -1,0 +1,125 @@
+"""The CI benchmark-regression gate (`benchmarks/check_regression.py`).
+
+The gate must exit nonzero on an injected beyond-tolerance throughput
+drop or deterministic-score drop, stay quiet inside the tolerance bands,
+flag structural drift (changed row identities) instead of silently
+comparing apples to oranges, and support re-baselining via ``--update``.
+"""
+from __future__ import annotations
+
+import importlib.util
+import io
+import json
+import pathlib
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def gate():
+    path = (pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+            / "check_regression.py")
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _doc(dsps: float = 1000.0, score: float = 0.3, mode: str = "demo",
+         ok: bool = True) -> dict:
+    return dict(bench="x", ok=ok, wall_s=1.0, rows={
+        "x": [dict(mode=mode, device_steps_per_sec=dsps, score=score)],
+    })
+
+
+def _write(tmp_path, fresh: dict, base: dict):
+    fresh_dir = tmp_path / "experiments"
+    base_dir = fresh_dir / "baselines"
+    base_dir.mkdir(parents=True, exist_ok=True)
+    (fresh_dir / "BENCH_x.json").write_text(json.dumps(fresh))
+    (base_dir / "BENCH_x.json").write_text(json.dumps(base))
+    return fresh_dir, base_dir
+
+
+def _run(gate, tmp_path, fresh, base, **kw) -> tuple[int, str]:
+    fresh_dir, base_dir = _write(tmp_path, fresh, base)
+    out = io.StringIO()
+    code = gate.check(fresh_dir, base_dir, out=out, **kw)
+    return code, out.getvalue()
+
+
+def test_passes_on_identical_results(gate, tmp_path):
+    code, out = _run(gate, tmp_path, _doc(), _doc())
+    assert code == 0 and "ok" in out
+
+
+def test_fails_on_throughput_drop_beyond_tolerance(gate, tmp_path):
+    # 10x drop >> the default 0.75 band
+    code, out = _run(gate, tmp_path, _doc(dsps=100.0), _doc(dsps=1000.0))
+    assert code == 1
+    assert "device_steps_per_sec" in out and "FAIL" in out
+
+
+def test_passes_on_throughput_drop_within_tolerance(gate, tmp_path):
+    code, _ = _run(gate, tmp_path, _doc(dsps=600.0), _doc(dsps=1000.0))
+    assert code == 0
+    # throughput gains never trip the gate
+    code, _ = _run(gate, tmp_path, _doc(dsps=5000.0), _doc(dsps=1000.0))
+    assert code == 0
+
+
+def test_fails_on_score_drop_beyond_tolerance(gate, tmp_path):
+    code, out = _run(gate, tmp_path, _doc(score=0.25), _doc(score=0.3))
+    assert code == 1 and "score" in out
+    code, _ = _run(gate, tmp_path, _doc(score=0.2999), _doc(score=0.3))
+    assert code == 0
+
+
+def test_fails_on_structural_drift_and_failed_run(gate, tmp_path):
+    code, out = _run(gate, tmp_path, _doc(mode="renamed"), _doc(mode="demo"))
+    assert code == 1 and "identity" in out
+    code, out = _run(gate, tmp_path, _doc(ok=False), _doc())
+    assert code == 1 and "ok=false" in out
+
+
+def test_fails_on_missing_fresh_artifact(gate, tmp_path):
+    fresh_dir, base_dir = _write(tmp_path, _doc(), _doc())
+    (fresh_dir / "BENCH_x.json").unlink()
+    code = gate.check(fresh_dir, base_dir, out=io.StringIO())
+    assert code == 1
+
+
+def test_update_rebaselines(gate, tmp_path):
+    fresh = _doc(dsps=100.0)
+    fresh_dir, base_dir = _write(tmp_path, fresh, _doc(dsps=1000.0))
+    out = io.StringIO()
+    assert gate.check(fresh_dir, base_dir, update=True, out=out) == 0
+    assert json.loads((base_dir / "BENCH_x.json").read_text()) == fresh
+    assert gate.check(fresh_dir, base_dir, out=io.StringIO()) == 0
+
+
+def test_update_bootstraps_missing_baseline_dir(gate, tmp_path):
+    """--update must work from nothing: no baselines directory yet."""
+    fresh_dir = tmp_path / "experiments"
+    fresh_dir.mkdir()
+    (fresh_dir / "BENCH_x.json").write_text(json.dumps(_doc()))
+    base_dir = fresh_dir / "baselines"         # does not exist
+    assert gate.check(fresh_dir, base_dir, update=True,
+                      out=io.StringIO()) == 0
+    assert (base_dir / "BENCH_x.json").exists()
+    assert gate.check(fresh_dir, base_dir, out=io.StringIO()) == 0
+    # nothing fresh to adopt -> the update is an error, not a silent no-op
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert gate.check(empty, base_dir / "nope", update=True,
+                      out=io.StringIO()) == 1
+
+
+def test_committed_baselines_pass_against_themselves(gate):
+    """The baselines in the repo are self-consistent: gating them against
+    a copy of themselves passes (catches malformed committed artifacts)."""
+    base_dir = (pathlib.Path(__file__).resolve().parent.parent
+                / "experiments" / "baselines")
+    assert sorted(p.name for p in base_dir.glob("BENCH_*.json")), \
+        "no committed baselines"
+    assert gate.check(base_dir, base_dir, out=io.StringIO()) == 0

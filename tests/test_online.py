@@ -15,24 +15,12 @@ Three layers:
 """
 from __future__ import annotations
 
-import importlib.util
-import pathlib
-
 import numpy as np
 import pytest
 
 from _hypothesis_fallback import given, settings, st
 from repro import adapt, fleet
 from repro.core import energy
-
-
-def _load_example():
-    path = (pathlib.Path(__file__).resolve().parent.parent / "examples"
-            / "online_adapt.py")
-    spec = importlib.util.spec_from_file_location("online_adapt_example", path)
-    mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)
-    return mod
 
 
 # --------------------------------------------------------------------------- #
@@ -128,8 +116,8 @@ def test_observed_supply_is_windowed_mean_power():
     np.testing.assert_allclose(got, [0.1, 0.5 * 0.2])
 
 
-def test_workload_demand_mandatory_below_full():
-    ex = _load_example()
+def test_workload_demand_mandatory_below_full(online_adapt_demo):
+    ex, _ = online_adapt_demo
     cfg, _ = ex.build_fleet([(0.5, 0.5)], ex.nonstationary_trace(0))
     mand, full = adapt.workload_demand(cfg)
     # mandatory = 2 of 5 units per 1 s period, full = all 5
@@ -185,12 +173,12 @@ def test_online_eta_converges_on_stationary_trace():
 # --------------------------------------------------------------------------- #
 
 
-def test_online_beats_best_static_on_nonstationary_trace():
+def test_online_beats_best_static_on_nonstationary_trace(online_adapt_demo):
     """Pins the example's seeded win: on the solar -> RF -> occluded trace,
     mid-trajectory re-estimation beats the best of 100 statically tuned
     (eta, E_opt) points, which itself beats nothing-to-sneeze-at paper
     defaults.  Fully deterministic (seeded trace, fixed grids)."""
-    out = _load_example().run_demo()
+    _, out = online_adapt_demo
     assert out["online"]["score"] > out["best_static"]["score"] + 0.01
     assert out["best_static"]["score"] >= out["default"]["score"]
     # the adaptation actually moved: eta estimates span the regimes
