@@ -1,0 +1,148 @@
+"""Pallas kernel micro-benchmarks: each serving-path kernel vs its
+pure-jnp oracle from :mod:`repro.kernels.ref`.
+
+Times the four kernels the fleet/serving hot loops lean on —
+``fleet_priority`` (scheduler pick + capacitor update), ``l1_topk2``
+(top-2 L1 cluster distances for the utility test), ``centroid_update``
+(weighted online k-means step) and ``pairwise_l1`` (full distance
+matrix) — at fleet-shaped operand sizes, against the jitted reference
+implementations.  Every pairing is verified for numerical agreement
+before it is timed, so the rows double as a correctness sweep.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the
+kernel body executes as traced JAX ops), so the interesting number is
+that interpret overhead stays within an order of magnitude of the jnp
+path — on a TPU backend the same calls compile to Mosaic and the ratio
+flips.  Timings are informational, not gated; the regression gate only
+checks the rows keep their shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as P
+from repro.core.step import select_and_charge
+from repro.kernels import ops, ref
+
+from .common import emit, timeit
+
+
+def _block(fn):
+    """Wrap ``fn`` so each timed call synchronizes on its outputs."""
+    return lambda *a: jax.block_until_ready(fn(*a))
+
+
+def _kmeans_operands(rng, n_rows, k=64, f=128):
+    """Lane-aligned (rows, features) operands shared by the k-means trio."""
+    x = jnp.asarray(rng.normal(size=(n_rows, f)), jnp.float32)
+    cents = jnp.asarray(rng.normal(size=(k, f)), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, k, size=n_rows), jnp.int32)
+    return x, cents, assign
+
+
+def _priority_operands(rng, n_dev, q=8, n_tasks=2):
+    """One synthetic fleet pick step: (D, Q) queues with mixed policies,
+    partially-active slots, a few locked (forced) devices."""
+    f32, i32 = jnp.float32, jnp.int32
+    d = dict(
+        policy=jnp.asarray(rng.integers(0, len(P.POLICY_IDS), n_dev), i32),
+        active=jnp.asarray(rng.random((n_dev, q)) < 0.7, f32),
+        laxity=jnp.asarray(rng.uniform(-0.5, 2.0, (n_dev, q)), f32),
+        release=jnp.asarray(rng.uniform(0.0, 5.0, (n_dev, q)), f32),
+        utility=jnp.asarray(rng.uniform(0.0, 0.5, (n_dev, q)), f32),
+        mandatory=jnp.asarray(rng.random((n_dev, q)) < 0.5, f32),
+        alpha=jnp.full((n_dev,), 0.6, f32),
+        beta=jnp.full((n_dev,), 0.4, f32),
+        eta=jnp.asarray(rng.uniform(0.2, 1.0, n_dev), f32),
+        persistent=jnp.asarray(rng.random(n_dev) < 0.2, f32),
+        energy=jnp.asarray(rng.uniform(0.0, 0.1, n_dev), f32),
+        e_opt=jnp.full((n_dev,), 0.02, f32),
+        charge=jnp.asarray(rng.uniform(0.0, 5e-3, n_dev), f32),
+        capacity=jnp.full((n_dev,), 0.1, f32),
+        gate_e=jnp.asarray(rng.uniform(1e-3, 5e-3, (n_dev, q)), f32),
+        drain=jnp.asarray(rng.uniform(1e-4, 1e-3, (n_dev, q)), f32),
+        forced=jnp.where(jnp.asarray(rng.random(n_dev) < 0.1),
+                         jnp.asarray(rng.integers(0, q, n_dev), i32), -1),
+        task=jnp.asarray(rng.integers(0, n_tasks, (n_dev, q)), i32),
+        rr_cursor=jnp.asarray(rng.integers(0, n_tasks, n_dev), i32),
+    )
+    return d
+
+
+def _fleet_priority_ref(policy, active, laxity, release, utility, mandatory,
+                        alpha, beta, eta, persistent, energy, e_opt, charge,
+                        capacity, gate_e, drain, forced, task, rr_cursor,
+                        n_tasks):
+    """The batched jnp pick (the vmap frontend's math, sans Pallas)."""
+    task_rank = jnp.mod(task - rr_cursor[:, None], n_tasks).astype(
+        jnp.float32)
+    scores, thr = P.policy_scores(
+        policy[:, None], active, laxity, release, utility, mandatory,
+        alpha[:, None], beta[:, None], eta[:, None], energy[:, None],
+        e_opt[:, None], persistent[:, None], task_rank)
+    return select_and_charge(scores, thr[:, 0], forced, energy, charge,
+                             capacity, gate_e, drain)
+
+
+def run(quick: bool = True) -> None:
+    rng = np.random.default_rng(0)
+    n_rows = 512 if quick else 4096
+    n_dev = 1024 if quick else 8192
+    repeats = 10 if quick else 30
+    rows = []
+
+    def row(kernel, shape, pallas_fn, ref_fn, args, check):
+        check(pallas_fn(*args), ref_fn(*args))
+        us_p = timeit(_block(pallas_fn), *args, repeats=repeats)
+        us_r = timeit(_block(ref_fn), *args, repeats=repeats)
+        rows.append(dict(mode=kernel, shape=shape,
+                         pallas_us=round(us_p, 1), jnp_us=round(us_r, 1),
+                         jnp_relative=round(us_r / us_p, 3)))
+
+    x, cents, assign = _kmeans_operands(rng, n_rows)
+
+    def chk_topk2(a, b):
+        (d1p, d2p, ip), (d1r, d2r, ir) = a, b
+        assert np.allclose(d1p, d1r, atol=1e-4) and np.array_equal(ip, ir)
+        assert np.allclose(d2p, d2r, atol=1e-4)
+
+    row("l1_topk2", f"{n_rows}x128,k64",
+        jax.jit(ops.l1_topk2), jax.jit(ref.l1_topk2_ref),
+        (x, cents), chk_topk2)
+
+    row("pairwise_l1", f"{n_rows}x128,k64",
+        jax.jit(ops.pairwise_l1), jax.jit(ref.pairwise_l1_ref),
+        (x, cents),
+        lambda a, b: np.testing.assert_allclose(a, b, atol=1e-3))
+
+    row("centroid_update", f"{n_rows}x128,k64,w32",
+        jax.jit(ops.centroid_update), jax.jit(ref.centroid_update_ref),
+        (cents, x, assign, 32.0),
+        lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5))
+
+    pri = _priority_operands(rng, n_dev)
+    order = list(pri)   # fleet_priority's positional signature
+
+    def chk_pick(a, b):
+        sel_p, picked_p, run_p, e_p = a
+        sel_r, picked_r, run_r, e_r = b
+        assert np.array_equal(sel_p, sel_r)
+        assert np.array_equal(np.asarray(picked_p, bool),
+                              np.asarray(picked_r, bool))
+        assert np.array_equal(np.asarray(run_p, bool),
+                              np.asarray(run_r, bool))
+        np.testing.assert_allclose(e_p, e_r, atol=1e-7)
+
+    row("fleet_priority", f"D={n_dev},Q=8,K=2",
+        lambda *a: ops.fleet_priority(*a, n_tasks=2),
+        jax.jit(lambda *a: _fleet_priority_ref(*a, n_tasks=2)),
+        tuple(pri[k] for k in order), chk_pick)
+
+    emit("kernels", rows)
+
+
+if __name__ == "__main__":
+    run()

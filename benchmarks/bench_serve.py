@@ -1,0 +1,97 @@
+"""Live-serving throughput: vectorized fleet engine vs the scalar engine.
+
+One jitted :class:`repro.serve.fleet_engine.FleetServeEngine` scan serves
+``D x J`` live jobs — every unit executed through the real agile CNN,
+utility-tested against the evolving centroid bank, with online k-means
+adaptation — and is raced against the scalar :class:`ServeEngine` python
+event loop on the same workload (sampled and extrapolated: the scalar
+loop would take minutes at fleet scale).  The default shape, 128 devices
+x 100 jobs = 12800 live jobs, is the paper-scale target: one call, >=
+10^4 jobs across >= 10^2 devices, at >= 20x the scalar rate.
+
+Rows carry ``jobs_per_sec`` (gated with the wide throughput band by
+``check_regression``) and the live fleet's ``accuracy_score`` on
+scheduled jobs (seeded + deterministic, gated with the tight score
+band).  The fleet is also re-timed with ``adapt=False`` to price the
+adaptation/propagation hook.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import energy
+from repro.serve import FleetServeEngine, Request, ServeConfig, ServeEngine
+
+from .common import agile, dataset, emit
+
+_PERIOD = 2.0
+
+
+def _requests(n_jobs):
+    ds = dataset("mnist")
+    xs, ys = np.asarray(ds.x_test), np.asarray(ds.y_test)
+    return [Request(xs[i % len(xs)], int(ys[i % len(ys)]),
+                    release=i * _PERIOD) for i in range(n_jobs)]
+
+
+def _config(n_jobs, adapt):
+    return ServeConfig(policy="zygarde", period=_PERIOD, deadline=1.5,
+                       horizon=n_jobs * _PERIOD + 2.0, adapt=adapt,
+                       start_charged=True, sim_dt=0.05)
+
+
+def _fresh_model():
+    m = agile("mnist")
+    return type(m)(m.cfg, m.params, [b for b in m.bank])
+
+
+def run(quick: bool = True) -> None:
+    n_dev = 128 if quick else 256
+    n_jobs = 100
+    n_scalar = 4 if quick else 8
+    harv = energy.Harvester("battery", 1.0, 0.0, 1.0)   # persistent power
+    reqs = _requests(n_jobs)
+
+    # scalar python event loop, sampled and extrapolated per job
+    t0 = time.perf_counter()
+    eng = ServeEngine([_fresh_model()], harv, eta=1.0,
+                      config=_config(n_scalar, adapt=True))
+    res_s = eng.run([reqs[:n_scalar]])
+    scalar_s = (time.perf_counter() - t0) / n_scalar
+    scalar_rate = 1.0 / scalar_s
+
+    rows = [dict(mode="scalar_loop", devices=1, jobs=n_scalar,
+                 wall_s=round(scalar_s * n_scalar, 3),
+                 jobs_per_sec=round(scalar_rate, 2), speedup=1.0,
+                 accuracy_score=round(
+                     float(res_s.correct) / max(float(res_s.scheduled), 1),
+                     4))]
+
+    for adapt in (True, False):
+        feng = FleetServeEngine([_fresh_model()], harv, eta=1.0,
+                                config=_config(n_jobs, adapt=adapt))
+        feng.run([reqs], n_devices=n_dev)                 # warm-up: compile
+        fres = feng.run([reqs], n_devices=n_dev)          # timed, warm cache
+        fleet = fres.fleet
+        sched = float(np.asarray(fleet.scheduled).sum())
+        acc = float(np.asarray(fleet.correct).sum()) / max(sched, 1.0)
+        rows.append(dict(
+            mode=f"fleet_live_adapt_{'on' if adapt else 'off'}",
+            devices=n_dev, jobs=fres.jobs,
+            wall_s=round(fres.wall_s, 3),
+            jobs_per_sec=round(fres.jobs_per_sec, 1),
+            speedup=round(fres.jobs_per_sec / scalar_rate, 1),
+            accuracy_score=round(acc, 4)))
+
+    live = rows[1]
+    assert live["jobs"] >= 10_000 and live["devices"] >= 100
+    assert live["speedup"] >= 20.0, (
+        f"live fleet {live['jobs_per_sec']} jobs/s is only "
+        f"{live['speedup']}x the scalar engine (need >= 20x)")
+    emit("serve", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -40,7 +40,8 @@ BASELINE_DIR = FRESH_DIR / "baselines"
 
 #: higher-is-better machine-dependent metrics, gated with the wide band
 THROUGHPUT_KEYS = ("device_steps_per_sec", "devices_per_sec",
-                   "candidates_per_sec", "windows_per_sec")
+                   "candidates_per_sec", "windows_per_sec",
+                   "jobs_per_sec")
 #: row fields that identify a row (checked, never gated)
 IDENTITY_KEYS = ("mode", "n_segments", "budget", "devices", "n_tasks")
 

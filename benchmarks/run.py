@@ -9,8 +9,8 @@ perf trajectory can be tracked across PRs —
 committed baselines under ``experiments/baselines/`` in CI.
 
 ``--full`` runs the 4-dataset variants; ``--smoke`` runs a fast subset
-(the fleet-throughput, policy-search and forecast benches) as a CI canary
-so the benchmark entrypoints can't silently rot.
+(the fleet-throughput, kernel, live-serving, policy-search and forecast
+benches) as a CI canary so the benchmark entrypoints can't silently rot.
 """
 from __future__ import annotations
 
@@ -30,9 +30,11 @@ from . import (
     bench_fleet,
     bench_fleet_segments,
     bench_forecast,
+    bench_kernels,
     bench_loss_functions,
     bench_overhead,
     bench_scheduler,
+    bench_serve,
     common,
     roofline,
 )
@@ -44,6 +46,8 @@ BENCHES = (
     ("scheduler_figs17_20", bench_scheduler),
     ("fleet_throughput", bench_fleet),
     ("fleet", bench_fleet_segments),
+    ("kernels", bench_kernels),
+    ("serve", bench_serve),
     ("adapt_tune", bench_adapt),
     ("forecast", bench_forecast),
     ("capacitor_fig21", bench_capacitor),
@@ -54,7 +58,8 @@ BENCHES = (
     ("roofline", roofline),
 )
 
-SMOKE_BENCHES = ("fleet_throughput", "fleet", "adapt_tune", "forecast")
+SMOKE_BENCHES = ("fleet_throughput", "fleet", "kernels", "serve",
+                 "adapt_tune", "forecast")
 
 
 def write_bench_json(name: str, wall_s: float, rows: dict,

@@ -18,6 +18,10 @@ Drivers
              smoothed-objective gradient the differentiable-friendly
              scalarization in :func:`repro.core.utility.scalarized_objective`
              is designed for.
+``cma``      full-covariance CMA-ES (rank-1 + rank-mu updates, cumulative
+             step-size adaptation): learns the coupling between knobs —
+             e.g. eta and the e_opt fraction trade off through the same
+             energy budget — that the isotropic ``es`` ignores.
 """
 from __future__ import annotations
 
@@ -157,11 +161,72 @@ def _es_grad(tr: _Tracker, space, budget, rng, pop, *, sigma0=0.15,
         tr.evaluate(theta[None])
 
 
+def _cma(tr: _Tracker, space, budget, rng, pop, *, sigma0=0.3, **_):
+    """Full-covariance CMA-ES (Hansen's tutorial constants).
+
+    Works in width-normalised coordinates (``x = z * widths``) so one
+    relative ``sigma0`` fits heterogeneous knob ranges; the covariance then
+    learns the *residual* correlations between knobs.  Selection feeds back
+    the *clipped* candidates, so the distribution contracts into the box
+    rather than repeatedly sampling outside it.
+    """
+    n = space.n_dims
+    lam = max(4, min(pop, budget))
+    mu = lam // 2
+    w = np.log(mu + 0.5) - np.log(np.arange(1, mu + 1))
+    w = w / w.sum()
+    mu_eff = 1.0 / np.sum(w ** 2)
+    cc = (4 + mu_eff / n) / (n + 4 + 2 * mu_eff / n)
+    cs = (mu_eff + 2) / (n + mu_eff + 5)
+    c1 = 2 / ((n + 1.3) ** 2 + mu_eff)
+    cmu = min(1 - c1,
+              2 * (mu_eff - 2 + 1 / mu_eff) / ((n + 2) ** 2 + mu_eff))
+    damps = 1 + 2 * max(0.0, np.sqrt((mu_eff - 1) / (n + 1)) - 1) + cs
+    chi_n = np.sqrt(n) * (1 - 1 / (4 * n) + 1 / (21 * n ** 2))
+
+    scale = space.widths
+    m = space.center() / scale
+    sigma = float(sigma0)
+    C = np.eye(n)
+    pc = np.zeros(n)
+    ps = np.zeros(n)
+    gen = 0
+    while tr.n_evals + lam <= budget:
+        gen += 1
+        C = (C + C.T) / 2
+        evals, B = np.linalg.eigh(C)
+        evals = np.maximum(evals, 1e-20)
+        D = np.sqrt(evals)
+        z = rng.normal(size=(lam, n))
+        y = z @ (B * D).T                      # y ~ N(0, C)
+        x = space.clip((m + sigma * y) * scale)
+        s = tr.evaluate(x)
+        order = np.argsort(s)[::-1][:mu]
+        y_sel = (x[order] / scale - m) / sigma  # post-clip steps
+        y_w = w @ y_sel
+        m = m + sigma * y_w
+        c_invsqrt = (B / D) @ B.T
+        ps = (1 - cs) * ps + np.sqrt(cs * (2 - cs) * mu_eff) * (
+            c_invsqrt @ y_w)
+        h_sig = (np.linalg.norm(ps)
+                 / np.sqrt(1 - (1 - cs) ** (2 * gen)) / chi_n
+                 < 1.4 + 2 / (n + 1))
+        pc = (1 - cc) * pc + h_sig * np.sqrt(cc * (2 - cc) * mu_eff) * y_w
+        rank_mu = (y_sel * w[:, None]).T @ y_sel
+        C = ((1 - c1 - cmu) * C
+             + c1 * (np.outer(pc, pc) + (1 - h_sig) * cc * (2 - cc) * C)
+             + cmu * rank_mu)
+        sigma *= float(np.exp((cs / damps)
+                              * (np.linalg.norm(ps) / chi_n - 1)))
+        sigma = float(np.clip(sigma, 1e-12, 1e3))
+
+
 DRIVERS: Mapping[str, Callable] = {
     "random": _random,
     "grid": _grid,
     "es": _es,
     "es-grad": _es_grad,
+    "cma": _cma,
 }
 
 
@@ -174,7 +239,7 @@ def tune(objective, space: SearchSpace, budget: int, *,
         e.g. :meth:`repro.adapt.objective.TuneProblem.objective`.
     space     : the bounded knobs to search.
     budget    : total candidate evaluations across all blocks.
-    driver    : one of ``random | grid | es | es-grad``.
+    driver    : one of ``random | grid | es | es-grad | cma``.
     pop_size  : candidates per objective call (the fleet batch); default
         ``min(16, budget)``.
     """

@@ -103,6 +103,41 @@ class _AgileBase:
                 cluster_idx,
             )
 
+    def unit_features(
+        self, xs, *, batch_size: Optional[int] = None
+    ) -> list[np.ndarray]:
+        """Per-unit features for a request batch, scan-over-units style.
+
+        Runs ``_run_unit`` for unit 0 over the whole batch, then unit 1, ...
+        — the "stacked scan over layers" shape the vectorized serving engine
+        (:mod:`repro.serve.fleet_engine`) consumes: features are a pure
+        function of the input (adaptation only moves *centroids*), so they
+        can be computed once up front while classification happens inside
+        the scheduling scan against the evolving bank.
+
+        Returns a list of ``n_units`` arrays, entry ``u`` shaped
+        ``(B, F_u)``.  ``batch_size`` chunks the batch to bound activation
+        memory; ``batch_size=1`` reproduces the exact per-sample arithmetic
+        of a :class:`repro.serve.engine.DynamicJobProfile` (same conv batch
+        shape), which the scalar↔fleet bit-parity harness relies on.
+        """
+        if isinstance(xs, dict):
+            n = len(next(iter(xs.values())))
+            chunk = lambda a, b: {k: v[a:b] for k, v in xs.items()}  # noqa: E731
+        else:
+            if isinstance(xs, (list, tuple)):
+                xs = np.stack([np.asarray(x) for x in xs])
+            n = len(xs)
+            chunk = lambda a, b: xs[a:b]  # noqa: E731
+        bs = n if batch_size is None else int(batch_size)
+        out: list[list[np.ndarray]] = [[] for _ in range(self.n_units)]
+        for b0 in range(0, n, bs):
+            state = self._initial_state(chunk(b0, min(b0 + bs, n)))
+            for u in range(self.n_units):
+                state, f = self._run_unit(state, u)
+                out[u].append(np.asarray(f, np.float32))
+        return [np.concatenate(c, axis=0) for c in out]
+
 
 # --------------------------------------------------------------------------- #
 # CNN frontend.

@@ -491,4 +491,8 @@ def simulate(
         res.task_misses[task_row[releases[rel_idx].task.task_id]] += 1
         rel_idx += 1
     res.sim_time = t_now
+    # expose the (mutated-in-place) Job records as a plain attribute — NOT a
+    # dataclass field, so ``as_dict`` stays JSON-serializable.  The serving
+    # parity harness reads per-job units/exits/deadline outcomes from here.
+    res.jobs = releases
     return res

@@ -149,6 +149,14 @@ class DeviceCarry(NamedTuple):
     q_exited: jax.Array      # int32, unit where the utility test passed (-1)
     q_last_pred: jax.Array   # int32, deepest executed unit (-1)
     q_mand_time: jax.Array   # f32, mandatory-completion time (-1)
+    # live-profile registers (repro.serve.fleet_engine): when the step runs
+    # in ``live`` mode the margins/passes/correct *tables* are never read —
+    # the serving engine classifies the just-executed unit against its
+    # evolving centroid bank and injects the outcome here instead.  Replay
+    # mode neither reads nor writes them.
+    q_margin: jax.Array      # f32, live margin after the last executed unit
+    q_correct: jax.Array     # bool, live prediction correct at last unit
+    q_apass: jax.Array       # bool, utility test has passed at some unit
     # metric accumulators, (K,) per task (mirror scheduler.SimResult.task_*)
     m_scheduled: jax.Array   # int32
     m_correct: jax.Array     # int32
@@ -236,6 +244,9 @@ def init_carry(params: StepParams, statics: StepStatics) -> DeviceCarry:
         q_exited=jnp.full((q,), -1, i32),
         q_last_pred=jnp.full((q,), -1, i32),
         q_mand_time=jnp.full((q,), -1.0, f32),
+        q_margin=jnp.zeros((q,), f32),
+        q_correct=jnp.zeros((q,), bool),
+        q_apass=jnp.zeros((q,), bool),
         m_scheduled=zeros_k,
         m_correct=zeros_k,
         m_misses=zeros_k,
@@ -253,15 +264,20 @@ def init_carry(params: StepParams, statics: StepStatics) -> DeviceCarry:
 # --------------------------------------------------------------------------- #
 
 
-def finish_counts(params: StepParams, st: DeviceCarry, mask: jax.Array):
+def finish_counts(params: StepParams, st: DeviceCarry, mask: jax.Array,
+                  live: bool = False):
     """Tally (scheduled, correct, missed) for the queue slots in ``mask``,
-    broken down per task — ``(K,)`` int arrays each."""
+    broken down per task — ``(K,)`` int arrays each.  ``live`` reads the
+    slot's live correctness register instead of the replay table."""
     n_tasks = params.period.shape[0]
     tk = jnp.clip(st.q_task, 0, n_tasks - 1)
     sched = mask & (st.q_mand_time >= 0.0) & (st.q_mand_time <= st.q_deadline)
-    job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
-    lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
-    corr = sched & (st.q_last_pred >= 0) & params.correct[tk, job, lp]
+    if live:
+        corr = sched & (st.q_last_pred >= 0) & st.q_correct
+    else:
+        job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
+        lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
+        corr = sched & (st.q_last_pred >= 0) & params.correct[tk, job, lp]
     miss = mask & ~sched
     onehot = tk[:, None] == jnp.arange(n_tasks)[None, :]   # (Q, K)
 
@@ -271,8 +287,8 @@ def finish_counts(params: StepParams, st: DeviceCarry, mask: jax.Array):
     return per_task(sched), per_task(corr), per_task(miss)
 
 
-def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics
-          ) -> DeviceCarry:
+def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
+          live: bool = False) -> DeviceCarry:
     """Admit at most one released job per task (the builder asserts
     dt < period).  The static python loop over the task axis admits in task
     order — the same order the scalar path's stable release sort yields for
@@ -293,7 +309,7 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics
         victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf))
         evict = releasing & ~has_free & has_evict
         vmask = evict & (jnp.arange(q) == victim)
-        d_sched, d_corr, d_miss = finish_counts(params, st, vmask)
+        d_sched, d_corr, d_miss = finish_counts(params, st, vmask, live)
 
         insert = releasing & (has_free | has_evict)
         slot = jnp.where(has_free, jnp.argmax(free), victim)
@@ -315,6 +331,9 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics
             q_exited=jnp.where(ins, -1, st.q_exited),
             q_last_pred=jnp.where(ins, -1, st.q_last_pred),
             q_mand_time=jnp.where(ins, -1.0, st.q_mand_time),
+            q_margin=jnp.where(ins, 0.0, st.q_margin),
+            q_correct=jnp.where(ins, False, st.q_correct),
+            q_apass=jnp.where(ins, False, st.q_apass),
             m_scheduled=st.m_scheduled + d_sched,
             m_correct=st.m_correct + d_corr,
             m_misses=st.m_misses + d_miss + (dropped & k_hot),
@@ -322,12 +341,13 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics
     return st
 
 
-def drop_expired(params: StepParams, st: DeviceCarry, t) -> DeviceCarry:
+def drop_expired(params: StepParams, st: DeviceCarry, t,
+                 live: bool = False) -> DeviceCarry:
     # the device expires jobs against its *drifting* clock (fleet CHRT
     # model): a fast clock (drift > 0) drops jobs before their true deadline
     t_read = t * (1.0 + params.clock_drift)
     expired = st.q_active & (t_read >= st.q_deadline)
-    d_sched, d_corr, d_miss = finish_counts(params, st, expired)
+    d_sched, d_corr, d_miss = finish_counts(params, st, expired, live)
     return st._replace(
         q_active=st.q_active & ~expired,
         m_scheduled=st.m_scheduled + d_sched,
@@ -337,10 +357,11 @@ def drop_expired(params: StepParams, st: DeviceCarry, t) -> DeviceCarry:
 
 
 def pick_inputs(params: StepParams, st: DeviceCarry, t,
-                statics: StepStatics):
+                statics: StepStatics, live: bool = False):
     """Per-slot priority/energy ingredients shared by the jnp pick and the
     Pallas kernel: each slot gathers its own task's row of the (K, U) /
-    (K, J, U) tables before the shared priority math runs."""
+    (K, J, U) tables before the shared priority math runs.  ``live`` swaps
+    the replayed utility margin for the slot's live margin register."""
     n_tasks = params.period.shape[0]
     tk = jnp.clip(st.q_task, 0, n_tasks - 1)
     u = jnp.clip(st.q_unit, 0, params.unit_time.shape[1] - 1)
@@ -348,9 +369,13 @@ def pick_inputs(params: StepParams, st: DeviceCarry, t,
     unit_e = params.unit_energy[tk, u]
     gate_e = jnp.maximum(unit_e / params.fragments[tk], params.e_man)
     drain = unit_e * (statics.dt / unit_t)
-    job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
-    lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
-    utility = jnp.where(st.q_last_pred >= 0, params.margins[tk, job, lp], 0.0)
+    if live:
+        margin = st.q_margin
+    else:
+        job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
+        lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
+        margin = params.margins[tk, job, lp]
+    utility = jnp.where(st.q_last_pred >= 0, margin, 0.0)
     mandatory = st.q_exited < 0
     laxity = st.q_deadline - t
     n_slots = params.events.shape[0]
@@ -394,10 +419,11 @@ def select_and_charge(scores, threshold, forced, energy, charge, capacity,
     return sel, picked, run, e_new
 
 
-def pick(params: StepParams, st: DeviceCarry, t, statics: StepStatics):
+def pick(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
+         live: bool = False):
     """Priority-argmax + fused capacitor charge/discharge (pure-jnp path)."""
     (laxity, utility, mandatory, gate_e, drain, charge, forced,
-     task_rank) = pick_inputs(params, st, t, statics)
+     task_rank) = pick_inputs(params, st, t, statics, live)
     scores, thr = P.policy_scores(
         params.policy, st.q_active, laxity, st.q_release, utility, mandatory,
         params.alpha, params.beta, params.eta, st.energy, params.e_opt,
@@ -407,8 +433,21 @@ def pick(params: StepParams, st: DeviceCarry, t, statics: StepStatics):
 
 
 def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
-               e_new, statics: StepStatics) -> DeviceCarry:
-    """Advance the selected job by dt; handle unit/job completion."""
+               e_new, statics: StepStatics, live: bool = False,
+               outcomes=None) -> DeviceCarry:
+    """Advance the selected job by dt; handle unit/job completion.
+
+    ``live``/``outcomes`` form the live-profile hook
+    (:mod:`repro.serve.fleet_engine`): ``outcomes`` is a
+    ``(margin, passed, correct)`` scalar triple for the *selected* slot's
+    just-completing unit, computed by classifying the real model features
+    against the engine's evolving centroid bank.  At most one slot
+    completes per step (the ``oh`` mask), so scalars suffice; the values
+    land in the ``q_margin``/``q_correct`` registers and replace every
+    read of the ``margins``/``passes``/``correct`` replay tables.  With
+    ``live=False`` (and ``outcomes=None``) the replay path is untouched
+    and bit-identical to before the hook existed.
+    """
     q = statics.queue_size
     n_tasks = params.period.shape[0]
     u_max = params.unit_time.shape[1] - 1
@@ -443,10 +482,17 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
     # utility test at the unit boundary (imprecise policies only); tuned
     # per-unit thresholds (repro.adapt) re-evaluate the test against the
     # live margin, otherwise the precomputed passes table applies
-    passed = jnp.where(params.use_exit_thr,
-                       P.exit_test(params.margins[tk, job, u],
-                                   params.exit_thr[tk, u]),
-                       params.passes[tk, job, u])
+    if live:
+        margin_sel, passed_sel, correct_sel = outcomes
+        passed = jnp.broadcast_to(passed_sel, complete.shape)
+        q_margin = jnp.where(complete, margin_sel, st.q_margin)
+        q_correct = jnp.where(complete, correct_sel, st.q_correct)
+        st = st._replace(q_margin=q_margin, q_correct=q_correct)
+    else:
+        passed = jnp.where(params.use_exit_thr,
+                           P.exit_test(params.margins[tk, job, u],
+                                       params.exit_thr[tk, u]),
+                           params.passes[tk, job, u])
     exit_now = complete & params.imprecise & (st.q_exited < 0) & passed
     exited = jnp.where(exit_now, u, st.q_exited)
     # never-confident full execution => the whole DNN was mandatory
@@ -459,7 +505,7 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
         (st.q_unit + 1 >= n_units) | (params.is_edfm & (exited >= 0))
     )
     st_done = st._replace(q_last_pred=last_pred, q_mand_time=mand_time)
-    d_sched, d_corr, d_miss = finish_counts(params, st_done, job_done)
+    d_sched, d_corr, d_miss = finish_counts(params, st_done, job_done, live)
 
     # hold the lock while the unit is in progress (including power-gated
     # waits, like the scalar fragment loop); release at the unit boundary
@@ -504,10 +550,10 @@ def device_step(params: StepParams, st: DeviceCarry, t,
 
 
 def finalize(params: StepParams, st: DeviceCarry,
-             statics: StepStatics) -> StepResult:
+             statics: StepStatics, live: bool = False) -> StepResult:
     """Flush live jobs and count never-admitted releases as misses; emit
     both the per-task (K,) counters and their aggregates."""
-    d_sched, d_corr, d_miss = finish_counts(params, st, st.q_active)
+    d_sched, d_corr, d_miss = finish_counts(params, st, st.q_active, live)
     unreleased = params.n_releases - st.next_rel    # (K,)
     t_sched = st.m_scheduled + d_sched
     t_corr = st.m_correct + d_corr

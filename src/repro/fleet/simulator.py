@@ -119,12 +119,13 @@ def _scan_steps(cfg: FleetConfig, states: DeviceState, i0,
     return states
 
 
-@functools.partial(jax.jit, static_argnames=("statics",))
+@functools.partial(jax.jit, static_argnames=("statics", "live"))
 def finalize_fleet(cfg: FleetConfig, states: DeviceState,
-                   statics: FleetStatics) -> FleetResult:
+                   statics: FleetStatics, live: bool = False) -> FleetResult:
     """Flush the carry into a :class:`FleetResult` (vmap of the step core's
-    finalize)."""
-    return jax.vmap(lambda c, s: S.finalize(c, s, statics))(cfg, states)
+    finalize).  ``live`` counts correctness from the live registers
+    (:mod:`repro.serve.fleet_engine`) instead of the replay tables."""
+    return jax.vmap(lambda c, s: S.finalize(c, s, statics, live))(cfg, states)
 
 
 @functools.partial(jax.jit, static_argnames=("statics", "use_pallas"))

@@ -32,6 +32,10 @@ builder; per-task ``n_units``/``n_releases`` bound the live region.  Static
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
+
 from ..core.step import (
     DeviceCarry,
     StepParams,
@@ -46,10 +50,68 @@ DeviceState = DeviceCarry
 FleetResult = StepResult
 init_state = init_carry
 
+
+# --------------------------------------------------------------------------- #
+# Live-serving carry (repro.serve.fleet_engine).
+#
+# The vectorized serving engine extends the fleet carry with the runtime
+# k-means state and a per-job outcome log.  Everything is a flat NamedTuple
+# of arrays, so the combined :class:`ServeCarry` stays a checkpointable
+# pytree: it round-trips through segment boundaries exactly like
+# ``DeviceState`` does in :func:`repro.fleet.simulator.run_segments`, and
+# :func:`repro.launch.sharding.shard_serve_carry` places it on a mesh.
+# --------------------------------------------------------------------------- #
+
+
+class ServeBank(NamedTuple):
+    """Stacked centroid bank — the *mutable* half of the classifier state.
+
+    Cluster labels / feature selections / thresholds never change online, so
+    they ride in the engine's read-only feature tables; only centroids and
+    member counts (the paper's ``r``) adapt.  Shapes are padded to common
+    ``(K tasks, U units, C clusters, F features)``: padded cluster rows sit
+    at a huge constant (never in the L1 top-2) and padded feature columns
+    are zero in rows and queries alike (L1-invariant).  In ``per-device``
+    bank mode every leaf gains a leading ``D`` axis and shards with the
+    fleet; in ``shared`` mode the single bank is replicated and every
+    device's exits adapt it collaboratively.
+    """
+
+    centroids: jax.Array     # ([D,] K, U, C, F) f32
+    counts: jax.Array        # ([D,] K, U, C) f32
+
+
+class ServeLog(NamedTuple):
+    """Per-job outcome log, ``(D, K, J)`` each — the live analogue of the
+    replay path's precomputed profile tables, written as units complete.
+    ``pred``/``correct``/``margin`` reflect the *deepest executed* unit;
+    ``exit_unit`` is where the bank utility test first passed (-1 = never);
+    ``sched`` mirrors the step core's mandatory-before-deadline test."""
+
+    units: jax.Array         # int32, units executed
+    pred: jax.Array          # int32, last prediction (-1 = never classified)
+    correct: jax.Array       # bool
+    margin: jax.Array        # f32
+    exit_unit: jax.Array     # int32
+    sched: jax.Array         # bool
+
+
+class ServeCarry(NamedTuple):
+    """Full live-serving scan carry: device scheduling state + centroid
+    bank + job log.  Checkpointable between segments like ``DeviceState``."""
+
+    dev: DeviceCarry         # every leaf (D, ...)
+    bank: ServeBank
+    log: ServeLog
+
+
 __all__ = [
     "DeviceState",
     "FleetConfig",
     "FleetResult",
     "FleetStatics",
+    "ServeBank",
+    "ServeCarry",
+    "ServeLog",
     "init_state",
 ]

@@ -257,3 +257,47 @@ def shard_fleet_carry(mesh: Mesh, carry: Any) -> Any:
     (and pins, via tests) the contract that carries shard like configs.
     """
     return shard_fleet_config(mesh, carry)
+
+
+def shard_serve_carry(mesh: Mesh, carry: Any, *,
+                      shared_bank: bool = False) -> Any:
+    """Place a live-serving carry (:class:`repro.fleet.state.ServeCarry`).
+
+    The scheduling state (``dev``) and per-job log (``log``) are plain
+    ``(D, ...)`` pytrees and shard exactly like a fleet carry.  The
+    centroid bank depends on the engine's bank mode: per-device banks carry
+    a leading ``D`` axis and shard alongside, while a ``shared`` bank has
+    no device axis and must replicate (every shard's collaborative
+    ``online_update`` needs the whole table).  The serving engine requires
+    ``D`` to be a mesh-size multiple, so no wrap-around padding happens
+    here — config, carry and tables stay aligned shard-for-shard.
+    """
+    bank = carry.bank
+    if shared_bank:
+        bank = jax.tree.map(
+            lambda l: jax.device_put(l, NamedSharding(mesh, P())), bank)
+    else:
+        bank = shard_fleet_config(mesh, bank)
+    return carry._replace(dev=shard_fleet_config(mesh, carry.dev),
+                          bank=bank,
+                          log=shard_fleet_config(mesh, carry.log))
+
+
+def shard_serve_tables(mesh: Mesh, tables: Any,
+                       per_device: bool = False) -> Any:
+    """Place a :class:`repro.serve.fleet_engine.ServeTables`.
+
+    The classifier metadata (``clabels``/``fidx``/``thr``) never has a
+    device axis and replicates.  The feature/label tables gain a leading
+    ``D`` axis only when every device serves its *own* request stream
+    (``per_device=True``) — then they shard over the fleet axis; a shared
+    stream replicates (each shard classifies against the same table).
+    """
+    batched = {"sel_feats", "full_feats", "labels"} if per_device else set()
+    axes = tuple(mesh.axis_names)
+    out = {}
+    for name, leaf in tables._asdict().items():
+        spec = (P(axes, *([None] * (leaf.ndim - 1))) if name in batched
+                else P())
+        out[name] = jax.device_put(leaf, NamedSharding(mesh, spec))
+    return type(tables)(**out)

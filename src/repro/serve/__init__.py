@@ -1,1 +1,2 @@
 from .engine import ServeEngine, ServeConfig, DynamicJobProfile, Request  # noqa: F401
+from .fleet_engine import FleetServeEngine, FleetServeResult  # noqa: F401

@@ -60,6 +60,7 @@ class DynamicJobProfile:
         self._margins = np.zeros(n)
         self._passes = np.zeros(n, bool)
         self._correct = np.zeros(n, bool)
+        self._preds = np.full(n, -1, np.int64)
         self._exited = False
         self.margins = _LazyVec(self, "margins")
         self.passes = _LazyVec(self, "passes")
@@ -78,6 +79,7 @@ class DynamicJobProfile:
             self._margins[i] = float(margin[0])
             ok = float(margin[0]) > float(uc.threshold)
             self._passes[i] = ok
+            self._preds[i] = int(pred[0])
             self._correct[i] = int(pred[0]) == self._label
             if ok and not self._exited:
                 self._exited = True
@@ -106,8 +108,10 @@ class Request:
 @dataclass
 class ServeConfig:
     policy: str = "zygarde"
-    period: float = 1.0
-    deadline: float = 2.0
+    # period/deadline: one float shared by every task, or a sequence with
+    # one entry per task (same order as the ``models`` list)
+    period: object = 1.0
+    deadline: object = 2.0
     unit_time: Optional[np.ndarray] = None      # seconds per unit
     unit_energy: Optional[np.ndarray] = None    # joules per unit
     fragments_per_unit: int = 4
@@ -116,6 +120,22 @@ class ServeConfig:
     adapt: bool = True
     seed: int = 0
     e_opt_fraction: float = 0.7
+    # cold-boot control + the event loop's idle integration step; the fleet
+    # serving parity workloads pin both (charged start, dt = one fragment)
+    start_charged: bool = False
+    sim_dt: Optional[float] = None
+
+
+def per_task(value, n_tasks: int) -> list[float]:
+    """Broadcast a scalar config value to ``n_tasks`` (or validate a
+    per-task sequence)."""
+    if np.ndim(value) == 0:
+        return [float(value)] * n_tasks
+    vals = [float(v) for v in np.asarray(value).ravel()]
+    if len(vals) != n_tasks:
+        raise ValueError(
+            f"per-task config has {len(vals)} entries for {n_tasks} tasks")
+    return vals
 
 
 class ServeEngine:
@@ -137,6 +157,8 @@ class ServeEngine:
 
     def run(self, requests_per_task: Sequence[Sequence[Request]]) -> SimResult:
         cfg = self.config
+        periods = per_task(cfg.period, len(self.models))
+        deadlines = per_task(cfg.deadline, len(self.models))
         tasks = []
         for tid, (model, reqs) in enumerate(
             zip(self.models, requests_per_task)
@@ -157,8 +179,8 @@ class ServeEngine:
             tasks.append(
                 TaskSpec(
                     task_id=tid,
-                    period=cfg.period,
-                    deadline=cfg.deadline,
+                    period=periods[tid],
+                    deadline=deadlines[tid],
                     unit_time=np.asarray(ut, float),
                     unit_energy=np.asarray(ue, float),
                     profiles=profiles,
@@ -171,5 +193,16 @@ class ServeEngine:
             queue_size=cfg.queue_size,
             seed=cfg.seed,
             e_opt_fraction=cfg.e_opt_fraction,
+            start_charged=cfg.start_charged,
         )
-        return simulate(tasks, self.harvester, self.eta, self.cap, sim)
+        if cfg.sim_dt is not None:
+            sim.dt = float(cfg.sim_dt)
+        res = simulate(tasks, self.harvester, self.eta, self.cap, sim)
+        # retained for post-run inspection: the live profiles carry the
+        # per-unit margins/predictions the scheduler actually computed, and
+        # the per-job records back the scalar side of the fleet live-parity
+        # harness (tests/test_fleet_engine.py)
+        self.tasks_ = tasks
+        self.profiles_ = [t.profiles for t in tasks]
+        self.jobs_ = getattr(res, "jobs", None)
+        return res

@@ -1,0 +1,670 @@
+"""Vectorized live serving: real agile-model execution inside the fleet path.
+
+:class:`repro.serve.engine.ServeEngine` is the *faithful* live path — an
+event-driven python loop serving one job at a time, executing DNN units and
+adapting k-means centroids in exactly the order the scheduler chose.  It
+cannot scale past a handful of devices.  The fleet simulator scales to
+thousands of devices but only *replays* precomputed ``(K, J, U)`` profile
+tables.  This module closes the gap: one jitted ``lax.scan`` serves live
+traffic for a whole fleet, with real unit outcomes and runtime centroid
+adaptation threaded through the unified device step.
+
+The key factorisation: per-unit *features* are a pure function of the input
+— runtime adaptation moves only the k-means *centroids*, never the DNN
+weights — so the engine precomputes features for every (job, unit) in one
+batched scan-over-units pass (``_AgileBase.unit_features``) outside the
+scheduling scan, and keeps only the state that actually evolves (the
+centroid bank) inside it.  Each timestep then:
+
+1. runs the step core's admit / drop-expired / pick stages in ``live`` mode
+   (``vmap`` over devices, margins read from the live registers);
+2. gathers the selected slot's (task, job, unit) identity per device;
+3. classifies the completing unit's *real* features against the device's
+   *current* centroid bank (same L1 top-2 arithmetic as
+   :func:`repro.core.kmeans.classify`);
+4. injects the ``(margin, passed, correct)`` outcome into
+   :func:`repro.core.step.apply_step`;
+5. adapts the bank where the utility test passed for the first time
+   (weighted-average update + centroid propagation to deeper units, paper
+   §4.3), exactly as ``DynamicJobProfile`` does one job at a time.
+
+Because classification/adaptation are elementwise per device and the step
+core is the same ``vmap``-ed transition the replay fleet uses, the live
+fleet is *bit-exact* against a scalar :class:`ServeEngine` run on workloads
+where the event-driven and fixed-step clocks coincide (persistent power,
+charged start, unit times commensurate with ``dt`` — see
+``tests/test_fleet_engine.py``).
+
+Bank modes:
+
+* ``per-device`` (default): every device owns a full centroid bank —
+  ``ServeBank`` leaves carry a leading ``D`` axis and shard with the fleet
+  (:func:`repro.launch.sharding.shard_serve_carry`).  This is the mode the
+  scalar parity holds in.
+* ``shared``: one global bank; every device's first-pass exits fold into a
+  single collaborative :func:`repro.core.kmeans.online_update` per (task,
+  unit) each step — the fleet-scale collaborative-adaptation substrate.
+
+The scan carry (:class:`repro.fleet.state.ServeCarry`) is a flat pytree, so
+``run(..., n_segments=N)`` checkpoints it at segment boundaries exactly like
+:func:`repro.fleet.simulator.run_segments` — bit-identical to the monolithic
+scan for any ``N``.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import step as S
+from ..core.energy import Capacitor, Harvester
+from ..core.scheduler import JobProfile, TaskSpec
+from ..fleet import grid
+from ..fleet.simulator import finalize_fleet
+from ..fleet.state import (
+    FleetConfig,
+    FleetResult,
+    FleetStatics,
+    ServeBank,
+    ServeCarry,
+    ServeLog,
+    init_state,
+)
+from .engine import Request, ServeConfig, per_task
+
+_F32 = jnp.float32
+_I32 = jnp.int32
+
+# padded cluster rows sit this far from everything: never in the L1 top-2
+_FAR = 1e15
+# the kernel's second-minimum mask value (repro.kernels.l1_topk2.POS)
+_POS = 1e30
+
+
+class ServeTables(NamedTuple):
+    """Read-only per-request / per-classifier tables consumed by the scan.
+
+    Shapes use ``K`` tasks, ``J`` jobs, ``U`` units, ``C`` clusters, ``S``
+    selected features, ``F`` padded full-feature width (always one wider
+    than the largest real feature dim: the extra column is zero everywhere
+    and is where padded ``fidx`` entries point, so padding is L1-exact).
+    With per-device request streams every *feature/label* leaf gains a
+    leading ``D`` axis; the classifier metadata never does.
+    """
+
+    sel_feats: jax.Array     # ([D,] K, J, U, S) f32 — selected-dim features
+    full_feats: jax.Array    # ([D,] K, J, U, F) f32 — full-dim (adaptation)
+    labels: jax.Array        # ([D,] K, J) i32 — request ground truth
+    clabels: jax.Array       # (K, U, C) i32 — cluster -> class label
+    fidx: jax.Array          # (K, U, S) i32 — SelectKBest dims (pad -> F-1)
+    thr: jax.Array           # (K, U) f32 — bank utility thresholds
+
+
+@dataclass(frozen=True)
+class BankMeta:
+    """Static (python) shape metadata for the stacked bank."""
+
+    n_units: tuple           # per task
+    n_clusters: tuple        # per (task, unit)
+    feat_dim: tuple          # per (task, unit) real feature width
+    n_sel: tuple             # per (task, unit) real selected count
+
+
+def stack_banks(models: Sequence) -> tuple[ServeBank, dict, BankMeta]:
+    """Stack every model's per-unit :class:`UnitClassifier` bank into the
+    padded ``(K, U, C, F)`` tables of a :class:`ServeBank` (+ the read-only
+    classifier metadata for :class:`ServeTables`).
+
+    Padding conventions (all L1- and update-exact, see module docstring):
+    dummy cluster rows at ``_FAR`` with label -1 and count 1; features
+    zero-padded to a common width ``F`` that always includes one guaranteed
+    all-zero trailing column for padded ``fidx`` entries.
+    """
+    K = len(models)
+    n_units = tuple(m.n_units for m in models)
+    U = max(n_units)
+    n_clusters = tuple(
+        tuple(int(uc.centroids.shape[0]) for uc in m.bank) for m in models)
+    feat_dim = tuple(
+        tuple(int(uc.centroids.shape[1]) for uc in m.bank) for m in models)
+    n_sel = tuple(
+        tuple(int(uc.feature_idx.shape[0]) for uc in m.bank) for m in models)
+    C = max(max(r) for r in n_clusters)
+    S = max(max(r) for r in n_sel)
+    F = max(max(r) for r in feat_dim) + 1    # +1: the all-zero pad column
+
+    cents = np.full((K, U, C, F), _FAR, np.float32)
+    counts = np.ones((K, U, C), np.float32)
+    clabels = np.full((K, U, C), -1, np.int32)
+    fidx = np.full((K, U, S), F - 1, np.int32)
+    thr = np.zeros((K, U), np.float32)
+    for k, m in enumerate(models):
+        for u, uc in enumerate(m.bank):
+            c = np.asarray(uc.centroids, np.float32)
+            kc, fu = c.shape
+            cents[k, u, :kc, :fu] = c
+            cents[k, u, :kc, fu:] = 0.0
+            counts[k, u, :kc] = np.asarray(uc.counts, np.float32)
+            clabels[k, u, :kc] = np.asarray(uc.labels, np.int32)
+            ns = n_sel[k][u]
+            fidx[k, u, :ns] = np.asarray(uc.feature_idx, np.int32)
+            thr[k, u] = float(uc.threshold)
+    bank = ServeBank(centroids=jnp.asarray(cents), counts=jnp.asarray(counts))
+    tables = dict(clabels=jnp.asarray(clabels), fidx=jnp.asarray(fidx),
+                  thr=jnp.asarray(thr))
+    return bank, tables, BankMeta(n_units, n_clusters, feat_dim, n_sel)
+
+
+def build_feature_tables(
+    models: Sequence,
+    requests_per_task: Sequence[Sequence[Request]],
+    meta: BankMeta,
+    bank_tables: dict,
+    *,
+    feature_batch: Optional[int] = None,
+    n_jobs: Optional[int] = None,
+) -> dict:
+    """Precompute the (job, unit) feature tables for one request stream.
+
+    Features come from ``unit_features`` (scan-over-units, chunked by
+    ``feature_batch``); the selected-dim gather happens host-side against
+    the *initial* feature selection — valid for the whole run because
+    ``feature_idx`` never adapts.  ``n_jobs`` fixes the job axis (so
+    per-device streams of different lengths stack); default = longest
+    stream given.
+    """
+    K = len(models)
+    J = int(n_jobs or max(len(r) for r in requests_per_task))
+    fidx = np.asarray(bank_tables["fidx"])
+    U, S = fidx.shape[1], fidx.shape[2]
+    F = max(max(r) for r in meta.feat_dim) + 1
+    sel = np.zeros((K, J, U, S), np.float32)
+    full = np.zeros((K, J, U, F), np.float32)
+    labels = np.full((K, J), -1, np.int32)
+    for k, (m, reqs) in enumerate(zip(models, requests_per_task)):
+        if not reqs:
+            continue
+        feats = m.unit_features([r.x for r in reqs],
+                                batch_size=feature_batch)
+        for u, f in enumerate(feats):
+            full[k, :len(reqs), u, :f.shape[1]] = f
+            ns = meta.n_sel[k][u]
+            sel[k, :len(reqs), u, :ns] = f[:, fidx[k, u, :ns]]
+        labels[k, :len(reqs)] = [r.label for r in reqs]
+    return dict(sel_feats=sel, full_feats=full, labels=labels)
+
+
+def classify_unit(bank: ServeBank, tables: ServeTables, tk, u, job):
+    """Single-row live classification for one device's completing unit.
+
+    The pure-jnp row variant of :func:`repro.core.kmeans.classify`: same
+    elementwise ``|x - c|`` innermost-axis reduction, same one-hot-masked
+    second minimum (mask value :data:`_POS`), same scale-free margin — so
+    the result is bit-identical to the scalar path's ``l1_topk2`` kernel
+    (interpret mode) on the same operands (asserted in
+    ``tests/test_fleet_engine.py``).  Returns
+    ``(margin, cluster_idx, pred)``.
+    """
+    fsel = tables.sel_feats[tk, job, u]                       # (S,)
+    idxs = tables.fidx[tk, u]                                 # (S,)
+    csel = bank.centroids[tk, u][:, idxs]                     # (C, S)
+    dist = jnp.sum(jnp.abs(fsel[None, :] - csel), axis=-1)    # (C,)
+    d1 = jnp.min(dist)
+    ci = jnp.argmin(dist).astype(_I32)
+    d2 = jnp.min(jnp.where(jnp.arange(dist.shape[0]) == ci, _POS, dist))
+    margin = (d2 - d1) / jnp.maximum(d1 + d2, 1e-9)
+    pred = tables.clabels[tk, u, ci]
+    return margin, ci, pred
+
+
+@dataclass
+class FleetServeResult:
+    """Outcome of one vectorized live-serving run.
+
+    ``fleet`` holds the step core's SimResult-shaped ``(D,)`` aggregates
+    (live-mode finalize: correctness from the live registers); the per-job
+    arrays are the numpy view of the :class:`ServeLog` (``(D, K, J)``
+    each).  ``carry`` is the end-of-horizon :class:`ServeCarry` for
+    checkpoint/resume; ``wall_s``/``jobs_per_sec`` time the jitted scan
+    only (feature precompute excluded — it is amortised, input-dependent
+    work shared with any batched-inference baseline).
+    """
+
+    fleet: FleetResult
+    units: np.ndarray
+    pred: np.ndarray
+    correct: np.ndarray
+    margin: np.ndarray
+    exit_unit: np.ndarray
+    sched: np.ndarray
+    carry: ServeCarry
+    jobs: int
+    wall_s: float
+
+    @property
+    def jobs_per_sec(self) -> float:
+        return self.jobs / max(self.wall_s, 1e-9)
+
+
+class FleetServeEngine:
+    """Vectorized live serving of agile-model tasks across a device fleet.
+
+    Same constructor shape as the scalar :class:`ServeEngine` plus the
+    fleet knobs: ``bank_mode`` ("per-device" | "shared") and
+    ``feature_batch`` (chunk size of the feature precompute; ``1``
+    reproduces the scalar engine's per-sample arithmetic exactly).
+    """
+
+    def __init__(
+        self,
+        models: Sequence,
+        harvester: Harvester,
+        eta: float,
+        cap: Optional[Capacitor] = None,
+        config: Optional[ServeConfig] = None,
+        *,
+        bank_mode: str = "per-device",
+        feature_batch: Optional[int] = None,
+        adapt_weight: float = 32.0,
+    ):
+        if bank_mode not in ("per-device", "shared"):
+            raise ValueError(f"unknown bank_mode {bank_mode!r}")
+        self.models = list(models)
+        self.harvester = harvester
+        self.eta = eta
+        self.cap = cap or Capacitor()
+        self.config = config or ServeConfig()
+        self.bank_mode = bank_mode
+        self.feature_batch = feature_batch
+        self.adapt_weight = float(adapt_weight)
+        self.bank0, self._bank_tables, self.meta = stack_banks(self.models)
+        self._runners: dict = {}
+
+    # ------------------------------------------------------------------ #
+    # Builders.
+    # ------------------------------------------------------------------ #
+
+    def _task_specs(self, n_jobs_per_task: Sequence[int]) -> list[TaskSpec]:
+        """TaskSpecs with *dummy* zero profiles: live mode never reads the
+        replay tables, but the grid builder still sizes ``n_releases`` and
+        the clip bounds from them."""
+        cfg = self.config
+        periods = per_task(cfg.period, len(self.models))
+        deadlines = per_task(cfg.deadline, len(self.models))
+        tasks = []
+        for tid, (m, n_jobs) in enumerate(zip(self.models,
+                                              n_jobs_per_task)):
+            nu = m.n_units
+            ut = (np.asarray(cfg.unit_time, float)
+                  if cfg.unit_time is not None else np.full(nu, 0.2))
+            ue = (np.asarray(cfg.unit_energy, float)
+                  if cfg.unit_energy is not None else np.full(nu, 5e-3))
+            zeros = JobProfile(np.zeros(nu), np.zeros(nu, bool),
+                               np.zeros(nu, bool))
+            tasks.append(TaskSpec(
+                task_id=tid, period=periods[tid], deadline=deadlines[tid],
+                unit_time=ut[:nu], unit_energy=ue[:nu],
+                profiles=[zeros] * n_jobs,
+                fragments_per_unit=cfg.fragments_per_unit,
+            ))
+        return tasks
+
+    def build(
+        self,
+        requests,
+        n_devices: Optional[int] = None,
+        *,
+        seeds: Optional[Sequence[int]] = None,
+    ) -> tuple[FleetConfig, FleetStatics, ServeTables, ServeCarry, bool]:
+        """Materialise configs, statics, feature tables and the t=0 carry.
+
+        ``requests`` is either one stream shared by every device —
+        ``requests[task][job]`` — or per-device streams
+        ``requests[device][task][job]`` (detected by nesting).  Returns
+        ``(cfg, statics, tables, carry0, per_dev_tables)``.
+        """
+        cfg = self.config
+        per_dev = not isinstance(requests[0][0], Request)
+        if per_dev:
+            D = len(requests)
+            if n_devices is not None and n_devices != D:
+                raise ValueError(
+                    f"n_devices={n_devices} but {D} request streams given")
+            streams = requests
+        else:
+            D = int(n_devices or 1)
+            streams = [requests] * D
+        if len(streams[0]) != len(self.models):
+            raise ValueError(
+                f"{len(streams[0])} request streams per device for "
+                f"{len(self.models)} models")
+
+        n_jobs = [max(len(s[k]) for s in streams)
+                  for k in range(len(self.models))]
+        tasks = self._task_specs(n_jobs)
+        dt = grid._check_dt(
+            grid._default_dt(tasks) if cfg.sim_dt is None
+            else float(cfg.sim_dt), tasks)
+        statics = FleetStatics(queue_size=cfg.queue_size, dt=dt,
+                               horizon=cfg.horizon,
+                               slot_s=self.harvester.slot_s)
+        seeds = (list(seeds) if seeds is not None
+                 else [cfg.seed] * D)
+        if len(seeds) != D:
+            raise ValueError(f"{len(seeds)} seeds for {D} devices")
+        events = {s: grid.sample_events(self.harvester, cfg.horizon, s)
+                  for s in set(seeds)}
+        devs = [grid.device_config(
+            tasks, self.harvester, self.eta, self.cap,
+            policy=cfg.policy, horizon=cfg.horizon, events=events[s],
+            e_opt_fraction=cfg.e_opt_fraction,
+            start_charged=cfg.start_charged,
+        ) for s in seeds]
+        fleet_cfg = grid.stack_configs(devs)
+
+        feats = [build_feature_tables(
+            self.models, s, self.meta, self._bank_tables,
+            feature_batch=self.feature_batch, n_jobs=max(n_jobs))
+            for s in streams]
+        if per_dev:
+            stacked = {k: jnp.asarray(np.stack([f[k] for f in feats]))
+                       for k in feats[0]}
+        else:
+            stacked = {k: jnp.asarray(v) for k, v in feats[0].items()}
+        tables = ServeTables(**stacked, **self._bank_tables)
+
+        dev0 = jax.vmap(lambda c: init_state(c, statics))(fleet_cfg)
+        bank0 = self.bank0
+        if self.bank_mode == "per-device":
+            bank0 = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (D,) + l.shape), bank0)
+        K, J = len(self.models), max(n_jobs)
+        log0 = ServeLog(
+            units=jnp.zeros((D, K, J), _I32),
+            pred=jnp.full((D, K, J), -1, _I32),
+            correct=jnp.zeros((D, K, J), bool),
+            margin=jnp.zeros((D, K, J), _F32),
+            exit_unit=jnp.full((D, K, J), -1, _I32),
+            sched=jnp.zeros((D, K, J), bool),
+        )
+        return (fleet_cfg, statics, tables,
+                ServeCarry(dev=dev0, bank=bank0, log=log0), per_dev)
+
+    # ------------------------------------------------------------------ #
+    # The jitted scan.
+    # ------------------------------------------------------------------ #
+
+    def _adapt_per_device(self, bank: ServeBank, x_full, tk, u, ci, do):
+        """One device's weighted-average bank update + centroid propagation
+        (unbatched; the runner vmaps it over the fleet).
+
+        Bit-matches ``km.adapt`` + ``_propagate_from`` on one sample: the
+        assigned row becomes ``(w c + x) / (w + 1)`` (the kernel's one-hot
+        matmul contributes exactly ``x``), every other row is untouched
+        (the kernel computes ``(w c) / w`` — exact for ``w = 32``), and the
+        propagation chain refreshes row ``ci`` of each deeper unit from the
+        *progressively updated* shallower tables, exactly as the scalar
+        loop does."""
+        w = self.adapt_weight
+        K_, U_, C_, _ = bank.centroids.shape
+        m3 = (do
+              & (jnp.arange(K_)[:, None, None] == tk)
+              & (jnp.arange(U_)[None, :, None] == u)
+              & (jnp.arange(C_)[None, None, :] == ci))
+        # the barrier keeps the divisor out of constant folding: XLA would
+        # otherwise rewrite /(w+1) into *(1/(w+1)) under jit, drifting one
+        # ulp off the scalar path's true division
+        denom = lax.optimization_barrier(jnp.float32(w + 1.0))
+        cents = jnp.where(m3[..., None],
+                          (w * bank.centroids + x_full) / denom,
+                          bank.centroids)
+        counts = bank.counts + m3
+        for k, m in enumerate(self.models):
+            for v in range(m.n_units - 1):
+                act = do & (tk == k) & (u <= v)
+                kc = self.meta.n_clusters[k][v]
+                f_in = self.meta.feat_dim[k][v]
+                f_out = self.meta.feat_dim[k][v + 1]
+                r = counts[k, v, :kc, None]
+                src = cents[k, v, :kc, :f_in]
+                img = jax.nn.relu(m.unit_apply_flat(v + 1, r * src)) / r
+                row = (jnp.arange(kc) == ci) & act
+                new = jnp.where(row[:, None], img,
+                                cents[k, v + 1, :kc, :f_out])
+                cents = cents.at[k, v + 1, :kc, :f_out].set(new)
+        return ServeBank(centroids=cents, counts=counts)
+
+    def _adapt_shared(self, bank: ServeBank, x_full, tk, u, ci, do):
+        """Collaborative shared-bank update: all devices exiting at (k, u)
+        this step fold into ONE :func:`km.online_update` (batch-averaged —
+        the documented semantic difference vs sequential per-device
+        adaptation), then one propagation sweep refreshes every touched
+        row of the deeper units."""
+        from ..core import kmeans as km
+
+        cents, counts = bank.centroids, bank.counts
+        C_ = cents.shape[2]
+        for k, m in enumerate(self.models):
+            hot = jnp.zeros((C_,), bool)
+            for v in range(m.n_units):
+                kc = self.meta.n_clusters[k][v]
+                fu = self.meta.feat_dim[k][v]
+                mrow = do & (tk == k) & (u == v)
+                idxk = jnp.where(mrow, ci, -1)
+                new_c, new_n = km.online_update(
+                    cents[k, v, :kc, :fu], counts[k, v, :kc],
+                    x_full[:, :fu], idxk, weight=self.adapt_weight)
+                cents = cents.at[k, v, :kc, :fu].set(new_c)
+                counts = counts.at[k, v, :kc].set(new_n)
+                if v == m.n_units - 1:
+                    break
+                hot = hot | jnp.any(
+                    mrow[:, None] & (jnp.arange(C_)[None, :] == ci[:, None]),
+                    axis=0)
+                f_out = self.meta.feat_dim[k][v + 1]
+                r = counts[k, v, :kc, None]
+                src = cents[k, v, :kc, :fu]
+                img = jax.nn.relu(m.unit_apply_flat(v + 1, r * src)) / r
+                new = jnp.where(hot[:kc, None], img,
+                                cents[k, v + 1, :kc, :f_out])
+                cents = cents.at[k, v + 1, :kc, :f_out].set(new)
+        return ServeBank(centroids=cents, counts=counts)
+
+    def _scan_steps(self, cfg: FleetConfig, tables: ServeTables,
+                    carry: ServeCarry, i0, *, statics: FleetStatics,
+                    n_steps: int, adapt: bool, shared: bool,
+                    per_dev_tables: bool) -> ServeCarry:
+        """Scan ``n_steps`` live timesteps from step index ``i0``."""
+        K = cfg.period.shape[1]
+        u_max = cfg.unit_time.shape[2] - 1
+        J = tables.labels.shape[-1]
+        Q = statics.queue_size
+        tab_axes = ServeTables(
+            sel_feats=0 if per_dev_tables else None,
+            full_feats=0 if per_dev_tables else None,
+            labels=0 if per_dev_tables else None,
+            clabels=None, fidx=None, thr=None)
+        bank_ax = None if shared else 0
+
+        def gather(c, s, a, r):
+            """Selected-slot identity for one device, pre-apply."""
+            tk = jnp.clip(s.q_task[a], 0, K - 1)
+            u = jnp.clip(s.q_unit[a], 0, u_max)
+            job = jnp.clip(s.q_job[a], 0, J - 1)
+            complete = r & (s.q_time_left[a] - statics.dt
+                            <= statics.dt * 1e-3)
+            return (tk, u, job, complete, s.q_exited[a], s.q_apass[a],
+                    s.q_deadline[a], c.n_units[tk], c.imprecise,
+                    c.use_exit_thr, c.exit_thr[tk, u])
+
+        def step(carry, i):
+            dev, bank, log = carry
+            t = i.astype(_F32) * statics.dt
+            dev = jax.vmap(
+                lambda c, s: S.admit(c, s, t, statics, True))(cfg, dev)
+            dev = jax.vmap(
+                lambda c, s: S.drop_expired(c, s, t, True))(cfg, dev)
+            sel, picked, run, e_new = jax.vmap(
+                lambda c, s: S.pick(c, s, t, statics, True))(cfg, dev)
+            (tk, u, job, complete, exited_pre, apass_pre, ddl, nu_sel,
+             imprec, use_thr, thr_cfg) = jax.vmap(gather)(cfg, dev, sel, run)
+
+            margin, ci, pred = jax.vmap(
+                classify_unit, in_axes=(bank_ax, tab_axes, 0, 0, 0))(
+                bank, tables, tk, u, job)
+            if per_dev_tables:
+                label = tables.labels[jnp.arange(tk.shape[0]), tk, job]
+            else:
+                label = tables.labels[tk, job]
+            correct = pred == label
+            pass_bank = margin > tables.thr[tk, u]
+            passed = jnp.where(use_thr, margin > thr_cfg, pass_bank)
+
+            dev = jax.vmap(
+                lambda c, s, a, p, r, e, mg, ps, co: S.apply_step(
+                    c, s, t, a, p, r, e, statics, True, (mg, ps, co)))(
+                cfg, dev, sel, picked, run, e_new, margin, passed, correct)
+
+            # engine-owned utility-pass latch: adaptation fires at the FIRST
+            # bank-threshold pass (like DynamicJobProfile — even under EDF,
+            # where the scheduler itself never exits early)
+            first_pass = complete & pass_bank & ~apass_pre
+            oh = jnp.arange(Q)[None, :] == sel[:, None]
+            dev = dev._replace(
+                q_apass=dev.q_apass | (oh & (complete & pass_bank)[:, None]))
+
+            if adapt:
+                if per_dev_tables:
+                    x_full = tables.full_feats[
+                        jnp.arange(tk.shape[0]), tk, job, u]
+                else:
+                    x_full = tables.full_feats[tk, job, u]
+
+                def _upd(args):
+                    b, xf, tkk, uu, cii, fp = args
+                    if shared:
+                        return self._adapt_shared(b, xf, tkk, uu, cii, fp)
+                    return jax.vmap(self._adapt_per_device)(
+                        b, xf, tkk, uu, cii, fp)
+
+                # most steps complete nothing: skip the propagation convs
+                # entirely unless some device's utility test just passed
+                bank = lax.cond(
+                    jnp.any(first_pass), _upd, lambda args: args[0],
+                    (bank, x_full, tk, u, ci, first_pass))
+
+            # per-job outcome log (mirrors apply_step's completion math)
+            exit_now = complete & imprec & (exited_pre < 0) & passed
+            exited_mid = jnp.where(exit_now, u, exited_pre)
+            full_mand = complete & (exited_mid < 0) & (u + 1 >= nu_sel)
+            mand_now = exit_now | full_mand
+            sched_now = (t + statics.dt) <= ddl
+            m_jd = (complete[:, None, None]
+                    & (jnp.arange(K)[None, :, None] == tk[:, None, None])
+                    & (jnp.arange(J)[None, None, :] == job[:, None, None]))
+
+            def put(old, new, mask=None):
+                mm = m_jd if mask is None else m_jd & mask[:, None, None]
+                return jnp.where(mm, new[:, None, None], old)
+
+            log = ServeLog(
+                units=put(log.units, u + 1),
+                pred=put(log.pred, pred),
+                correct=put(log.correct, correct),
+                margin=put(log.margin, margin),
+                exit_unit=put(log.exit_unit, u, first_pass),
+                sched=put(log.sched, sched_now, mand_now),
+            )
+            return ServeCarry(dev=dev, bank=bank, log=log), None
+
+        carry, _ = lax.scan(step, carry, i0 + jnp.arange(n_steps))
+        return carry
+
+    def _runner(self, statics: FleetStatics, n_steps: int, adapt: bool,
+                shared: bool, per_dev_tables: bool):
+        key = (statics, n_steps, adapt, shared, per_dev_tables)
+        if key not in self._runners:
+            self._runners[key] = jax.jit(functools.partial(
+                self._scan_steps, statics=statics, n_steps=n_steps,
+                adapt=adapt, shared=shared, per_dev_tables=per_dev_tables))
+        return self._runners[key]
+
+    # ------------------------------------------------------------------ #
+    # Public entry point.
+    # ------------------------------------------------------------------ #
+
+    def run(
+        self,
+        requests,
+        n_devices: Optional[int] = None,
+        *,
+        seeds: Optional[Sequence[int]] = None,
+        n_segments: int = 1,
+        carry: Optional[ServeCarry] = None,
+        mesh=None,
+    ) -> FleetServeResult:
+        """Serve every request stream live through one jitted fleet scan.
+
+        ``n_segments > 1`` materialises the :class:`ServeCarry` at segment
+        boundaries (checkpointable, bit-identical to ``n_segments=1``);
+        ``carry`` resumes from a previous run's carry.  ``mesh`` places the
+        carry/config/tables with the device axis partitioned
+        (:func:`repro.launch.sharding.shard_serve_carry`; ``D`` must be a
+        mesh-size multiple).
+        """
+        cfg, statics, tables, carry0, per_dev = self.build(
+            requests, n_devices, seeds=seeds)
+        if carry is not None:
+            carry0 = carry
+        adapt = bool(self.config.adapt)
+        shared = self.bank_mode == "shared"
+        if mesh is not None:
+            from ..launch.sharding import (
+                shard_fleet_config,
+                shard_serve_carry,
+                shard_serve_tables,
+            )
+
+            D = cfg.n_devices
+            if D % mesh.size:
+                raise ValueError(
+                    f"D={D} devices must divide over mesh size {mesh.size}")
+            cfg = shard_fleet_config(mesh, cfg)
+            carry0 = shard_serve_carry(mesh, carry0, shared_bank=shared)
+            tables = shard_serve_tables(mesh, tables, per_device=per_dev)
+
+        sizes = [len(c) for c in
+                 np.array_split(np.arange(statics.n_steps), n_segments)]
+        t0 = time.perf_counter()
+        i0 = 0
+        out = carry0
+        for n in sizes:
+            if not n:
+                continue
+            out = self._runner(statics, n, adapt, shared, per_dev)(
+                cfg, tables, out, jnp.int32(i0))
+            i0 += n
+        fleet = finalize_fleet(cfg, out.dev, statics, live=True)
+        jax.block_until_ready(fleet)
+        wall = time.perf_counter() - t0
+
+        log = out.log
+        return FleetServeResult(
+            fleet=fleet,
+            units=np.asarray(log.units),
+            pred=np.asarray(log.pred),
+            correct=np.asarray(log.correct),
+            margin=np.asarray(log.margin),
+            exit_unit=np.asarray(log.exit_unit),
+            sched=np.asarray(log.sched),
+            carry=out,
+            jobs=int(np.asarray(fleet.released).sum()),
+            wall_s=wall,
+        )
