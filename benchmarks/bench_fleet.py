@@ -8,22 +8,43 @@ contending streams per device) against the K=1 baseline — the throughput
 axis the task-set refactor added (rows carry ``n_tasks`` and
 ``device_steps_per_sec`` so the two are comparable per simulated step).
 The scalar number extrapolates from a sample of grid points (running all
-1000 through the python event loop would take minutes); the batched
-numbers time the full fleet after a warm-up call, so compilation is
-excluded.  On this CPU container the Pallas path runs in ``interpret``
-mode — it validates the kernel against the jnp path rather than racing it;
-on a TPU backend the same call compiles to Mosaic.
+1000 through the python event loop would take minutes); the batched paths
+are AOT-compiled and timed by :mod:`repro.launch.profiling`, so every row
+carries the compile-vs-steady split explicitly.  On this CPU container the
+Pallas path runs in ``interpret`` mode — it validates the kernel against
+the jnp path rather than racing it; on a TPU backend the same call
+compiles to Mosaic.
+
+Observability rows: ``vmap_scan_telemetry`` re-times the batched path
+with the default (``"counters"``) telemetry tier and reports
+``telemetry_overhead_pct``, which CI gates below 5% absolutely
+(``benchmarks/check_regression.py``); ``vmap_scan_telemetry_full``
+reports the opt-in ``"full"`` tier's cost as
+``telemetry_full_overhead_pct`` (informational — per-step event
+descriptors are honestly expensive on a CPU scan).  Both overheads come
+from *paired adjacent* base/telemetry runs in one process — the median of
+per-pair ratios, so clock drift on a noisy runner cancels — not from two
+AOT measurements minutes apart.  The bench also streams a full-tier
+telemetry JSONL (``experiments/telemetry_fleet.jsonl``) from a segmented
+16-device run and round-trips it through ``repro.telemetry.report``.
 """
 from __future__ import annotations
 
+import io
 import time
 
 import numpy as np
 
+import jax
+
 from repro import fleet
 from repro.core import energy
 from repro.core.scheduler import JobProfile, SimConfig, TaskSpec, simulate
+from repro.launch import profiling
+from repro.telemetry import TelemetryConfig, TelemetryLogger
+from repro.telemetry import report as tel_report
 
+from . import common
 from .common import emit
 
 
@@ -67,13 +88,88 @@ def _grid(task, horizon):
     )
 
 
-def _time_fleet(cfg, statics, use_pallas):
+def _measure_fleet(cfg, statics, label, *, use_pallas=False, repeats=5):
+    """AOT compile + steady-state timing of one simulate_fleet variant
+    (roofline-joined under ``--profile``); returns (Measurement, result)."""
+    meas = profiling.measure(
+        lambda c: fleet.simulate_fleet(c, statics, use_pallas=use_pallas),
+        cfg, label=label, repeats=repeats, warmup=1)
+    if common.PROFILE:
+        meas = profiling.roofline_join(meas)
+    meas.extra.pop("_compiled", None)
     res = fleet.simulate_fleet(cfg, statics, use_pallas=use_pallas)
-    res.released.block_until_ready()          # warm-up: compile + run
-    t0 = time.perf_counter()
-    res = fleet.simulate_fleet(cfg, statics, use_pallas=use_pallas)
-    res.released.block_until_ready()
-    return time.perf_counter() - t0, res
+    return meas, res
+
+
+def _paired_overhead(cfg, statics, tcfg, repeats=9):
+    """Telemetry overhead via paired adjacent wall-time runs.
+
+    The full tier ends in a host-side event fold, so it cannot be
+    AOT-lowered by :func:`repro.launch.profiling.measure`; both tiers are
+    therefore timed the same way — alternating uninstrumented/instrumented
+    calls in one loop, reporting the median per-pair ratio.  Returns
+    ``(base_s, tel_s, overhead_pct, result)``."""
+    def run_base():
+        res = fleet.simulate_fleet(cfg, statics)
+        jax.block_until_ready(res)
+        return res
+
+    def run_tel():
+        res, tel = fleet.simulate_fleet(cfg, statics, telemetry=tcfg)
+        jax.block_until_ready(res)
+        return res
+
+    run_base()
+    res_t = run_tel()
+    base_t, tel_t = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run_base()
+        base_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_tel()
+        tel_t.append(time.perf_counter() - t0)
+    ratios = np.array(tel_t) / np.array(base_t)
+    return (float(np.median(base_t)), float(np.median(tel_t)),
+            float(100.0 * (np.median(ratios) - 1.0)), res_t)
+
+
+def _row(meas, *, mode, devices, n_tasks, statics, **extra):
+    wall = meas.steady_s
+    row = dict(mode=mode, devices=devices, n_tasks=n_tasks,
+               wall_s=round(wall, 3),
+               compile_s=round(meas.compile_s, 3),
+               devices_per_sec=round(devices / wall, 1),
+               device_steps_per_sec=round(
+                   devices * statics.n_steps / wall, 1))
+    if meas.roofline is not None:
+        row.update({f"roofline_{k}": v for k, v in meas.roofline.items()})
+    row.update(extra)
+    return row
+
+
+def _emit_telemetry_jsonl(cfg, statics, n_devices=16, n_segments=6):
+    """Stream a segmented telemetry run to experiments/telemetry_fleet.jsonl
+    (per-segment summaries via the hook, ring events drained at the end)
+    and round-trip it through the text dashboard."""
+    small = jax.tree.map(lambda x: x[:n_devices], cfg)
+    tcfg = TelemetryConfig(ring_size=256, level="full")
+    path = common.OUT_DIR / "telemetry_fleet.jsonl"
+    common.OUT_DIR.mkdir(exist_ok=True)
+    with TelemetryLogger(path, label="fleet_throughput") as log:
+        log.meta(statics, tcfg, n_devices=small.n_devices)
+
+        def hook(seg, t_end, c, carry, telemetry=None):
+            log.segment(seg, telemetry)
+            return None
+
+        _, _, tel = fleet.run_segments(small, statics,
+                                       n_segments=n_segments, hook=hook,
+                                       telemetry=tcfg)
+        log.drain_rings(tel)
+    # the dashboard must render what the logger wrote (CI acceptance)
+    tel_report.render(path, out=io.StringIO())
+    return path
 
 
 def run(quick: bool = True) -> None:
@@ -98,40 +194,56 @@ def run(quick: bool = True) -> None:
     scalar_s = (time.perf_counter() - t0) / len(sample)
     scalar_rate = 1.0 / scalar_s
 
-    vmap_t, res_v = _time_fleet(cfg, statics, use_pallas=False)
-    pallas_t, res_p = _time_fleet(cfg, statics, use_pallas=True)
+    vmap_m, res_v = _measure_fleet(cfg, statics, "fleet_vmap_scan")
+    pallas_m, res_p = _measure_fleet(cfg, statics, "fleet_pallas",
+                                     use_pallas=True)
     assert (np.asarray(res_v.scheduled) == np.asarray(res_p.scheduled)).all()
+
+    # telemetry overhead, both tiers: bit-exact results, default tier
+    # gated < 5% absolutely by check_regression, full tier informational
+    reps = 9 if quick else 15
+    base_s, tel_s, overhead_pct, res_t = _paired_overhead(
+        cfg, statics, TelemetryConfig(ring_size=128), repeats=reps)
+    assert (np.asarray(res_v.scheduled) == np.asarray(res_t.scheduled)).all()
+    fbase_s, ftel_s, full_pct, res_f = _paired_overhead(
+        cfg, statics, TelemetryConfig(ring_size=128, level="full"),
+        repeats=reps)
+    assert (np.asarray(res_v.scheduled) == np.asarray(res_f.scheduled)).all()
 
     # multi-task axis: same grid shape, K=4 contending streams per device
     grid_k4 = _grid(_task_set(4), horizon)
     cfg4, statics4, _ = fleet.build(grid_k4)
     assert statics4.n_steps == statics.n_steps
-    k4_t, res_k4 = _time_fleet(cfg4, statics4, use_pallas=False)
+    k4_m, res_k4 = _measure_fleet(cfg4, statics4, "fleet_vmap_k4")
     assert (np.asarray(res_k4.task_scheduled).sum(axis=1)
             == np.asarray(res_k4.scheduled)).all()
 
-    def dsteps(wall: float, statics_) -> float:
-        return round(n_dev * statics_.n_steps / wall, 1)
+    jsonl = _emit_telemetry_jsonl(cfg, statics)
+    print(f"# telemetry stream -> {jsonl}")
 
     rows = [
         dict(mode="scalar_loop", devices=len(sample), n_tasks=1,
              wall_s=round(scalar_s * n_dev, 3),
              devices_per_sec=round(scalar_rate, 1), speedup=1.0),
-        dict(mode="vmap_scan", devices=n_dev, n_tasks=1,
-             wall_s=round(vmap_t, 3),
-             devices_per_sec=round(n_dev / vmap_t, 1),
-             device_steps_per_sec=dsteps(vmap_t, statics),
-             speedup=round(n_dev / vmap_t / scalar_rate, 1)),
-        dict(mode="pallas_interpret", devices=n_dev, n_tasks=1,
-             wall_s=round(pallas_t, 3),
-             devices_per_sec=round(n_dev / pallas_t, 1),
-             device_steps_per_sec=dsteps(pallas_t, statics),
-             speedup=round(n_dev / pallas_t / scalar_rate, 1)),
-        dict(mode="vmap_scan_multitask", devices=n_dev, n_tasks=4,
-             wall_s=round(k4_t, 3),
-             devices_per_sec=round(n_dev / k4_t, 1),
-             device_steps_per_sec=dsteps(k4_t, statics4),
-             k1_relative=round(vmap_t / k4_t, 3)),
+        _row(vmap_m, mode="vmap_scan", devices=n_dev, n_tasks=1,
+             statics=statics,
+             speedup=round(n_dev / vmap_m.steady_s / scalar_rate, 1)),
+        _row(pallas_m, mode="pallas_interpret", devices=n_dev, n_tasks=1,
+             statics=statics,
+             speedup=round(n_dev / pallas_m.steady_s / scalar_rate, 1)),
+        dict(mode="vmap_scan_telemetry", devices=n_dev, n_tasks=1,
+             wall_s=round(tel_s, 3),
+             devices_per_sec=round(n_dev / tel_s, 1),
+             device_steps_per_sec=round(n_dev * statics.n_steps / tel_s, 1),
+             telemetry_overhead_pct=round(overhead_pct, 2)),
+        dict(mode="vmap_scan_telemetry_full", devices=n_dev, n_tasks=1,
+             wall_s=round(ftel_s, 3),
+             devices_per_sec=round(n_dev / ftel_s, 1),
+             device_steps_per_sec=round(n_dev * statics.n_steps / ftel_s, 1),
+             telemetry_full_overhead_pct=round(full_pct, 2)),
+        _row(k4_m, mode="vmap_scan_multitask", devices=n_dev, n_tasks=4,
+             statics=statics4,
+             k1_relative=round(vmap_m.steady_s / k4_m.steady_s, 3)),
     ]
     emit("fleet_throughput", rows)
 

@@ -96,8 +96,10 @@ def run(quick: bool = True) -> None:
 
     def row(kernel, shape, pallas_fn, ref_fn, args, check):
         check(pallas_fn(*args), ref_fn(*args))
-        us_p = timeit(_block(pallas_fn), *args, repeats=repeats)
-        us_r = timeit(_block(ref_fn), *args, repeats=repeats)
+        us_p = timeit(_block(pallas_fn), *args, repeats=repeats,
+                      label=f"{kernel}_pallas")
+        us_r = timeit(_block(ref_fn), *args, repeats=repeats,
+                      label=f"{kernel}_jnp")
         rows.append(dict(mode=kernel, shape=shape,
                          pallas_us=round(us_p, 1), jnp_us=round(us_r, 1),
                          jnp_relative=round(us_r / us_p, 3)))

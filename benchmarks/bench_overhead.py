@@ -66,13 +66,17 @@ def run(quick: bool = True) -> list[dict]:
         cap.discharge(5e-4)
 
     rows = [
-        {"component": "dnn_unit0", "us": timeit(one_unit)},
-        {"component": "dnn_whole", "us": timeit(whole_dnn, repeats=8)},
-        {"component": "kmeans_classify", "us": timeit(classify)},
-        {"component": "classify_plus_adapt", "us": timeit(classify_adapt)},
-        {"component": "scheduler_3jobs", "us": timeit(sched, repeats=5)},
-        {"component": "energy_manager", "us": timeit(energy_manager,
-                                                     repeats=200)},
+        {"component": "dnn_unit0", "us": timeit(one_unit, label="dnn_unit0")},
+        {"component": "dnn_whole", "us": timeit(whole_dnn, repeats=8,
+                                                label="dnn_whole")},
+        {"component": "kmeans_classify", "us": timeit(
+            classify, label="kmeans_classify")},
+        {"component": "classify_plus_adapt", "us": timeit(
+            classify_adapt, label="classify_plus_adapt")},
+        {"component": "scheduler_3jobs", "us": timeit(
+            sched, repeats=5, label="scheduler_3jobs")},
+        {"component": "energy_manager", "us": timeit(
+            energy_manager, repeats=200, label="energy_manager")},
     ]
     by = {r["component"]: r["us"] for r in rows}
     rows.append({

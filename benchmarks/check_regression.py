@@ -20,6 +20,14 @@ mismatch means the benchmark changed shape and the baselines must be
 regenerated — run with ``--update`` to copy the fresh artifacts over the
 baselines (then commit them).
 
+One metric is gated *absolutely* rather than against a baseline: any
+fresh row carrying ``telemetry_overhead_pct`` (the default-tier telemetry
+cost on the vmap fleet path, measured by ``benchmarks/bench_fleet.py``
+with paired adjacent runs) must stay below ``--telemetry-overhead-max``
+(default 5%).  The opt-in full tier reports
+``telemetry_full_overhead_pct`` on its own row, which is informational
+and ungated — its double-digit cost is documented, not defended.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.run --smoke   # write fresh JSONs
@@ -101,9 +109,26 @@ def compare_docs(name: str, base: dict, fresh: dict, *,
     return problems
 
 
+def absolute_gates(name: str, fresh: dict, *,
+                   telemetry_overhead_max: float) -> list[str]:
+    """Gates on fresh values alone (no baseline needed): the default-tier
+    telemetry overhead must stay under the budget on every row reporting
+    it."""
+    problems: list[str] = []
+    for bench, i, row in _iter_rows(fresh):
+        pct = row.get("telemetry_overhead_pct")
+        if isinstance(pct, (int, float)) and not isinstance(pct, bool) \
+                and pct >= telemetry_overhead_max:
+            problems.append(
+                f"{name}:{bench}[{i}]: telemetry_overhead_pct {pct:g} "
+                f"exceeds the {telemetry_overhead_max:g}% budget")
+    return problems
+
+
 def check(fresh_dir: Path = FRESH_DIR, baseline_dir: Path = BASELINE_DIR, *,
           throughput_tolerance: float = 0.75,
           score_tolerance: float = 0.005,
+          telemetry_overhead_max: float = 5.0,
           update: bool = False, out=sys.stdout) -> int:
     """Gate every baselined bench; returns a process exit code."""
     if update:
@@ -138,6 +163,11 @@ def check(fresh_dir: Path = FRESH_DIR, baseline_dir: Path = BASELINE_DIR, *,
             throughput_tolerance=throughput_tolerance,
             score_tolerance=score_tolerance))
         checked += 1
+    for fresh_path in sorted(fresh_dir.glob("BENCH_*.json")):
+        problems.extend(absolute_gates(
+            fresh_path.stem.removeprefix("BENCH_"),
+            json.loads(fresh_path.read_text()),
+            telemetry_overhead_max=telemetry_overhead_max))
     extra = [p.name for p in sorted(fresh_dir.glob("BENCH_*.json"))
              if not (baseline_dir / p.name).exists()]
     if extra:
@@ -163,12 +193,17 @@ def main(argv=None) -> int:
                          "must stay above 25%% of baseline)")
     ap.add_argument("--score-tolerance", type=float, default=0.005,
                     help="allowed absolute drop on deterministic scores")
+    ap.add_argument("--telemetry-overhead-max", type=float, default=5.0,
+                    help="absolute budget (percent) for the default-tier "
+                         "telemetry overhead on the vmap fleet path")
     ap.add_argument("--update", action="store_true",
                     help="copy fresh artifacts over the baselines")
     args = ap.parse_args(argv)
     return check(args.fresh_dir, args.baseline_dir,
                  throughput_tolerance=args.throughput_tolerance,
-                 score_tolerance=args.score_tolerance, update=args.update)
+                 score_tolerance=args.score_tolerance,
+                 telemetry_overhead_max=args.telemetry_overhead_max,
+                 update=args.update)
 
 
 if __name__ == "__main__":

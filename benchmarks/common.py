@@ -1,4 +1,5 @@
-"""Shared benchmark plumbing: cached trained models, CSV row printing."""
+"""Shared benchmark plumbing: cached trained models, CSV row printing,
+and the compile-vs-steady timing discipline every bench lane shares."""
 from __future__ import annotations
 
 import functools
@@ -7,16 +8,32 @@ from pathlib import Path
 
 import numpy as np
 
+import jax
+
 OUT_DIR = Path(__file__).resolve().parent.parent / "experiments"
 
 # rows emitted since the last drain, keyed by bench name — run.py drains
 # this after each module to write the per-bench BENCH_<name>.json artifact
 PENDING_ROWS: dict[str, list[dict]] = {}
 
+# cold-vs-steady detail per labelled timeit() call since the last drain —
+# written into each BENCH_<name>.json as its "timings" section
+PENDING_TIMINGS: dict[str, dict] = {}
+
+# set by ``benchmarks/run.py --profile``: bench modules consult it to attach
+# roofline attribution (repro.launch.profiling) to their measurements
+PROFILE: bool = False
+
 
 def drain_rows() -> dict[str, list[dict]]:
     out = dict(PENDING_ROWS)
     PENDING_ROWS.clear()
+    return out
+
+
+def drain_timings() -> dict[str, dict]:
+    out = dict(PENDING_TIMINGS)
+    PENDING_TIMINGS.clear()
     return out
 
 
@@ -69,16 +86,35 @@ def profiles(name: str, loss: str = "layer_aware", seed: int = 0,
     )
 
 
-def timeit(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
-    """Median wall-time per call in microseconds."""
-    for _ in range(warmup):
-        fn(*args)
+def timeit(fn, *args, repeats: int = 20, warmup: int = 3,
+           label: str | None = None) -> float:
+    """Median steady-state wall-time per call in microseconds.
+
+    Every call — warmup and timed — is followed by
+    ``jax.block_until_ready``; JAX dispatch is asynchronous, so without the
+    barrier the first timed call could absorb device work still in flight
+    from warmup (and each timestamp would measure dispatch, not execution).
+    The first warmup call is timed separately as the *cold* call (it
+    carries compilation for jitted ``fn``); pass ``label`` to record the
+    cold/steady split into the bench's ``BENCH_<name>.json`` ``timings``
+    section.
+    """
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    cold_s = time.perf_counter() - t0
+    for _ in range(max(warmup - 1, 0)):
+        jax.block_until_ready(fn(*args))
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        fn(*args)
+        jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)
+    steady_us = float(np.median(times) * 1e6)
+    if label is not None:
+        PENDING_TIMINGS[label] = dict(
+            cold_us=round(cold_s * 1e6, 1), steady_us=round(steady_us, 1),
+            repeats=repeats)
+    return steady_us
 
 
 def emit(bench: str, rows: list[dict]) -> list[dict]:

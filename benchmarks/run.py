@@ -1,16 +1,22 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
-One module per paper table/figure (see DESIGN.md §6); each prints
-``bench,key=value,...`` CSV rows.  Every module run writes a
-machine-readable ``experiments/BENCH_<name>.json`` (wall time + the rows it
-emitted, which carry throughput / devices-per-sec where applicable) so the
-perf trajectory can be tracked across PRs —
-``benchmarks/check_regression.py`` gates those artifacts against the
-committed baselines under ``experiments/baselines/`` in CI.
+One registered callable per paper table/figure (see DESIGN.md §6); each
+prints ``bench,key=value,...`` CSV rows.  Every bench run writes a
+machine-readable ``experiments/BENCH_<name>.json`` (wall time, the rows it
+emitted — which carry throughput / devices-per-sec where applicable — and
+a ``timings`` section with the cold-vs-steady split of every labelled
+:func:`benchmarks.common.timeit` call) so the perf trajectory can be
+tracked across PRs — ``benchmarks/check_regression.py`` gates those
+artifacts against the committed baselines under ``experiments/baselines/``
+in CI.
 
 ``--full`` runs the 4-dataset variants; ``--smoke`` runs a fast subset
 (the fleet-throughput, kernel, live-serving, policy-search and forecast
 benches) as a CI canary so the benchmark entrypoints can't silently rot.
+``--profile`` captures a ``jax.profiler`` trace per bench under
+``experiments/traces/<name>/`` and tells the bench modules (via
+``common.PROFILE``) to attach the HLO-cost roofline attribution to their
+measurements (:mod:`repro.launch.profiling`).
 """
 from __future__ import annotations
 
@@ -21,7 +27,6 @@ import traceback
 
 from . import (
     bench_adapt,
-    bench_adaptation,
     bench_capacitor,
     bench_classifiers,
     bench_clock,
@@ -40,34 +45,35 @@ from . import (
 )
 
 BENCHES = (
-    ("overhead_fig14", bench_overhead),
-    ("loss_functions_fig15", bench_loss_functions),
-    ("early_termination_fig16", bench_early_termination),
-    ("scheduler_figs17_20", bench_scheduler),
-    ("fleet_throughput", bench_fleet),
-    ("fleet", bench_fleet_segments),
-    ("kernels", bench_kernels),
-    ("serve", bench_serve),
-    ("adapt_tune", bench_adapt),
-    ("forecast", bench_forecast),
-    ("capacitor_fig21", bench_capacitor),
-    ("clock_table5", bench_clock),
-    ("adaptation_fig24", bench_adaptation),
-    ("eta_validation_fig25", bench_eta),
-    ("classifiers_table7", bench_classifiers),
-    ("roofline", roofline),
+    ("overhead_fig14", bench_overhead.run),
+    ("loss_functions_fig15", bench_loss_functions.run),
+    ("early_termination_fig16", bench_early_termination.run),
+    ("scheduler_figs17_20", bench_scheduler.run),
+    ("fleet_throughput", bench_fleet.run),
+    ("fleet", bench_fleet_segments.run),
+    ("kernels", bench_kernels.run),
+    ("serve", bench_serve.run),
+    ("adapt_tune", bench_adapt.run),
+    ("forecast", bench_forecast.run),
+    ("capacitor_fig21", bench_capacitor.run),
+    ("clock_table5", bench_clock.run),
+    ("adaptation_fig24", bench_adapt.run_fig24),
+    ("eta_validation_fig25", bench_eta.run),
+    ("classifiers_table7", bench_classifiers.run),
+    ("roofline", roofline.run),
 )
 
 SMOKE_BENCHES = ("fleet_throughput", "fleet", "kernels", "serve",
                  "adapt_tune", "forecast")
 
 
-def write_bench_json(name: str, wall_s: float, rows: dict,
+def write_bench_json(name: str, wall_s: float, rows: dict, timings: dict,
                      ok: bool) -> None:
     common.OUT_DIR.mkdir(exist_ok=True)
     path = common.OUT_DIR / f"BENCH_{name}.json"
     path.write_text(json.dumps(
-        dict(bench=name, ok=ok, wall_s=round(wall_s, 3), rows=rows),
+        dict(bench=name, ok=ok, wall_s=round(wall_s, 3), rows=rows,
+             timings=timings),
         indent=2, default=str))
 
 
@@ -78,6 +84,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help=f"fast CI subset: {', '.join(SMOKE_BENCHES)}")
     ap.add_argument("--only", nargs="*", help="subset of benchmark names")
+    ap.add_argument("--profile", action="store_true",
+                    help="capture a jax.profiler trace per bench under "
+                         "experiments/traces/ and attach roofline "
+                         "attribution to measurements")
     args = ap.parse_args()
 
     selected = args.only or (SMOKE_BENCHES if args.smoke else None)
@@ -88,22 +98,31 @@ def main() -> None:
             raise SystemExit(
                 f"unknown benchmark name(s): {', '.join(unknown)}\n"
                 f"available: {', '.join(name for name, _ in BENCHES)}")
+    common.PROFILE = bool(args.profile)
     failures = []
-    for name, mod in BENCHES:
+    for name, bench_fn in BENCHES:
         if selected and name not in selected:
             continue
         t0 = time.time()
         print(f"# --- {name} ---")
         common.drain_rows()
+        common.drain_timings()
         ok = True
         try:
-            mod.run(quick=not args.full)
+            if args.profile:
+                from repro.launch import profiling
+
+                with profiling.trace(common.OUT_DIR / "traces" / name):
+                    bench_fn(quick=not args.full)
+            else:
+                bench_fn(quick=not args.full)
         except Exception:
             traceback.print_exc()
             failures.append(name)
             ok = False
         wall = time.time() - t0
-        write_bench_json(name, wall, common.drain_rows(), ok)
+        write_bench_json(name, wall, common.drain_rows(),
+                         common.drain_timings(), ok)
         print(f"# {name} done in {wall:.1f}s")
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 
 from ..core.energy import eta_factor
 from ..fleet.state import DeviceState, FleetConfig, FleetStatics
+from ..telemetry.export import TelemetrySummary
 
 _F32 = np.float32
 
@@ -278,6 +279,9 @@ class Observation:
     carry: DeviceState
     miss_rate: np.ndarray       # (D,) — jobs missed during the last segment
     ctx: AdapterContext
+    #: the last segment's telemetry (counters already delta-ed against the
+    #: previous boundary) when the run threads ``telemetry=``; None otherwise
+    telemetry: Optional[TelemetrySummary] = None
 
 
 class Controller:
@@ -448,6 +452,7 @@ class OnlineAdapter:
             c.reset(cfg, self.statics)
         self._ctx: Optional[AdapterContext] = None
         self._prev_carry: Optional[DeviceState] = None
+        self._prev_summary: Optional[TelemetrySummary] = None
 
     @property
     def eta_hat(self) -> Optional[np.ndarray]:
@@ -459,9 +464,18 @@ class OnlineAdapter:
         return None
 
     def hook(self, seg: int, t_end: float, cfg: FleetConfig,
-             carry: DeviceState) -> FleetConfig:
+             carry: DeviceState,
+             telemetry: Optional[TelemetrySummary] = None) -> FleetConfig:
         """``run_segments`` hook: measure, run every controller, rewrite the
-        tunable config fields for the next segment."""
+        tunable config fields for the next segment.
+
+        When the run threads ``telemetry=`` the hook receives the cumulative
+        :class:`TelemetrySummary`; the miss-rate measurement then comes from
+        the summary's segment delta — identical to the legacy carry diff
+        (both difference the same step counters), but without fetching the
+        ``(D, K)`` accumulator leaves a second time, and the controllers see
+        the full summary (slack, occupancy, exit depths) via
+        ``Observation.telemetry``."""
         if self._ctx is None:
             self._ctx = AdapterContext(
                 statics=self.statics,
@@ -473,9 +487,16 @@ class OnlineAdapter:
                 # re-widen it
                 base_persistent=np.asarray(cfg.persistent),
             )
-        rate = miss_rate(carry, self._prev_carry)
+        seg_summary = None
+        if telemetry is not None:
+            seg_summary = telemetry.delta(self._prev_summary)
+            self._prev_summary = telemetry
+            rate = seg_summary.miss_rate
+        else:
+            rate = miss_rate(carry, self._prev_carry)
         obs = Observation(seg=seg, t_end=float(t_end), cfg=cfg, carry=carry,
-                          miss_rate=rate, ctx=self._ctx)
+                          miss_rate=rate, ctx=self._ctx,
+                          telemetry=seg_summary)
         upd: dict = {}
         entry: dict = dict(seg=seg, t_end=float(t_end),
                            miss_rate=rate.copy(),

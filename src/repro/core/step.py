@@ -287,14 +287,46 @@ def finish_counts(params: StepParams, st: DeviceCarry, mask: jax.Array,
     return per_task(sched), per_task(corr), per_task(miss)
 
 
+class StepTrace(NamedTuple):
+    """Per-step event descriptors of ONE device transition (telemetry's
+    in-scan emission; see :mod:`repro.telemetry.trace` for the decoding).
+
+    Every retirement a step can produce flows through exactly one of three
+    channels, each bounded to at most one event per task (admission order
+    admits one release per task per step; same-task deadlines are spaced a
+    full period apart, far more than ``dt`` at realistic ppm-scale clock
+    drift) — so fixed-size ``(K,)`` words capture a step losslessly and the
+    telemetry reduction never needs the ``(Q,)`` queue axis after the scan.
+
+    Word packing (0 = no event): ``exited + 2`` in bits 0-5, the task id in
+    bits 6-10 where present, ``job + 1`` in the bits above.  The ``*_dl``
+    floats carry the retiring slot's deadline *register* (so slack needs no
+    reconstruction); garbage where the matching word is 0.
+    """
+
+    adm: jax.Array       # (K,) i32: insert | dropped << 1 | evict << 2
+    evict: jax.Array     # (K,) i32: victim (job+1)<<11 | task<<6 | exited+2
+    evict_dl: jax.Array  # (K,) f32: victim q_deadline
+    expire: jax.Array    # (K,) i32: expired (job+1)<<6 | exited+2
+    expire_dl: jax.Array  # (K,) f32: expired-slot q_deadline
+    complete: jax.Array  # i32: retiring job_done (job+1)<<11|task<<6|exited+2
+    complete_dl: jax.Array  # f32: completed slot q_deadline
+
+
 def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
-          live: bool = False) -> DeviceCarry:
+          live: bool = False, trace: bool = False):
     """Admit at most one released job per task (the builder asserts
     dt < period).  The static python loop over the task axis admits in task
     order — the same order the scalar path's stable release sort yields for
-    simultaneous releases."""
+    simultaneous releases.
+
+    ``trace`` (python-level, so the plain path's program is untouched)
+    additionally returns the admission/eviction descriptor words of
+    :class:`StepTrace` — read from registers the stage already computed.
+    """
     q = statics.queue_size
     n_tasks = params.period.shape[0]
+    tr_adm, tr_evict, tr_evict_dl = [], [], []
     for k in range(n_tasks):
         rel_time = st.next_rel[k].astype(_F32) * params.period[k]
         releasing = (st.next_rel[k] < params.n_releases[k]) & (rel_time <= t)
@@ -317,6 +349,19 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
         dropped = releasing & ~insert   # queue overflow, nothing evictable
         k_hot = jnp.arange(n_tasks) == k
 
+        if trace:
+            # the victim's pre-step registers (a just-admitted job has
+            # q_exited == -1, so it is never evictable — victims always
+            # hold jobs that were queued before this step began)
+            tr_adm.append(insert.astype(jnp.int32)
+                          + (dropped.astype(jnp.int32) << 1)
+                          + (evict.astype(jnp.int32) << 2))
+            tr_evict.append(jnp.where(
+                evict,
+                ((st.q_job[victim] + 1) << 11) + (st.q_task[victim] << 6)
+                + (st.q_exited[victim] + 2), 0).astype(jnp.int32))
+            tr_evict_dl.append(st.q_deadline[victim].astype(_F32))
+
         st = st._replace(
             next_rel=st.next_rel.at[k].add(releasing),
             q_active=(st.q_active & ~vmask) | ins,
@@ -338,22 +383,43 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
             m_correct=st.m_correct + d_corr,
             m_misses=st.m_misses + d_miss + (dropped & k_hot),
         )
+    if trace:
+        return st, (jnp.stack(tr_adm), jnp.stack(tr_evict),
+                    jnp.stack(tr_evict_dl))
     return st
 
 
 def drop_expired(params: StepParams, st: DeviceCarry, t,
-                 live: bool = False) -> DeviceCarry:
+                 live: bool = False, trace: bool = False,
+                 q_active_pre=None):
     # the device expires jobs against its *drifting* clock (fleet CHRT
     # model): a fast clock (drift > 0) drops jobs before their true deadline
     t_read = t * (1.0 + params.clock_drift)
     expired = st.q_active & (t_read >= st.q_deadline)
     d_sched, d_corr, d_miss = finish_counts(params, st, expired, live)
-    return st._replace(
+    new = st._replace(
         q_active=st.q_active & ~expired,
         m_scheduled=st.m_scheduled + d_sched,
         m_correct=st.m_correct + d_corr,
         m_misses=st.m_misses + d_miss,
     )
+    if trace:
+        # at most one same-task deadline crosses per dt (deadlines are a
+        # period apart), so a single packed word per task is lossless; the
+        # q_active_pre guard drops jobs admitted this very step, which the
+        # delta-view reference (step_events) never counts as retirements
+        n_tasks = params.period.shape[0]
+        exp = expired if q_active_pre is None else expired & q_active_pre
+        word = ((st.q_job + 1) << 6) + (st.q_exited + 2)
+        onehot = exp[:, None] & (st.q_task[:, None]
+                                 == jnp.arange(n_tasks)[None, :])
+        tr_exp = jnp.sum(
+            jnp.where(onehot, word[:, None], 0), axis=0).astype(jnp.int32)
+        tr_exp_dl = jnp.sum(
+            jnp.where(onehot, st.q_deadline[:, None], 0.0),
+            axis=0).astype(_F32)
+        return new, (tr_exp, tr_exp_dl)
+    return new
 
 
 def pick_inputs(params: StepParams, st: DeviceCarry, t,
@@ -434,7 +500,7 @@ def pick(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
 
 def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
                e_new, statics: StepStatics, live: bool = False,
-               outcomes=None) -> DeviceCarry:
+               outcomes=None, trace: bool = False, q_active_pre=None):
     """Advance the selected job by dt; handle unit/job completion.
 
     ``live``/``outcomes`` form the live-profile hook
@@ -516,7 +582,21 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
     rr_cursor = jnp.where(is_rr & done_any, jnp.mod(tk_sel + 1, n_tasks),
                           st.rr_cursor).astype(jnp.int32)
     sel_hot = jnp.arange(n_tasks) == tk_sel
-    return st._replace(
+    if trace:
+        # only the selected slot can complete, so one scalar word per step
+        # covers the job_done channel; the q_active_pre guard excludes a
+        # job admitted and finished within the same step (no q_active flag
+        # change, so the delta-view reference never sees it retire).
+        # exited >= 0 always holds at job_done (full_mand backfills it).
+        jd_sel = job_done[sel]
+        if q_active_pre is not None:
+            jd_sel = jd_sel & q_active_pre[sel]
+        tr_comp = jnp.where(
+            jd_sel,
+            ((st.q_job[sel] + 1) << 11) + (tk_sel << 6) + (exited[sel] + 2),
+            0).astype(jnp.int32)
+        tr_comp_dl = st.q_deadline[sel].astype(_F32)
+    out = st._replace(
         energy=e_new,
         was_off=was_off,
         rr_cursor=rr_cursor,
@@ -538,15 +618,91 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
         m_idle=st.m_idle + idle_inc,
         m_wasted=st.m_wasted + jnp.where(reboot, 0.5 * frag_t, 0.0),
     )
+    if trace:
+        return out, (tr_comp, tr_comp_dl)
+    return out
 
 
 def device_step(params: StepParams, st: DeviceCarry, t,
-                statics: StepStatics) -> DeviceCarry:
-    """One full per-device transition: admit -> expire -> pick -> apply."""
+                statics: StepStatics, trace: bool = False):
+    """One full per-device transition: admit -> expire -> pick -> apply.
+
+    ``trace=True`` (a python flag: the plain program is byte-identical)
+    additionally returns the step's :class:`StepTrace` descriptor words —
+    the in-scan fold :mod:`repro.telemetry.trace` consumes them.
+    """
+    if trace:
+        act0 = st.q_active
+        st, (tr_adm, tr_ev, tr_ev_dl) = admit(params, st, t, statics,
+                                              trace=True)
+        st, (tr_exp, tr_exp_dl) = drop_expired(params, st, t, trace=True,
+                                               q_active_pre=act0)
+        sel, picked, run, e_new = pick(params, st, t, statics)
+        st, (tr_comp, tr_comp_dl) = apply_step(
+            params, st, t, sel, picked, run, e_new, statics, trace=True,
+            q_active_pre=act0)
+        return st, StepTrace(adm=tr_adm, evict=tr_ev, evict_dl=tr_ev_dl,
+                             expire=tr_exp, expire_dl=tr_exp_dl,
+                             complete=tr_comp, complete_dl=tr_comp_dl)
     st = admit(params, st, t, statics)
     st = drop_expired(params, st, t)
     sel, picked, run, e_new = pick(params, st, t, statics)
     return apply_step(params, st, t, sel, picked, run, e_new, statics)
+
+
+class StepEvents(NamedTuple):
+    """Observable events of ONE device transition, derived purely from the
+    ``(before, after)`` carry pair — the single source of truth consumed by
+    :mod:`repro.telemetry`.
+
+    Deriving events from carry *deltas* (rather than instrumenting the
+    transition stages) keeps the step math byte-for-byte identical whether
+    or not anyone is watching: the counters below are differences of the
+    same ``m_*`` accumulators the metrics already use, so telemetry totals
+    reconcile exactly against :class:`StepResult`, and the per-slot fields
+    are best-effort reads of the queue registers at retirement (a slot
+    recycled by an admit-evict in the same step reports its *pre-step*
+    registers).
+    """
+
+    releases: jax.Array      # i32: jobs released this step (sum over tasks)
+    misses: jax.Array        # i32: deadline misses this step
+    scheduled: jax.Array     # i32: on-time completions this step
+    retired: jax.Array       # (Q,) bool: slots that left the queue
+    slack: jax.Array         # (Q,) f32: deadline - t_end for retired slots
+    exit_depth: jax.Array    # (Q,) i32: q_exited at retirement (-1 = never)
+    power_fail: jax.Array    # bool: the device powered down this step
+    reboots: jax.Array       # i32: reboot-count delta
+    queue_occ: jax.Array     # i32: active queue slots after the step
+    energy: jax.Array        # f32: capacitor energy after the step
+
+
+def step_events(st0: DeviceCarry, st1: DeviceCarry, t,
+                statics: StepStatics) -> StepEvents:
+    """Derive :class:`StepEvents` from one transition's before/after carries.
+
+    Pure, per-device (vmap adds the fleet axis), and read-only — calling it
+    cannot perturb the simulation.  ``retired`` covers both cleared slots
+    and slots recycled for a new job by an overflow-evict in the same step;
+    for the latter the pre-step registers are reported.
+    """
+    recycled = st0.q_active & st1.q_active & (
+        (st1.q_job != st0.q_job) | (st1.q_task != st0.q_task))
+    retired = (st0.q_active & ~st1.q_active) | recycled
+    t_end = t + statics.dt
+    return StepEvents(
+        releases=jnp.sum(st1.next_rel - st0.next_rel).astype(jnp.int32),
+        misses=jnp.sum(st1.m_misses - st0.m_misses).astype(jnp.int32),
+        scheduled=jnp.sum(
+            st1.m_scheduled - st0.m_scheduled).astype(jnp.int32),
+        retired=retired,
+        slack=(st0.q_deadline - t_end).astype(_F32),
+        exit_depth=jnp.where(recycled, st0.q_exited, st1.q_exited),
+        power_fail=st1.was_off & ~st0.was_off,
+        reboots=(st1.m_reboots - st0.m_reboots).astype(jnp.int32),
+        queue_occ=jnp.sum(st1.q_active).astype(jnp.int32),
+        energy=st1.energy.astype(_F32),
+    )
 
 
 def finalize(params: StepParams, st: DeviceCarry,

@@ -20,6 +20,11 @@ Public API::
     result, carry = fleet.run_segments(cfg, statics, n_segments=8, hook=...)
     cfg, statics = fleet.from_sim_config(tasks, harv, eta, cap, sim)
     result.task_scheduled / result.task_released         # (D, K) on-time
+
+Observability (``repro.telemetry``): pass ``telemetry=TelemetryConfig()``
+to ``simulate_fleet`` / ``run_segments`` to additionally return a
+``(D, ...)`` ``Telemetry`` pytree of in-scan counters, histograms, and
+event rings — bit-exact against the uninstrumented run by construction.
 """
 from .grid import (  # noqa: F401
     SweepGrid,

@@ -46,6 +46,7 @@ array analogue of the scalar simulator's rotation at each pick.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Callable, Optional
 
 import numpy as np
@@ -55,10 +56,17 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core import step as S
+from ..telemetry import export as T_export
+from ..telemetry import state as T
+from ..telemetry import trace as T_trace
 from .state import DeviceState, FleetConfig, FleetResult, FleetStatics, \
     init_state
 
 _F32 = jnp.float32
+
+#: the FleetConfig fields adaptation hooks may rewrite mid-trajectory —
+#: run_segments diffs them after each hook to stamp knob-update telemetry
+TUNABLE_FIELDS = ("eta", "e_opt", "exit_thr", "use_exit_thr", "persistent")
 
 
 def _pick_pallas(cfg: FleetConfig, states: DeviceState, t,
@@ -119,6 +127,123 @@ def _scan_steps(cfg: FleetConfig, states: DeviceState, i0,
     return states
 
 
+def _fleet_step_trace(cfg: FleetConfig, states: DeviceState, i,
+                      statics: FleetStatics, use_pallas: bool):
+    """Descriptor-emitting twin of :func:`_fleet_step`: the same stages in
+    the same order, additionally returning the step's packed
+    :class:`repro.core.step.StepTrace` event words (a few bytes/device)."""
+    t = i.astype(_F32) * statics.dt
+    if not use_pallas:
+        return jax.vmap(
+            lambda c, s: S.device_step(c, s, t, statics, trace=True)
+        )(cfg, states)
+    act0 = states.q_active
+    states, (tr_adm, tr_ev, tr_ev_dl) = jax.vmap(
+        lambda c, s: S.admit(c, s, t, statics, trace=True))(cfg, states)
+    states, (tr_exp, tr_exp_dl) = jax.vmap(
+        lambda c, s, a0: S.drop_expired(c, s, t, trace=True,
+                                        q_active_pre=a0)
+    )(cfg, states, act0)
+    sel, picked, run, e_new = _pick_pallas(cfg, states, t, statics)
+    states, (tr_comp, tr_comp_dl) = jax.vmap(
+        lambda c, s, a, p, r, e, a0: S.apply_step(
+            c, s, t, a, p, r, e, statics, trace=True, q_active_pre=a0)
+    )(cfg, states, sel, picked, run, e_new, act0)
+    return states, S.StepTrace(adm=tr_adm, evict=tr_ev, evict_dl=tr_ev_dl,
+                               expire=tr_exp, expire_dl=tr_exp_dl,
+                               complete=tr_comp, complete_dl=tr_comp_dl)
+
+
+def _pack_spec(cfg: FleetConfig, statics: FleetStatics,
+               tel: T.Telemetry) -> T_trace.PackSpec:
+    return T_trace.make_pack_spec(int(cfg.period.shape[1]),
+                                  statics.queue_size,
+                                  int(tel.exit_hist.shape[1]))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("statics", "n_steps", "use_pallas", "level"))
+def _scan_steps_trace(cfg: FleetConfig, states: DeviceState,
+                      tel: T.Telemetry, i0, statics: FleetStatics,
+                      n_steps: int, use_pallas: bool, level: str):
+    """Like :func:`_scan_steps`, but emitting the telemetry columns of the
+    requested collection tier and reducing them into ``tel`` once per
+    segment, after the scan but inside the same jit.
+
+    ``"counters"`` reuses the plain step body and emits three registers it
+    already computed; ``"full"`` runs the descriptor-emitting step twin and
+    emits the bit-packed event columns (:class:`repro.telemetry.trace
+    .PackSpec`), which are also returned for the sparse host-side
+    ring/histogram fold (``None`` at the counters tier)."""
+    st0 = states
+    if level == "counters":
+        def step(states, i):
+            new = _fleet_step(cfg, states, i, statics, use_pallas)
+            return new, T_trace.emit_counters(new)
+
+        states, ys = lax.scan(step, states, i0 + jnp.arange(n_steps))
+        return states, T_trace.reduce_counters(tel, st0, states, ys,
+                                               n_steps), None
+
+    spec = _pack_spec(cfg, statics, tel)
+
+    def step(states, i):
+        new, tr = _fleet_step_trace(cfg, states, i, statics, use_pallas)
+        return new, T_trace.emit_full(spec, tr, states, new)
+
+    states, ys = lax.scan(step, states, i0 + jnp.arange(n_steps))
+    tel, ring = T_trace.reduce_full(spec, tel, st0, states, ys, i0,
+                                    n_steps, statics.dt)
+    return states, tel, ring
+
+
+def _scan_steps_tel(cfg: FleetConfig, states: DeviceState, tel: T.Telemetry,
+                    i0, statics: FleetStatics, n_steps: int,
+                    use_pallas: bool,
+                    tcfg: T.TelemetryConfig):
+    """Telemetry-carrying twin of :func:`_scan_steps` (host wrapper).
+
+    The jitted scan emits the tier's telemetry columns and reduces the
+    dense statistics per segment; at the ``"full"`` tier the rare
+    ring/histogram events are then folded host-side from the packed
+    columns (:func:`repro.telemetry.trace.fold_events_host`, O(events)).
+    The simulation carry is asserted bit-exact against the uninstrumented
+    scan in ``tests/test_telemetry.py``, and the default-tier overhead is
+    gated < 5% in ``benchmarks/check_regression.py``."""
+    states, tel, ring = _scan_steps_trace(cfg, states, tel, i0, statics,
+                                          n_steps, use_pallas, tcfg.level)
+    if ring is not None:
+        tel = T_trace.fold_events_host(
+            _pack_spec(cfg, statics, tel), tel,
+            tuple(np.asarray(col) for col in ring), int(i0), statics.dt)
+    return states, tel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("statics", "n_steps", "use_pallas", "tcfg"))
+def _scan_steps_tel_reference(cfg: FleetConfig, states: DeviceState,
+                              tel: T.Telemetry, i0, statics: FleetStatics,
+                              n_steps: int, use_pallas: bool,
+                              tcfg: T.TelemetryConfig):
+    """The slow reference: fold :func:`repro.telemetry.state.record_step`
+    from the before/after carry pair at every step, inside the scan.  Kept
+    as the semantic spec the trace pipeline is tested against (and as the
+    simplest possible implementation to read)."""
+    def step(carry, i):
+        states, tel = carry
+        t = i.astype(_F32) * statics.dt
+        new = _fleet_step(cfg, states, i, statics, use_pallas)
+        ev = jax.vmap(
+            lambda s0, s1: S.step_events(s0, s1, t, statics))(states, new)
+        tel = jax.vmap(lambda tl, e: T.record_step(tl, e, t))(tel, ev)
+        return (new, tel), None
+
+    (states, tel), _ = lax.scan(step, (states, tel),
+                                i0 + jnp.arange(n_steps))
+    return states, tel
+
+
 @functools.partial(jax.jit, static_argnames=("statics", "live"))
 def finalize_fleet(cfg: FleetConfig, states: DeviceState,
                    statics: FleetStatics, live: bool = False) -> FleetResult:
@@ -129,14 +254,8 @@ def finalize_fleet(cfg: FleetConfig, states: DeviceState,
 
 
 @functools.partial(jax.jit, static_argnames=("statics", "use_pallas"))
-def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
-                   use_pallas: bool = False) -> FleetResult:
-    """Simulate every device in ``cfg`` in one jitted scan.
-
-    Returns a :class:`FleetResult` of ``(D,)`` metric arrays — plus
-    ``(D, K)`` per-task breakdowns — aligned with the device axis of ``cfg``
-    (see :func:`repro.fleet.grid.sweep` for the grid bookkeeping).
-    """
+def _simulate_fleet_plain(cfg: FleetConfig, statics: FleetStatics,
+                          use_pallas: bool = False) -> FleetResult:
     states0 = jax.vmap(lambda c: init_state(c, statics))(cfg)
 
     def step(states, i):
@@ -146,9 +265,87 @@ def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
     return jax.vmap(lambda c, s: S.finalize(c, s, statics))(cfg, states)
 
 
+def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
+                   use_pallas: bool = False,
+                   telemetry: Optional[T.TelemetryConfig] = None):
+    """Simulate every device in ``cfg`` in one jitted scan.
+
+    Returns a :class:`FleetResult` of ``(D,)`` metric arrays — plus
+    ``(D, K)`` per-task breakdowns — aligned with the device axis of ``cfg``
+    (see :func:`repro.fleet.grid.sweep` for the grid bookkeeping).
+
+    ``telemetry`` (a :class:`repro.telemetry.TelemetryConfig`)
+    additionally instruments the scan and returns
+    ``(FleetResult, Telemetry)``: the scan emits a few telemetry columns
+    per step and the statistics reduce once per segment
+    (:mod:`repro.telemetry.trace`) — at the default ``"counters"`` tier
+    that is near-free; the ``"full"`` tier adds per-step event
+    descriptors, with the rare ring/histogram events folded host-side.
+    With the default ``None`` the instrumentation is compiled out
+    entirely — the emitted program is the pre-telemetry one, and the
+    FleetResult is bit-exact either way.
+    """
+    if telemetry is None:
+        return _simulate_fleet_plain(cfg, statics, use_pallas)
+    res, tel, ring = _simulate_fleet_tel(cfg, statics, use_pallas, telemetry)
+    if ring is not None:
+        tel = T_trace.fold_events_host(
+            _pack_spec(cfg, statics, tel), tel,
+            tuple(np.asarray(col) for col in ring), 0, statics.dt)
+    return res, tel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("statics", "use_pallas", "telemetry"))
+def _simulate_fleet_tel(cfg: FleetConfig, statics: FleetStatics,
+                        use_pallas: bool, telemetry: T.TelemetryConfig):
+    """One fused program for the instrumented monolithic run — init, scan,
+    telemetry reduction, and finalize dispatch together, exactly like
+    :func:`_simulate_fleet_plain` (four separate dispatches would charge
+    the telemetry path for unfused init/finalize kernels the plain path
+    fuses away, polluting the measured overhead)."""
+    states0 = jax.vmap(lambda c: init_state(c, statics))(cfg)
+    tel0 = T.init_fleet_telemetry(telemetry, cfg)
+    states, tel, ring = _scan_steps_trace(
+        cfg, states0, tel0, jnp.int32(0), statics, statics.n_steps,
+        use_pallas, telemetry.level)
+    res = jax.vmap(lambda c, s: S.finalize(c, s, statics))(cfg, states)
+    return res, tel, ring
+
+
 # hook signature: (segment_index, t_end, cfg, carry) -> new cfg or None
+# (hooks that also declare a ``telemetry`` keyword additionally receive the
+# cumulative TelemetrySummary when telemetry is enabled)
 SegmentHook = Callable[[int, float, FleetConfig, DeviceState],
                        Optional[FleetConfig]]
+
+
+def _hook_takes_telemetry(hook) -> bool:
+    """Does ``hook`` accept a ``telemetry=`` keyword?  Bare 4-arg hooks stay
+    supported unchanged; hooks opt into summaries by naming the kwarg (or
+    taking **kwargs)."""
+    try:
+        sig = inspect.signature(hook)
+    except (TypeError, ValueError):
+        return False
+    params = sig.parameters.values()
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return True
+    return "telemetry" in sig.parameters
+
+
+def _knob_change_mask(old_cfg: FleetConfig, new_cfg: FleetConfig):
+    """(D,) bool: which devices had any TUNABLE_FIELDS leaf rewritten by a
+    hook (host-side numpy compare; runs once per segment boundary)."""
+    changed = None
+    for f in TUNABLE_FIELDS:
+        a = np.asarray(getattr(old_cfg, f))
+        b = np.asarray(getattr(new_cfg, f))
+        diff = a != b
+        while diff.ndim > 1:          # per-task knobs: any task changed
+            diff = diff.any(axis=-1)
+        changed = diff if changed is None else (changed | diff)
+    return changed
 
 
 def run_segments(cfg: FleetConfig, statics: FleetStatics,
@@ -157,7 +354,9 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
                  carry: Optional[DeviceState] = None,
                  start_step: int = 0,
                  use_pallas: bool = False,
-                 mesh=None) -> tuple[FleetResult, DeviceState]:
+                 mesh=None,
+                 telemetry: Optional[T.TelemetryConfig] = None,
+                 telemetry_carry: Optional[T.Telemetry] = None):
     """Segment-at-a-time fleet simulation over the checkpointable carry.
 
     Splits the scan over steps ``[start_step, statics.n_steps)`` into
@@ -188,8 +387,19 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
     run through the same jitted step body, only the carry round-trips
     through host memory between chunks.
 
+    ``telemetry`` (a static :class:`repro.telemetry.TelemetryConfig`)
+    threads a ``(D, ...)`` :class:`repro.telemetry.Telemetry` pytree
+    alongside the carry and changes the return to
+    ``(FleetResult, DeviceState, Telemetry)``.  Hooks that declare a
+    ``telemetry`` keyword then receive the cumulative
+    :class:`repro.telemetry.TelemetrySummary` at each boundary, and config
+    rewrites by hooks are stamped into the telemetry as ``knob_update``
+    events.  ``telemetry_carry`` resumes a prior telemetry pytree the same
+    way ``carry`` resumes the simulation.  The simulation numerics are
+    identical either way — only the return arity changes.
+
     Returns ``(FleetResult, DeviceState)`` — the finalized metrics and the
-    end-of-horizon carry.
+    end-of-horizon carry — plus the ``Telemetry`` when enabled.
     """
     remaining = statics.n_steps - int(start_step)
     if not 0 <= int(start_step) <= statics.n_steps:
@@ -199,6 +409,8 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
         raise ValueError(
             f"n_segments must be in [1, {max(remaining, 1)}], "
             f"got {n_segments}")
+    if telemetry is None and telemetry_carry is not None:
+        raise ValueError("telemetry_carry requires telemetry=TelemetryConfig")
     n_real = cfg.n_devices
     if mesh is not None:
         from ..launch.sharding import shard_fleet_carry, shard_fleet_config
@@ -206,20 +418,47 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
         cfg = shard_fleet_config(mesh, cfg)
         if carry is not None:
             carry = shard_fleet_carry(mesh, carry)
+        if telemetry_carry is not None:
+            telemetry_carry = shard_fleet_carry(mesh, telemetry_carry)
     if carry is None:
         carry = init_fleet(cfg, statics)
+    tel = None
+    if telemetry is not None:
+        tel = telemetry_carry
+        if tel is None:
+            tel = T.init_fleet_telemetry(telemetry, cfg)
+            if mesh is not None:
+                from ..launch.sharding import shard_fleet_carry
+
+                tel = shard_fleet_carry(mesh, tel)
+    hook_wants_tel = hook is not None and telemetry is not None \
+        and _hook_takes_telemetry(hook)
 
     sizes = [len(c) for c in np.array_split(np.arange(remaining),
                                             n_segments)]
     i0 = int(start_step)
     for seg, n in enumerate(sizes):
         if n:
-            carry = _scan_steps(cfg, carry, jnp.int32(i0), statics, n,
-                                use_pallas)
+            if telemetry is None:
+                carry = _scan_steps(cfg, carry, jnp.int32(i0), statics, n,
+                                    use_pallas)
+            else:
+                carry, tel = _scan_steps_tel(
+                    cfg, carry, tel, jnp.int32(i0), statics, n, use_pallas,
+                    telemetry)
             i0 += n
         if hook is not None:
-            new_cfg = hook(seg, i0 * statics.dt, cfg, carry)
+            t_end = i0 * statics.dt
+            if hook_wants_tel:
+                new_cfg = hook(seg, t_end, cfg, carry,
+                               telemetry=T_export.summarize(tel, t_end))
+            else:
+                new_cfg = hook(seg, t_end, cfg, carry)
             if new_cfg is not None:
+                if telemetry is not None:
+                    changed = _knob_change_mask(cfg, new_cfg)
+                    if changed is not None and changed.any():
+                        tel = T.record_knob_updates(tel, changed, t_end)
                 cfg = new_cfg
                 if mesh is not None:
                     # keep hook-returned leaves placed like the carry (the
@@ -229,7 +468,11 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
     if mesh is not None and jax.tree.leaves(res)[0].shape[0] != n_real:
         res = jax.tree.map(lambda x: x[:n_real], res)
         carry = jax.tree.map(lambda x: x[:n_real], carry)
-    return res, carry
+        if tel is not None:
+            tel = jax.tree.map(lambda x: x[:n_real], tel)
+    if telemetry is None:
+        return res, carry
+    return res, carry, tel
 
 
 def simulate_fleet_sharded(cfg: FleetConfig, statics: FleetStatics,

@@ -68,6 +68,8 @@ from ..core.energy import Capacitor, Harvester
 from ..core.scheduler import JobProfile, TaskSpec
 from ..fleet import grid
 from ..fleet.simulator import finalize_fleet
+from ..telemetry import state as T
+from ..telemetry import trace as T_trace
 from ..fleet.state import (
     FleetConfig,
     FleetResult,
@@ -247,6 +249,7 @@ class FleetServeResult:
     carry: ServeCarry
     jobs: int
     wall_s: float
+    telemetry: Optional[T.Telemetry] = None
 
     @property
     def jobs_per_sec(self) -> float:
@@ -478,10 +481,28 @@ class FleetServeEngine:
         return ServeBank(centroids=cents, counts=counts)
 
     def _scan_steps(self, cfg: FleetConfig, tables: ServeTables,
-                    carry: ServeCarry, i0, *, statics: FleetStatics,
+                    carry, i0, tel=None, *, statics: FleetStatics,
                     n_steps: int, adapt: bool, shared: bool,
-                    per_dev_tables: bool) -> ServeCarry:
-        """Scan ``n_steps`` live timesteps from step index ``i0``."""
+                    per_dev_tables: bool,
+                    tcfg: Optional[T.TelemetryConfig] = None):
+        """Scan ``n_steps`` live timesteps from step index ``i0``.
+
+        With ``tcfg`` set, the scan emits the telemetry columns of the
+        requested tier and reduces them into ``tel`` post-scan, returning
+        ``(ServeCarry, Telemetry, ring_columns)``: at the ``"counters"``
+        tier the plain step body emits three registers it already computed
+        (``ring_columns`` is ``None``); at the ``"full"`` tier the stages
+        run their descriptor-emitting twins
+        (:class:`repro.core.step.StepTrace`), the events are bit-packed
+        per step, and the caller folds the rare ring/histogram events
+        host-side via :func:`repro.telemetry.trace.fold_events_host`.  The
+        serve numerics cannot change: tracing only adds outputs."""
+        trace = tcfg is not None and tcfg.level == "full"
+        counters = tcfg is not None and not trace
+        spec = (T_trace.make_pack_spec(int(cfg.period.shape[1]),
+                                       statics.queue_size,
+                                       int(cfg.unit_time.shape[-1]) + 1)
+                if trace else None)
         K = cfg.period.shape[1]
         u_max = cfg.unit_time.shape[2] - 1
         J = tables.labels.shape[-1]
@@ -506,11 +527,23 @@ class FleetServeEngine:
 
         def step(carry, i):
             dev, bank, log = carry
+            dev0 = dev
             t = i.astype(_F32) * statics.dt
-            dev = jax.vmap(
-                lambda c, s: S.admit(c, s, t, statics, True))(cfg, dev)
-            dev = jax.vmap(
-                lambda c, s: S.drop_expired(c, s, t, True))(cfg, dev)
+            act0 = dev.q_active
+            if trace:
+                dev, (tr_adm, tr_ev, tr_ev_dl) = jax.vmap(
+                    lambda c, s: S.admit(c, s, t, statics, True,
+                                         trace=True))(cfg, dev)
+                dev, (tr_exp, tr_exp_dl) = jax.vmap(
+                    lambda c, s, a0: S.drop_expired(c, s, t, True,
+                                                    trace=True,
+                                                    q_active_pre=a0)
+                )(cfg, dev, act0)
+            else:
+                dev = jax.vmap(
+                    lambda c, s: S.admit(c, s, t, statics, True))(cfg, dev)
+                dev = jax.vmap(
+                    lambda c, s: S.drop_expired(c, s, t, True))(cfg, dev)
             sel, picked, run, e_new = jax.vmap(
                 lambda c, s: S.pick(c, s, t, statics, True))(cfg, dev)
             (tk, u, job, complete, exited_pre, apass_pre, ddl, nu_sel,
@@ -527,10 +560,23 @@ class FleetServeEngine:
             pass_bank = margin > tables.thr[tk, u]
             passed = jnp.where(use_thr, margin > thr_cfg, pass_bank)
 
-            dev = jax.vmap(
-                lambda c, s, a, p, r, e, mg, ps, co: S.apply_step(
-                    c, s, t, a, p, r, e, statics, True, (mg, ps, co)))(
-                cfg, dev, sel, picked, run, e_new, margin, passed, correct)
+            if trace:
+                dev, (tr_comp, tr_comp_dl) = jax.vmap(
+                    lambda c, s, a, p, r, e, mg, ps, co, a0: S.apply_step(
+                        c, s, t, a, p, r, e, statics, True, (mg, ps, co),
+                        trace=True, q_active_pre=a0))(
+                    cfg, dev, sel, picked, run, e_new, margin, passed,
+                    correct, act0)
+                tr = S.StepTrace(adm=tr_adm, evict=tr_ev,
+                                 evict_dl=tr_ev_dl, expire=tr_exp,
+                                 expire_dl=tr_exp_dl, complete=tr_comp,
+                                 complete_dl=tr_comp_dl)
+            else:
+                dev = jax.vmap(
+                    lambda c, s, a, p, r, e, mg, ps, co: S.apply_step(
+                        c, s, t, a, p, r, e, statics, True, (mg, ps, co)))(
+                    cfg, dev, sel, picked, run, e_new, margin, passed,
+                    correct)
 
             # engine-owned utility-pass latch: adaptation fires at the FIRST
             # bank-threshold pass (like DynamicJobProfile — even under EDF,
@@ -582,18 +628,33 @@ class FleetServeEngine:
                 exit_unit=put(log.exit_unit, u, first_pass),
                 sched=put(log.sched, sched_now, mand_now),
             )
-            return ServeCarry(dev=dev, bank=bank, log=log), None
+            new_carry = ServeCarry(dev=dev, bank=bank, log=log)
+            if trace:
+                return new_carry, T_trace.emit_full(spec, tr, dev0, dev)
+            if counters:
+                return new_carry, T_trace.emit_counters(dev)
+            return new_carry, None
 
-        carry, _ = lax.scan(step, carry, i0 + jnp.arange(n_steps))
-        return carry
+        if tcfg is None:
+            carry, _ = lax.scan(step, carry, i0 + jnp.arange(n_steps))
+            return carry
+        st0 = carry.dev
+        carry, ys = lax.scan(step, carry, i0 + jnp.arange(n_steps))
+        if counters:
+            return carry, T_trace.reduce_counters(tel, st0, carry.dev, ys,
+                                                  n_steps), None
+        tel, ring = T_trace.reduce_full(spec, tel, st0, carry.dev, ys, i0,
+                                        n_steps, statics.dt)
+        return carry, tel, ring
 
     def _runner(self, statics: FleetStatics, n_steps: int, adapt: bool,
-                shared: bool, per_dev_tables: bool):
-        key = (statics, n_steps, adapt, shared, per_dev_tables)
+                shared: bool, per_dev_tables: bool, tcfg=None):
+        key = (statics, n_steps, adapt, shared, per_dev_tables, tcfg)
         if key not in self._runners:
             self._runners[key] = jax.jit(functools.partial(
                 self._scan_steps, statics=statics, n_steps=n_steps,
-                adapt=adapt, shared=shared, per_dev_tables=per_dev_tables))
+                adapt=adapt, shared=shared, per_dev_tables=per_dev_tables,
+                tcfg=tcfg))
         return self._runners[key]
 
     # ------------------------------------------------------------------ #
@@ -609,6 +670,7 @@ class FleetServeEngine:
         n_segments: int = 1,
         carry: Optional[ServeCarry] = None,
         mesh=None,
+        telemetry: Optional[T.TelemetryConfig] = None,
     ) -> FleetServeResult:
         """Serve every request stream live through one jitted fleet scan.
 
@@ -617,7 +679,11 @@ class FleetServeEngine:
         ``carry`` resumes from a previous run's carry.  ``mesh`` places the
         carry/config/tables with the device axis partitioned
         (:func:`repro.launch.sharding.shard_serve_carry`; ``D`` must be a
-        mesh-size multiple).
+        mesh-size multiple).  ``telemetry`` (a
+        :class:`repro.telemetry.TelemetryConfig`) threads a ``(D, ...)``
+        telemetry pytree through the serve scan and fills
+        ``FleetServeResult.telemetry`` — the serve outcome itself is
+        bit-exact either way.
         """
         cfg, statics, tables, carry0, per_dev = self.build(
             requests, n_devices, seeds=seeds)
@@ -625,8 +691,11 @@ class FleetServeEngine:
             carry0 = carry
         adapt = bool(self.config.adapt)
         shared = self.bank_mode == "shared"
+        tel = (None if telemetry is None
+               else T.init_fleet_telemetry(telemetry, cfg))
         if mesh is not None:
             from ..launch.sharding import (
+                shard_fleet_carry,
                 shard_fleet_config,
                 shard_serve_carry,
                 shard_serve_tables,
@@ -639,6 +708,8 @@ class FleetServeEngine:
             cfg = shard_fleet_config(mesh, cfg)
             carry0 = shard_serve_carry(mesh, carry0, shared_bank=shared)
             tables = shard_serve_tables(mesh, tables, per_device=per_dev)
+            if tel is not None:
+                tel = shard_fleet_carry(mesh, tel)
 
         sizes = [len(c) for c in
                  np.array_split(np.arange(statics.n_steps), n_segments)]
@@ -648,8 +719,20 @@ class FleetServeEngine:
         for n in sizes:
             if not n:
                 continue
-            out = self._runner(statics, n, adapt, shared, per_dev)(
-                cfg, tables, out, jnp.int32(i0))
+            runner = self._runner(statics, n, adapt, shared, per_dev,
+                                  telemetry)
+            if telemetry is None:
+                out = runner(cfg, tables, out, jnp.int32(i0))
+            else:
+                out, tel, ring = runner(cfg, tables, out, jnp.int32(i0),
+                                        tel)
+                if ring is not None:
+                    spec = T_trace.make_pack_spec(
+                        int(cfg.period.shape[1]), statics.queue_size,
+                        int(tel.exit_hist.shape[1]))
+                    tel = T_trace.fold_events_host(
+                        spec, tel, tuple(np.asarray(c) for c in ring),
+                        i0, statics.dt)
             i0 += n
         fleet = finalize_fleet(cfg, out.dev, statics, live=True)
         jax.block_until_ready(fleet)
@@ -667,4 +750,5 @@ class FleetServeEngine:
             carry=out,
             jobs=int(np.asarray(fleet.released).sum()),
             wall_s=wall,
+            telemetry=tel,
         )

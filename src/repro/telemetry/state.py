@@ -1,0 +1,234 @@
+"""The jit-safe telemetry carry: fixed-size ring buffers + counters.
+
+Zygarde's claims are *rate* claims — tasks scheduled on time, misses
+avoided, accuracy per joule — but the scan frontends only expose end-of-run
+aggregates, and everything the adaptation controllers react to vanishes
+when the segment scan completes.  This module defines the observability
+state that rides *alongside* the simulation carry through every scan:
+
+* :class:`TelemetryConfig` — hashable static configuration (a ``jax.jit``
+  static argument).  Passing ``None`` wherever a config is accepted keeps
+  the instrumented code paths compiled out entirely: the disabled hot path
+  is byte-for-byte the pre-telemetry program.
+* :class:`Telemetry` — the per-device pytree of counters, running
+  sums/extrema, an exit-depth histogram, and one fixed-size event ring
+  buffer.  No device axis; ``jax.vmap`` adds it, exactly like
+  :class:`repro.core.step.DeviceCarry` — so the fleet telemetry is a
+  ``(D, ...)`` pytree that checkpoints and shards like a segment carry
+  (:func:`repro.launch.sharding.shard_fleet_carry` applies unchanged).
+* :func:`record_step` — folds one transition's
+  :class:`repro.core.step.StepEvents` into the telemetry.  Strictly
+  read-only with respect to the simulation: events are derived from carry
+  *deltas* (:func:`repro.core.step.step_events`), so enabling telemetry
+  cannot change a single bit of ``FleetResult`` — the parity tests in
+  ``tests/test_telemetry.py`` assert exact equality, not tolerances.
+
+Ring-buffer semantics: ``ring_head`` counts every event ever pushed; the
+write index is ``head % ring_size``, so overflow overwrites the oldest
+entry while the head keeps the true total (the host export reports how many
+were dropped).  At most one event per kind is pushed per step, carrying the
+step's aggregate as its value — misses this step, mean completion slack,
+capacitor energy at power-down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import step as S
+
+_F32 = jnp.float32
+_I32 = jnp.int32
+
+#: event kinds recorded in the ring buffer (ring_kind values)
+EVENT_KINDS = {
+    "miss": 0,         # val = deadline misses this step
+    "complete": 1,     # val = mean deadline slack of this step's completions
+    "power_fail": 2,   # val = capacitor energy at the power-down
+    "reboot": 3,       # val = reboots this step
+    "knob_update": 4,  # val = 1.0; host-pushed at adaptation boundaries
+}
+EVENT_NAMES = {v: k for k, v in EVENT_KINDS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Hashable static telemetry configuration (jit static argument).
+
+    ``level`` selects the collection tier:
+
+    * ``"counters"`` (default) — the always-on tier: event counters,
+      occupancy and energy running stats.  Everything is either telescoped
+      from the simulation carry's own accumulators or read from registers
+      the step already produced, so the scan gains three narrow output
+      columns and nothing else — measured indistinguishable from the
+      uninstrumented scan (and gated < 5% in CI).  Retirement slack, the
+      exit histogram, and the event rings stay at their init values.
+    * ``"full"`` — additionally collects per-retirement slack statistics,
+      the exit-depth histogram, and the event ring buffers.  This tier
+      needs per-step event descriptors and costs a measured double-digit
+      percentage on the vmap fleet path (reported as
+      ``telemetry_full_overhead_pct`` by ``benchmarks/bench_fleet.py``);
+      use it for debugging and trace export, not always-on monitoring.
+
+    ``ring_size`` bounds the per-device event ring; counters and histograms
+    are unaffected by it.  ``None`` (no config at all) — not a field here —
+    is how callers disable telemetry; a constructed config is always "on".
+    """
+
+    ring_size: int = 256
+    level: str = "counters"
+
+    def __post_init__(self):
+        if self.ring_size < 1:
+            raise ValueError(
+                f"ring_size must be >= 1, got {self.ring_size}")
+        if self.level not in ("counters", "full"):
+            raise ValueError(
+                f"level must be 'counters' or 'full', got {self.level!r}")
+
+
+class Telemetry(NamedTuple):
+    """Per-device telemetry carry (no device axis; vmap adds it).
+
+    Counters accumulate the same deltas the step core's ``m_*`` metric
+    accumulators do, so cumulative telemetry reconciles exactly against the
+    carry's accumulators (``sum(m_misses)`` etc.) at any segment boundary.
+    (The finalized :class:`repro.core.step.StepResult` additionally flushes
+    still-in-flight jobs and never-released jobs at the horizon, which no
+    step-wise counter can see.)
+    """
+
+    # event counters (i32 scalars)
+    c_release: jax.Array     # jobs released
+    c_miss: jax.Array        # deadline misses
+    c_sched: jax.Array       # on-time completions
+    c_retired: jax.Array     # queue slots retired (completed or expired)
+    c_power_fail: jax.Array  # run -> off transitions (capacitor exhausted)
+    c_reboot: jax.Array      # reboots after a power-down
+    c_knob: jax.Array        # controller knob updates (host-pushed)
+    # deadline slack at retirement (f32; slack < 0 means the job missed)
+    slack_sum: jax.Array
+    slack_min: jax.Array     # +inf until the first retirement
+    # exit-depth histogram over retired jobs, (U + 1,) i32:
+    # bins 0..U-1 = utility-test exit at that unit, bin U = never exited
+    exit_hist: jax.Array
+    # queue occupancy / capacitor energy running stats
+    occ_sum: jax.Array       # i32: sum over steps of active slots
+    occ_max: jax.Array       # i32
+    energy_sum: jax.Array    # f32: sum over steps of capacitor energy
+    energy_min: jax.Array    # f32
+    n_steps: jax.Array       # i32: steps observed
+    # the event ring buffer, (R,) each + the monotone head counter
+    ring_t: jax.Array        # f32 event times
+    ring_kind: jax.Array     # i32 EVENT_KINDS values
+    ring_val: jax.Array      # f32 per-kind payload
+    ring_head: jax.Array     # i32: total events ever pushed
+
+
+def init_telemetry(tcfg: TelemetryConfig, n_units: int) -> Telemetry:
+    """The t=0 telemetry for ONE device (``n_units`` = padded unit depth U;
+    the exit histogram gets U+1 bins, the last one for never-exited jobs).
+    Call under ``vmap`` — or broadcast via :func:`init_fleet_telemetry` —
+    for a fleet."""
+    r = tcfg.ring_size
+    zero_i = jnp.zeros((), _I32)
+    zero_f = jnp.zeros((), _F32)
+    return Telemetry(
+        c_release=zero_i, c_miss=zero_i, c_sched=zero_i, c_retired=zero_i,
+        c_power_fail=zero_i, c_reboot=zero_i, c_knob=zero_i,
+        slack_sum=zero_f,
+        slack_min=jnp.full((), jnp.inf, _F32),
+        exit_hist=jnp.zeros((n_units + 1,), _I32),
+        occ_sum=zero_i, occ_max=zero_i,
+        energy_sum=zero_f,
+        energy_min=jnp.full((), jnp.inf, _F32),
+        n_steps=zero_i,
+        ring_t=jnp.zeros((r,), _F32),
+        ring_kind=jnp.full((r,), -1, _I32),
+        ring_val=jnp.zeros((r,), _F32),
+        ring_head=zero_i,
+    )
+
+
+def init_fleet_telemetry(tcfg: TelemetryConfig,
+                         cfg: S.StepParams) -> Telemetry:
+    """Stacked ``(D, ...)`` telemetry for every device in a fleet config."""
+    tel = init_telemetry(tcfg, int(cfg.unit_time.shape[-1]))
+    d = cfg.n_devices
+    return jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (d,) + leaf.shape), tel)
+
+
+def _push(tel: Telemetry, mask, kind: int, val, t) -> Telemetry:
+    """Append one event to the ring where ``mask`` holds (jit-safe: the
+    write is a masked self-assignment when it doesn't)."""
+    idx = jnp.mod(tel.ring_head, tel.ring_t.shape[0])
+    return tel._replace(
+        ring_t=tel.ring_t.at[idx].set(
+            jnp.where(mask, jnp.asarray(t, _F32), tel.ring_t[idx])),
+        ring_kind=tel.ring_kind.at[idx].set(
+            jnp.where(mask, kind, tel.ring_kind[idx])),
+        ring_val=tel.ring_val.at[idx].set(
+            jnp.where(mask, jnp.asarray(val, _F32), tel.ring_val[idx])),
+        ring_head=tel.ring_head + mask.astype(_I32),
+    )
+
+
+def record_step(tel: Telemetry, ev: S.StepEvents, t) -> Telemetry:
+    """Fold one transition's events into the telemetry (per device).
+
+    Pure accumulation — no reads of the simulation carry, so the step
+    numerics cannot be perturbed.  Rings receive at most one event per kind
+    per step, carrying the step aggregate as the payload.
+    """
+    n_bins = tel.exit_hist.shape[0]
+    depth = jnp.where(ev.exit_depth >= 0,
+                      jnp.clip(ev.exit_depth, 0, n_bins - 2), n_bins - 1)
+    hist_inc = jnp.sum(
+        ev.retired[:, None] & (depth[:, None] == jnp.arange(n_bins)[None, :]),
+        axis=0).astype(_I32)
+    n_retired = jnp.sum(ev.retired).astype(_I32)
+    slack_step = jnp.sum(jnp.where(ev.retired, ev.slack, 0.0))
+    slack_min_step = jnp.min(jnp.where(ev.retired, ev.slack, jnp.inf))
+
+    tel = tel._replace(
+        c_release=tel.c_release + ev.releases,
+        c_miss=tel.c_miss + ev.misses,
+        c_sched=tel.c_sched + ev.scheduled,
+        c_retired=tel.c_retired + n_retired,
+        c_power_fail=tel.c_power_fail + ev.power_fail.astype(_I32),
+        c_reboot=tel.c_reboot + ev.reboots,
+        slack_sum=tel.slack_sum + slack_step,
+        slack_min=jnp.minimum(tel.slack_min, slack_min_step),
+        exit_hist=tel.exit_hist + hist_inc,
+        occ_sum=tel.occ_sum + ev.queue_occ,
+        occ_max=jnp.maximum(tel.occ_max, ev.queue_occ),
+        energy_sum=tel.energy_sum + ev.energy,
+        energy_min=jnp.minimum(tel.energy_min, ev.energy),
+        n_steps=tel.n_steps + 1,
+    )
+    mean_slack = slack_step / jnp.maximum(n_retired, 1)
+    tel = _push(tel, ev.misses > 0, EVENT_KINDS["miss"],
+                ev.misses.astype(_F32), t)
+    tel = _push(tel, n_retired > 0, EVENT_KINDS["complete"], mean_slack, t)
+    tel = _push(tel, ev.power_fail, EVENT_KINDS["power_fail"], ev.energy, t)
+    tel = _push(tel, ev.reboots > 0, EVENT_KINDS["reboot"],
+                ev.reboots.astype(_F32), t)
+    return tel
+
+
+@jax.jit
+def record_knob_updates(tel: Telemetry, changed, t) -> Telemetry:
+    """Host-boundary event: an adaptation hook rewrote the tunable config
+    fields of the devices in ``changed`` (a ``(D,)`` bool mask).  Pushed by
+    :func:`repro.fleet.simulator.run_segments` after each hook call."""
+    def per_device(tl, ch):
+        tl = tl._replace(c_knob=tl.c_knob + ch.astype(_I32))
+        return _push(tl, ch, EVENT_KINDS["knob_update"], 1.0, t)
+
+    return jax.vmap(per_device, in_axes=(0, 0))(
+        tel, jnp.asarray(changed, bool))

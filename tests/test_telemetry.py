@@ -1,0 +1,268 @@
+"""Telemetry contract tests: numerics-neutrality, tier equivalence
+against the in-scan reference fold, ring overflow, and the JSONL export
+round-trip.
+
+The load-bearing claims, in order:
+
+1. Enabling telemetry cannot change the simulation — the ``FleetResult``
+   (and the serve outcome) are asserted *bit-exact* against the
+   uninstrumented run, at both collection tiers.
+2. The fast collection paths (:mod:`repro.telemetry.trace` — telescoped
+   counters, packed per-step descriptors, sparse host event fold) are
+   equivalent to the simplest possible implementation: folding
+   :func:`repro.telemetry.state.record_step` at every step inside the
+   scan (``_scan_steps_tel_reference``).  Integer fields must match
+   exactly; float accumulators to summation-order tolerance.
+3. Ring overflow keeps the *latest* events and the monotone head keeps
+   the true total.
+4. What the :class:`repro.telemetry.TelemetryLogger` writes, ``read_jsonl``
+   reads back and ``repro.telemetry.report`` renders without error.
+"""
+import io
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import fleet
+from repro.core import energy
+from repro.fleet.simulator import (
+    _scan_steps,
+    _scan_steps_tel,
+    _scan_steps_tel_reference,
+    init_fleet,
+)
+from repro.telemetry import (
+    EVENT_KINDS,
+    TelemetryConfig,
+    TelemetryLogger,
+    init_fleet_telemetry,
+    read_jsonl,
+    summarize,
+)
+from repro.telemetry import report as tel_report
+
+from _workloads import make_task
+
+#: telemetry fields that must be integer-exact vs the reference fold
+INT_FIELDS = ("c_release", "c_miss", "c_sched", "c_retired", "c_power_fail",
+              "c_reboot", "c_knob", "exit_hist", "occ_sum", "occ_max",
+              "n_steps", "ring_kind", "ring_head")
+#: the fields the default "counters" tier collects
+COUNTER_FIELDS = ("c_release", "c_miss", "c_sched", "c_reboot",
+                  "c_power_fail", "occ_sum", "occ_max", "energy_sum",
+                  "energy_min", "n_steps")
+
+
+def _grid(horizon=6.0, seeds=(0, 1)):
+    """A small intermittent-power grid (16 devices by default) that
+    actually produces misses, power failures, and reboots."""
+    return fleet.SweepGrid(
+        task=make_task(n_jobs=10),
+        policies=("zygarde", "edf"),
+        etas=(0.5, 0.9),
+        harvesters=(energy.Harvester("rf", 0.93, 0.93, 0.07),),
+        capacitors=(energy.Capacitor(capacitance_f=0.01),
+                    energy.Capacitor(capacitance_f=0.05)),
+        seeds=seeds,
+        horizon=horizon,
+    )
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg, statics, _ = fleet.build(_grid())
+    return cfg, statics
+
+
+def _assert_tel_close(tel, ref, fields):
+    for f in fields:
+        a = np.asarray(getattr(tel, f))
+        b = np.asarray(getattr(ref, f))
+        if f in INT_FIELDS:
+            np.testing.assert_array_equal(a, b, err_msg=f)
+        elif f in ("slack_sum", "energy_sum", "ring_val"):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4,
+                                       err_msg=f)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6,
+                                       err_msg=f)
+
+
+@pytest.mark.parametrize("level", ["counters", "full"])
+def test_fleet_result_bit_exact(built, level):
+    """Enabling telemetry changes nothing: every FleetResult leaf equal."""
+    cfg, statics = built
+    plain = fleet.simulate_fleet(cfg, statics)
+    res, tel = fleet.simulate_fleet(
+        cfg, statics, telemetry=TelemetryConfig(ring_size=32, level=level))
+    for f, a, b in zip(plain._fields, plain, res):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f)
+    assert int(np.asarray(tel.n_steps)[0]) == statics.n_steps
+
+
+@pytest.mark.parametrize("level", ["counters", "full"])
+@pytest.mark.parametrize("n_segments", [1, 3])
+def test_trace_matches_reference(built, level, n_segments):
+    """The fast collection path == record_step folded at every step."""
+    cfg, statics = built
+    tcfg = TelemetryConfig(ring_size=64, level=level)
+    tel = init_fleet_telemetry(tcfg, cfg)
+    ref = init_fleet_telemetry(tcfg, cfg)
+    st = sr = init_fleet(cfg, statics)
+    sizes = [len(c) for c in
+             np.array_split(np.arange(statics.n_steps), n_segments)]
+    i0 = 0
+    for n in sizes:
+        st, tel = _scan_steps_tel(cfg, st, tel, jnp.int32(i0), statics, n,
+                                  False, tcfg)
+        sr, ref = _scan_steps_tel_reference(cfg, sr, ref, jnp.int32(i0),
+                                            statics, n, False, tcfg)
+        i0 += n
+    # the instrumented carry is bit-exact vs the uninstrumented scan
+    plain = _scan_steps(cfg, init_fleet(cfg, statics), jnp.int32(0),
+                        statics, statics.n_steps, False)
+    for f, a, b in zip(st._fields, st, plain):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f)
+    if level == "full":
+        _assert_tel_close(tel, ref, ref._fields)
+    else:
+        _assert_tel_close(tel, ref, COUNTER_FIELDS)
+        # everything the counters tier doesn't collect stays at init
+        init = init_fleet_telemetry(tcfg, cfg)
+        for f in ("c_retired", "slack_sum", "slack_min", "exit_hist",
+                  "ring_head", "ring_kind"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(tel, f)), np.asarray(getattr(init, f)),
+                err_msg=f)
+
+
+def test_ring_overflow_keeps_latest(built):
+    """A tiny ring overflows: the head counts every push, the buffer holds
+    the newest events — matching the reference fold slot for slot."""
+    cfg, statics = built
+    tcfg = TelemetryConfig(ring_size=4, level="full")
+    tel = init_fleet_telemetry(tcfg, cfg)
+    ref = init_fleet_telemetry(tcfg, cfg)
+    st = init_fleet(cfg, statics)
+    _, tel = _scan_steps_tel(cfg, st, tel, jnp.int32(0), statics,
+                             statics.n_steps, False, tcfg)
+    _, ref = _scan_steps_tel_reference(cfg, st, ref, jnp.int32(0), statics,
+                                       statics.n_steps, False, tcfg)
+    heads = np.asarray(tel.ring_head)
+    assert heads.max() > 4, "workload produced too few events to overflow"
+    _assert_tel_close(tel, ref, ("ring_head", "ring_kind", "ring_t",
+                                 "ring_val"))
+
+
+@pytest.mark.parametrize("level", ["counters", "full"])
+def test_serve_bit_exact(trained_cnn, mnist_tiny, level):
+    """FleetServeEngine: telemetry on/off produces identical serve output."""
+    from repro.core.agile import AgileCNN
+    from repro.serve import FleetServeEngine, Request, ServeConfig
+
+    ds = mnist_tiny
+    reqs = [Request(ds.x_test[i], int(ds.y_test[i]), release=i * 2.0)
+            for i in range(4)]
+    scfg = ServeConfig(policy="zygarde", period=2.0, deadline=1.5,
+                       horizon=10.0, adapt=False, start_charged=True,
+                       sim_dt=0.05)
+    harv = energy.Harvester("battery", 1.0, 0.0, 1.0)
+
+    def engine():
+        model = AgileCNN(trained_cnn.cfg, trained_cnn.params,
+                         list(trained_cnn.bank))
+        return FleetServeEngine([model], harv, eta=1.0, config=scfg,
+                                feature_batch=1)
+
+    base = engine().run([reqs], n_devices=2)
+    out = engine().run([reqs], n_devices=2,
+                       telemetry=TelemetryConfig(ring_size=16, level=level))
+    for f in ("units", "pred", "correct", "margin", "exit_unit", "sched"):
+        np.testing.assert_array_equal(getattr(base, f), getattr(out, f),
+                                      err_msg=f)
+    for f, a, b in zip(base.fleet._fields, base.fleet, out.fleet):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f)
+    assert base.telemetry is None
+    tel = out.telemetry
+    assert tel is not None
+    assert (np.asarray(tel.n_steps) == np.asarray(tel.n_steps)[0]).all()
+    assert np.asarray(tel.c_release).sum() > 0
+    if level == "full":
+        assert np.asarray(tel.c_retired).sum() > 0
+
+
+def test_jsonl_roundtrip_and_report(built, tmp_path):
+    """Segmented run -> JSONL stream -> read_jsonl -> report.render."""
+    cfg, statics = built
+    tcfg = TelemetryConfig(ring_size=32, level="full")
+    path = tmp_path / "telemetry.jsonl"
+    segments = []
+
+    with TelemetryLogger(path, label="unit_test") as log:
+        log.meta(statics, tcfg, n_devices=cfg.n_devices)
+
+        def hook(seg, t_end, c, carry, telemetry=None):
+            segments.append(telemetry)
+            log.segment(seg, telemetry)
+            # rewrite a tunable knob so knob-update telemetry fires
+            return c._replace(eta=c.eta * 0.99) if seg == 0 else None
+
+        _, _, tel = fleet.run_segments(cfg, statics, n_segments=3,
+                                       hook=hook, telemetry=tcfg)
+        n_events = log.drain_rings(tel)
+
+    assert len(segments) == 3 and all(s is not None for s in segments)
+    assert n_events > 0
+    # the hook's knob rewrite was stamped into the telemetry
+    assert np.asarray(tel.c_knob).sum() > 0
+
+    records = read_jsonl(path)
+    kinds = {r["event"] for r in records}
+    assert {"meta", "summary"} <= kinds
+    events = [r for r in records if r["event"] in EVENT_KINDS]
+    assert events, "no ring events in the stream"
+    assert any(r["event"] == "knob_update" for r in events)
+    assert all({"device", "t", "val"} <= r.keys() for r in events)
+    # every line is valid standalone JSON (streamable)
+    for line in path.read_text().splitlines():
+        json.loads(line)
+
+    out = io.StringIO()
+    tel_report.render(path, out=out)
+    text = out.getvalue()
+    assert "unit_test" in text and "segment" in text.lower()
+
+    # the cumulative summary agrees with the last segment summary
+    final = summarize(tel, statics.horizon)
+    assert final.n_devices == cfg.n_devices
+    np.testing.assert_allclose(final.miss_rate.mean(),
+                               segments[-1].miss_rate.mean(), rtol=1e-6)
+
+
+def test_summary_feeds_adapter_hook(built):
+    """run_segments passes a TelemetrySummary to telemetry-aware hooks
+    (the OnlineAdapter integration surface)."""
+    cfg, statics = built
+    seen = []
+
+    def hook(seg, t_end, c, carry, telemetry=None):
+        seen.append(telemetry)
+        return None
+
+    fleet.run_segments(cfg, statics, n_segments=2, hook=hook,
+                       telemetry=TelemetryConfig(ring_size=8))
+    assert len(seen) == 2
+    for s in seen:
+        assert s is not None
+        assert s.miss_rate.shape == (cfg.n_devices,)
+    # without telemetry the same hook still runs, receiving None
+    seen.clear()
+    fleet.run_segments(cfg, statics, n_segments=2, hook=hook)
+    assert seen == [None, None]
