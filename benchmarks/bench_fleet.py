@@ -1,5 +1,7 @@
 """Fleet-simulator throughput: scalar python loop vs one jitted
-``vmap``/``scan`` call vs the Pallas fleet_priority inner step.
+``vmap``/``scan`` call vs the Pallas fleet_priority inner step vs the
+fused whole-horizon kernel (``mode="fused"``: one ``pallas_call`` per
+run, :mod:`repro.kernels.fleet_step`).
 
 Sweeps the paper's scheduler grid (policy × eta × harvester × capacitor ×
 seed) at 1000 device-configs and reports devices/sec for each execution
@@ -88,16 +90,18 @@ def _grid(task, horizon):
     )
 
 
-def _measure_fleet(cfg, statics, label, *, use_pallas=False, repeats=5):
+def _measure_fleet(cfg, statics, label, *, use_pallas=False, mode=None,
+                   repeats=5):
     """AOT compile + steady-state timing of one simulate_fleet variant
     (roofline-joined under ``--profile``); returns (Measurement, result)."""
     meas = profiling.measure(
-        lambda c: fleet.simulate_fleet(c, statics, use_pallas=use_pallas),
+        lambda c: fleet.simulate_fleet(c, statics, use_pallas=use_pallas,
+                                       mode=mode),
         cfg, label=label, repeats=repeats, warmup=1)
     if common.PROFILE:
         meas = profiling.roofline_join(meas)
     meas.extra.pop("_compiled", None)
-    res = fleet.simulate_fleet(cfg, statics, use_pallas=use_pallas)
+    res = fleet.simulate_fleet(cfg, statics, use_pallas=use_pallas, mode=mode)
     return meas, res
 
 
@@ -218,6 +222,14 @@ def run(quick: bool = True) -> None:
     assert (np.asarray(res_k4.task_scheduled).sum(axis=1)
             == np.asarray(res_k4.scheduled)).all()
 
+    # fused mode: the whole horizon in ONE pallas_call (interpret on CPU —
+    # this validates the fused dispatch shape and bit-exactness; the
+    # throughput claim belongs to compiled TPU backends)
+    fused_m, res_fu = _measure_fleet(cfg, statics, "fleet_fused",
+                                     mode="fused", repeats=3)
+    assert (np.asarray(res_v.scheduled)
+            == np.asarray(res_fu.scheduled)).all()
+
     jsonl = _emit_telemetry_jsonl(cfg, statics)
     print(f"# telemetry stream -> {jsonl}")
 
@@ -245,6 +257,16 @@ def run(quick: bool = True) -> None:
              statics=statics4,
              k1_relative=round(vmap_m.steady_s / k4_m.steady_s, 3)),
     ]
+    # fused row APPENDED LAST: check_regression matches rows positionally,
+    # so existing baselines keep their indices.  The rate rides its own
+    # key (fused_device_steps_per_sec) so the gate can band it separately
+    # from the compiled-path expectations.
+    fused_row = _row(fused_m, mode="fused_interpret", devices=n_dev,
+                     n_tasks=1, statics=statics,
+                     speedup=round(n_dev / fused_m.steady_s / scalar_rate, 1))
+    fused_row["fused_device_steps_per_sec"] = fused_row.pop(
+        "device_steps_per_sec")
+    rows.append(fused_row)
     emit("fleet_throughput", rows)
 
 

@@ -47,9 +47,11 @@ FRESH_DIR = ROOT / "experiments"
 BASELINE_DIR = FRESH_DIR / "baselines"
 
 #: higher-is-better machine-dependent metrics, gated with the wide band
+#: (fused_device_steps_per_sec is the fused-kernel fleet mode — interpret
+#: mode on CPU runners, so only the wide band is meaningful there)
 THROUGHPUT_KEYS = ("device_steps_per_sec", "devices_per_sec",
                    "candidates_per_sec", "windows_per_sec",
-                   "jobs_per_sec")
+                   "jobs_per_sec", "fused_device_steps_per_sec")
 #: row fields that identify a row (checked, never gated)
 IDENTITY_KEYS = ("mode", "n_segments", "budget", "devices", "n_tasks")
 

@@ -37,6 +37,7 @@ argument).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import NamedTuple
@@ -50,6 +51,86 @@ from jax import lax
 from . import policy as P
 
 _F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# Batched indexing helpers with a frontend-selected lowering.
+#
+# The stages below run in three very different execution contexts: scalar
+# (one device, no batch axes), under ``vmap`` (fleet axis stripped), and
+# *inside a Pallas kernel tile* with a ``(block_d,)`` device axis attached to
+# every leaf (repro.kernels.fleet_step).  Mosaic supports neither gathers nor
+# 1-D iota, so inside the kernel every table lookup is phrased as a one-hot
+# iota contraction over the trailing axis; on the XLA frontends the same
+# lookup lowers to ``take_along_axis`` (a cheap batched gather — the one-hot
+# form is ~10x slower there: three passes over Q*N per lookup vs Q reads).
+# The two lowerings are bit-exact against each other: exactly one lane is
+# hot and ``x + 0.0 == x`` / ``x | False == x``, and every call site with a
+# possibly-invalid index (-1 sentinels) masks the looked-up value
+# downstream.  The transition logic itself is written ONCE; only this
+# helper switches, under :func:`onehot_lowering` (entered by the fused
+# kernel body around its time loop).  All reductions and index reads use
+# trailing-axis (-1/-2) conventions so arbitrary leading batch axes ride
+# along untouched.
+# --------------------------------------------------------------------------- #
+
+_ONEHOT_ONLY = False
+
+
+@contextlib.contextmanager
+def onehot_lowering():
+    """Trace-time switch: lower table lookups as one-hot iota contractions
+    (Mosaic kernels — no gather support) instead of ``take_along_axis``."""
+    global _ONEHOT_ONLY
+    prev = _ONEHOT_ONLY
+    _ONEHOT_ONLY = True
+    try:
+        yield
+    finally:
+        _ONEHOT_ONLY = prev
+
+
+def _oh_eq(idx, n: int):
+    """One-hot of ``idx`` over a new trailing axis of size ``n`` (bool)."""
+    iota = lax.broadcasted_iota(jnp.int32, idx.shape + (n,), idx.ndim)
+    return iota == idx[..., None]
+
+
+def _take(table, idx):
+    """``table[..., idx]`` over the trailing axis.
+
+    ``table``: ``(..., N)``; ``idx``: int ``(..., Q)`` with the same leading
+    axes -> ``(..., Q)`` in ``table.dtype``.  Exact: one hot lane (one-hot
+    lowering) / clamped gather (XLA lowering); call sites mask any slot
+    whose index can be out of range.
+    """
+    if not _ONEHOT_ONLY:
+        lead = jnp.broadcast_shapes(table.shape[:-1], idx.shape[:-1])
+        return jnp.take_along_axis(
+            jnp.broadcast_to(table, lead + table.shape[-1:]),
+            jnp.broadcast_to(idx, lead + idx.shape[-1:]),
+            axis=-1, mode="clip")
+    oh = _oh_eq(idx, table.shape[-1])          # (..., Q, N)
+    t = table[..., None, :]                    # (..., 1, N)
+    if table.dtype == jnp.bool_:
+        return jnp.any(oh & t, axis=-1)
+    return jnp.sum(jnp.where(oh, t, jnp.zeros((), table.dtype)), axis=-1)
+
+
+def _take1(table, idx):
+    """``table[..., idx]`` for a single per-device index."""
+    return _take(table, idx[..., None])[..., 0]
+
+
+def _flat2(t):
+    """Collapse the two trailing axes (e.g. (..., K, U) -> (..., K*U))."""
+    return t.reshape(t.shape[:-2] + (t.shape[-2] * t.shape[-1],))
+
+
+def _flat3(t):
+    """Collapse the three trailing axes ((..., K, J, U) -> (..., K*J*U))."""
+    return t.reshape(
+        t.shape[:-3] + (t.shape[-3] * t.shape[-2] * t.shape[-1],))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -267,22 +348,28 @@ def init_carry(params: StepParams, statics: StepStatics) -> DeviceCarry:
 def finish_counts(params: StepParams, st: DeviceCarry, mask: jax.Array,
                   live: bool = False):
     """Tally (scheduled, correct, missed) for the queue slots in ``mask``,
-    broken down per task — ``(K,)`` int arrays each.  ``live`` reads the
-    slot's live correctness register instead of the replay table."""
-    n_tasks = params.period.shape[0]
+    broken down per task — ``(..., K)`` int arrays each.  ``live`` reads the
+    slot's live correctness register instead of the replay table.
+
+    Batch-polymorphic and gather-free: leading axes on every leaf (vmap's
+    device axis, or a Pallas tile's block axis) ride along untouched."""
+    n_tasks = params.period.shape[-1]
     tk = jnp.clip(st.q_task, 0, n_tasks - 1)
     sched = mask & (st.q_mand_time >= 0.0) & (st.q_mand_time <= st.q_deadline)
     if live:
         corr = sched & (st.q_last_pred >= 0) & st.q_correct
     else:
-        job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
-        lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
-        corr = sched & (st.q_last_pred >= 0) & params.correct[tk, job, lp]
+        n_jobs = params.margins.shape[-2]
+        n_u = params.margins.shape[-1]
+        job = jnp.clip(st.q_job, 0, n_jobs - 1)
+        lp = jnp.clip(st.q_last_pred, 0, n_u - 1)
+        corr = sched & (st.q_last_pred >= 0) & _take(
+            _flat3(params.correct), (tk * n_jobs + job) * n_u + lp)
     miss = mask & ~sched
-    onehot = tk[:, None] == jnp.arange(n_tasks)[None, :]   # (Q, K)
+    onehot = _oh_eq(tk, n_tasks)                           # (..., Q, K)
 
     def per_task(m):
-        return jnp.sum(m[:, None] & onehot, axis=0)
+        return jnp.sum(m[..., None] & onehot, axis=-2)
 
     return per_task(sched), per_task(corr), per_task(miss)
 
@@ -325,34 +412,39 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
     :class:`StepTrace` — read from registers the stage already computed.
     """
     q = statics.queue_size
-    n_tasks = params.period.shape[0]
+    n_tasks = params.period.shape[-1]
+    k_iota = lax.broadcasted_iota(jnp.int32, st.next_rel.shape,
+                                  st.next_rel.ndim - 1)       # (..., K)
     tr_adm, tr_evict, tr_evict_dl = [], [], []
     for k in range(n_tasks):
-        rel_time = st.next_rel[k].astype(_F32) * params.period[k]
-        releasing = (st.next_rel[k] < params.n_releases[k]) & (rel_time <= t)
+        nr_k = st.next_rel[..., k]
+        rel_time = nr_k.astype(_F32) * params.period[..., k]
+        releasing = (nr_k < params.n_releases[..., k]) & (rel_time <= t)
 
         free = ~st.q_active
-        has_free = jnp.any(free)
+        has_free = jnp.any(free, axis=-1)
         # overflow: evict the earliest-deadline job whose mandatory part is
         # done (optional-only work yields to the new arrival — mandatory
         # first, §5.2)
         evictable = st.q_active & (st.q_exited >= 0)
-        has_evict = jnp.any(evictable)
-        victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf))
+        has_evict = jnp.any(evictable, axis=-1)
+        victim = jnp.argmin(jnp.where(evictable, st.q_deadline, jnp.inf),
+                            axis=-1)
         evict = releasing & ~has_free & has_evict
-        vmask = evict & (jnp.arange(q) == victim)
+        vmask = evict[..., None] & _oh_eq(victim, q)
         d_sched, d_corr, d_miss = finish_counts(params, st, vmask, live)
 
         insert = releasing & (has_free | has_evict)
-        slot = jnp.where(has_free, jnp.argmax(free), victim)
-        ins = insert & (jnp.arange(q) == slot)
+        slot = jnp.where(has_free, jnp.argmax(free, axis=-1), victim)
+        ins = insert[..., None] & _oh_eq(slot, q)
         dropped = releasing & ~insert   # queue overflow, nothing evictable
-        k_hot = jnp.arange(n_tasks) == k
+        k_hot = k_iota == k
 
         if trace:
             # the victim's pre-step registers (a just-admitted job has
             # q_exited == -1, so it is never evictable — victims always
-            # hold jobs that were queued before this step began)
+            # hold jobs that were queued before this step began).  Trace
+            # emission is per-device only (telemetry wraps it in vmap).
             tr_adm.append(insert.astype(jnp.int32)
                           + (dropped.astype(jnp.int32) << 1)
                           + (evict.astype(jnp.int32) << 2))
@@ -363,15 +455,16 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
             tr_evict_dl.append(st.q_deadline[victim].astype(_F32))
 
         st = st._replace(
-            next_rel=st.next_rel.at[k].add(releasing),
+            next_rel=st.next_rel + (k_hot & releasing[..., None]),
             q_active=(st.q_active & ~vmask) | ins,
-            q_release=jnp.where(ins, rel_time, st.q_release),
-            q_deadline=jnp.where(ins, rel_time + params.rel_deadline[k],
-                                 st.q_deadline),
+            q_release=jnp.where(ins, rel_time[..., None], st.q_release),
+            q_deadline=jnp.where(
+                ins, (rel_time + params.rel_deadline[..., k])[..., None],
+                st.q_deadline),
             q_task=jnp.where(ins, k, st.q_task),
-            q_job=jnp.where(ins, st.next_rel[k], st.q_job),
+            q_job=jnp.where(ins, nr_k[..., None], st.q_job),
             q_unit=jnp.where(ins, 0, st.q_unit),
-            q_time_left=jnp.where(ins, params.unit_time[k, 0],
+            q_time_left=jnp.where(ins, params.unit_time[..., k, 0][..., None],
                                   st.q_time_left),
             q_exited=jnp.where(ins, -1, st.q_exited),
             q_last_pred=jnp.where(ins, -1, st.q_last_pred),
@@ -381,7 +474,7 @@ def admit(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
             q_apass=jnp.where(ins, False, st.q_apass),
             m_scheduled=st.m_scheduled + d_sched,
             m_correct=st.m_correct + d_corr,
-            m_misses=st.m_misses + d_miss + (dropped & k_hot),
+            m_misses=st.m_misses + d_miss + (dropped[..., None] & k_hot),
         )
     if trace:
         return st, (jnp.stack(tr_adm), jnp.stack(tr_evict),
@@ -395,7 +488,7 @@ def drop_expired(params: StepParams, st: DeviceCarry, t,
     # the device expires jobs against its *drifting* clock (fleet CHRT
     # model): a fast clock (drift > 0) drops jobs before their true deadline
     t_read = t * (1.0 + params.clock_drift)
-    expired = st.q_active & (t_read >= st.q_deadline)
+    expired = st.q_active & (t_read[..., None] >= st.q_deadline)
     d_sched, d_corr, d_miss = finish_counts(params, st, expired, live)
     new = st._replace(
         q_active=st.q_active & ~expired,
@@ -408,7 +501,8 @@ def drop_expired(params: StepParams, st: DeviceCarry, t,
         # period apart), so a single packed word per task is lossless; the
         # q_active_pre guard drops jobs admitted this very step, which the
         # delta-view reference (step_events) never counts as retirements
-        n_tasks = params.period.shape[0]
+        # (per-device only, like every trace branch)
+        n_tasks = params.period.shape[-1]
         exp = expired if q_active_pre is None else expired & q_active_pre
         word = ((st.q_job + 1) << 6) + (st.q_exited + 2)
         onehot = exp[:, None] & (st.q_task[:, None]
@@ -428,34 +522,39 @@ def pick_inputs(params: StepParams, st: DeviceCarry, t,
     Pallas kernel: each slot gathers its own task's row of the (K, U) /
     (K, J, U) tables before the shared priority math runs.  ``live`` swaps
     the replayed utility margin for the slot's live margin register."""
-    n_tasks = params.period.shape[0]
+    n_tasks = params.period.shape[-1]
+    n_u = params.unit_time.shape[-1]
     tk = jnp.clip(st.q_task, 0, n_tasks - 1)
-    u = jnp.clip(st.q_unit, 0, params.unit_time.shape[1] - 1)
-    unit_t = params.unit_time[tk, u]
-    unit_e = params.unit_energy[tk, u]
-    gate_e = jnp.maximum(unit_e / params.fragments[tk], params.e_man)
+    u = jnp.clip(st.q_unit, 0, n_u - 1)
+    unit_t = _take(_flat2(params.unit_time), tk * n_u + u)
+    unit_e = _take(_flat2(params.unit_energy), tk * n_u + u)
+    gate_e = jnp.maximum(unit_e / _take(params.fragments, tk),
+                         params.e_man[..., None])
     drain = unit_e * (statics.dt / unit_t)
     if live:
         margin = st.q_margin
     else:
-        job = jnp.clip(st.q_job, 0, params.margins.shape[1] - 1)
-        lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[2] - 1)
-        margin = params.margins[tk, job, lp]
+        n_jobs = params.margins.shape[-2]
+        job = jnp.clip(st.q_job, 0, n_jobs - 1)
+        lp = jnp.clip(st.q_last_pred, 0, params.margins.shape[-1] - 1)
+        margin = _take(_flat3(params.margins),
+                       (tk * n_jobs + job) * params.margins.shape[-1] + lp)
     utility = jnp.where(st.q_last_pred >= 0, margin, 0.0)
     mandatory = st.q_exited < 0
     laxity = st.q_deadline - t
-    n_slots = params.events.shape[0]
+    n_slots = params.events.shape[-1]
     slot = jnp.minimum((t / statics.slot_s).astype(jnp.int32), n_slots - 1)
-    charge = params.events[slot] * params.power_on * statics.dt
+    amp = _take1(params.events, slot)
+    charge = amp * params.power_on * statics.dt
     # limited preemption: a slot mid-unit is forced until the unit boundary
     # (unless it expired or its slot was recycled for a newer job)
-    ls = jnp.clip(st.lock_slot, 0, st.q_active.shape[0] - 1)
-    locked = ((st.lock_slot >= 0) & st.q_active[ls]
-              & (st.q_job[ls] == st.lock_job))
+    ls = jnp.clip(st.lock_slot, 0, st.q_active.shape[-1] - 1)
+    locked = ((st.lock_slot >= 0) & _take1(st.q_active, ls)
+              & (_take1(st.q_job, ls) == st.lock_job))
     forced = jnp.where(locked, ls, -1).astype(jnp.int32)
     # rr task rotation: distance of each slot's task from the rr cursor
     # (identically 0 when K == 1, keeping the FIFO key bit-identical)
-    task_rank = jnp.mod(tk - st.rr_cursor, n_tasks).astype(_F32)
+    task_rank = jnp.mod(tk - st.rr_cursor[..., None], n_tasks).astype(_F32)
     return (laxity, utility, mandatory, gate_e, drain, charge, forced,
             task_rank)
 
@@ -487,21 +586,36 @@ def select_and_charge(scores, threshold, forced, energy, charge, capacity,
 
 def pick(params: StepParams, st: DeviceCarry, t, statics: StepStatics,
          live: bool = False):
-    """Priority-argmax + fused capacitor charge/discharge (pure-jnp path)."""
+    """Priority-argmax + fused capacitor charge/discharge (pure-jnp path).
+
+    Per-device operands enter ``policy_scores`` as ``x[..., None]`` so they
+    broadcast against the ``(..., Q)`` queue-shaped operands regardless of
+    leading batch axes; the threshold comes back ``(..., 1)`` and is
+    squeezed for :func:`select_and_charge`'s trailing-axis reduction."""
     (laxity, utility, mandatory, gate_e, drain, charge, forced,
      task_rank) = pick_inputs(params, st, t, statics, live)
     scores, thr = P.policy_scores(
-        params.policy, st.q_active, laxity, st.q_release, utility, mandatory,
-        params.alpha, params.beta, params.eta, st.energy, params.e_opt,
-        params.persistent, task_rank)
-    return select_and_charge(scores, thr, forced, st.energy, charge,
+        params.policy[..., None], st.q_active, laxity, st.q_release,
+        utility, mandatory, params.alpha[..., None], params.beta[..., None],
+        params.eta[..., None], st.energy[..., None], params.e_opt[..., None],
+        params.persistent[..., None], task_rank)
+    return select_and_charge(scores, thr[..., 0], forced, st.energy, charge,
                              params.capacity, gate_e, drain)
 
 
 def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
                e_new, statics: StepStatics, live: bool = False,
-               outcomes=None, trace: bool = False, q_active_pre=None):
+               outcomes=None, trace: bool = False, q_active_pre=None,
+               t_end=None):
     """Advance the selected job by dt; handle unit/job completion.
+
+    ``t_end`` is the step's end-of-interval clock.  Callers that know the
+    integer step index should pass ``(i + 1) * dt`` — a single correctly-
+    rounded multiply, bit-identical in every execution context.  The
+    ``t + dt`` fallback is a mul feeding an add, which compilers may
+    contract into a single-rounding FMA *differently per program* (the
+    fused Pallas kernel vs the vmap scan), drifting ``q_mand_time`` by
+    1 ulp and breaking carry bit-parity.
 
     ``live``/``outcomes`` form the live-profile hook
     (:mod:`repro.serve.fleet_engine`): ``outcomes`` is a
@@ -515,14 +629,16 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
     and bit-identical to before the hook existed.
     """
     q = statics.queue_size
-    n_tasks = params.period.shape[0]
-    u_max = params.unit_time.shape[1] - 1
-    oh = jnp.arange(q) == sel
+    n_tasks = params.period.shape[-1]
+    n_u = params.unit_time.shape[-1]
+    u_max = n_u - 1
+    oh = _oh_eq(sel, q)
     tk = jnp.clip(st.q_task, 0, n_tasks - 1)
-    tk_sel = tk[sel]
+    tk_sel = _take1(tk, sel)
 
-    u_sel = jnp.clip(st.q_unit[sel], 0, u_max)
-    frag_t = params.unit_time[tk_sel, u_sel] / params.fragments[tk_sel]
+    u_sel = jnp.clip(_take1(st.q_unit, sel), 0, u_max)
+    frag_t = (_take1(_flat2(params.unit_time), tk_sel * n_u + u_sel)
+              / _take1(params.fragments, tk_sel))
 
     # power-down / reboot bookkeeping (the initial cold boot counts wasted
     # half-fragment re-execution but not a reboot — matches the scalar path)
@@ -531,19 +647,22 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
     idle_inc = jnp.where(picked & ~run, statics.dt, 0.0)
 
     # execute dt of the selected unit
-    time_left = st.q_time_left - jnp.where(run & oh, statics.dt, 0.0)
-    complete = run & oh & (time_left <= statics.dt * 1e-3)
+    time_left = st.q_time_left - jnp.where(run[..., None] & oh,
+                                           statics.dt, 0.0)
+    complete = run[..., None] & oh & (time_left <= statics.dt * 1e-3)
 
     u = jnp.clip(st.q_unit, 0, u_max)
-    job = jnp.clip(st.q_job, 0, params.passes.shape[1] - 1)
-    n_units = params.n_units[tk]                   # (Q,) per-slot task depth
+    job = jnp.clip(st.q_job, 0, params.passes.shape[-2] - 1)
+    n_units = _take(params.n_units, tk)        # (..., Q) per-slot task depth
     next_u = jnp.clip(st.q_unit + 1, 0, u_max)
-    done_any = jnp.any(complete)
+    done_any = jnp.any(complete, axis=-1)
     mandatory = st.q_exited < 0
 
     last_pred = jnp.where(complete, u, st.q_last_pred)
     unit = jnp.where(complete, st.q_unit + 1, st.q_unit)
-    time_left = jnp.where(complete, params.unit_time[tk, next_u], time_left)
+    time_left = jnp.where(
+        complete, _take(_flat2(params.unit_time), tk * n_u + next_u),
+        time_left)
 
     # utility test at the unit boundary (imprecise policies only); tuned
     # per-unit thresholds (repro.adapt) re-evaluate the test against the
@@ -555,20 +674,26 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
         q_correct = jnp.where(complete, correct_sel, st.q_correct)
         st = st._replace(q_margin=q_margin, q_correct=q_correct)
     else:
-        passed = jnp.where(params.use_exit_thr,
-                           P.exit_test(params.margins[tk, job, u],
-                                       params.exit_thr[tk, u]),
-                           params.passes[tk, job, u])
-    exit_now = complete & params.imprecise & (st.q_exited < 0) & passed
+        n_jobs = params.margins.shape[-2]
+        kju = (tk * n_jobs + job) * n_u + u
+        passed = jnp.where(
+            params.use_exit_thr[..., None],
+            P.exit_test(_take(_flat3(params.margins), kju),
+                        _take(_flat2(params.exit_thr), tk * n_u + u)),
+            _take(_flat3(params.passes), kju))
+    exit_now = (complete & params.imprecise[..., None]
+                & (st.q_exited < 0) & passed)
     exited = jnp.where(exit_now, u, st.q_exited)
     # never-confident full execution => the whole DNN was mandatory
     full_mand = complete & (exited < 0) & (st.q_unit + 1 >= n_units)
     exited = jnp.where(full_mand, n_units - 1, exited)
-    t_end = t + statics.dt
+    if t_end is None:
+        t_end = t + statics.dt
     mand_time = jnp.where(exit_now | full_mand, t_end, st.q_mand_time)
 
     job_done = complete & (
-        (st.q_unit + 1 >= n_units) | (params.is_edfm & (exited >= 0))
+        (st.q_unit + 1 >= n_units)
+        | (params.is_edfm[..., None] & (exited >= 0))
     )
     st_done = st._replace(q_last_pred=last_pred, q_mand_time=mand_time)
     d_sched, d_corr, d_miss = finish_counts(params, st_done, job_done, live)
@@ -581,7 +706,7 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
     is_rr = params.policy == P.POLICY_IDS["rr"]
     rr_cursor = jnp.where(is_rr & done_any, jnp.mod(tk_sel + 1, n_tasks),
                           st.rr_cursor).astype(jnp.int32)
-    sel_hot = jnp.arange(n_tasks) == tk_sel
+    sel_hot = _oh_eq(tk_sel, n_tasks)
     if trace:
         # only the selected slot can complete, so one scalar word per step
         # covers the job_done channel; the q_active_pre guard excludes a
@@ -601,7 +726,8 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
         was_off=was_off,
         rr_cursor=rr_cursor,
         lock_slot=jnp.where(lock_on, sel, -1).astype(jnp.int32),
-        lock_job=jnp.where(lock_on, st.q_job[sel], -1).astype(jnp.int32),
+        lock_job=jnp.where(lock_on, _take1(st.q_job, sel),
+                           -1).astype(jnp.int32),
         q_active=st.q_active & ~job_done,
         q_unit=unit,
         q_time_left=time_left,
@@ -611,8 +737,9 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
         m_scheduled=st.m_scheduled + d_sched,
         m_correct=st.m_correct + d_corr,
         m_misses=st.m_misses + d_miss,
-        m_units=st.m_units + (done_any & sel_hot),
-        m_optional=st.m_optional + (done_any & ~mandatory[sel] & sel_hot),
+        m_units=st.m_units + (done_any[..., None] & sel_hot),
+        m_optional=st.m_optional + (
+            (done_any & ~_take1(mandatory, sel))[..., None] & sel_hot),
         m_reboots=st.m_reboots + (reboot & (st.m_busy > 0)),
         m_busy=st.m_busy + jnp.where(run, statics.dt, 0.0),
         m_idle=st.m_idle + idle_inc,
@@ -624,12 +751,14 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
 
 
 def device_step(params: StepParams, st: DeviceCarry, t,
-                statics: StepStatics, trace: bool = False):
+                statics: StepStatics, trace: bool = False, t_end=None):
     """One full per-device transition: admit -> expire -> pick -> apply.
 
     ``trace=True`` (a python flag: the plain program is byte-identical)
     additionally returns the step's :class:`StepTrace` descriptor words —
     the in-scan fold :mod:`repro.telemetry.trace` consumes them.
+    ``t_end`` forwards to :func:`apply_step` (see there for why callers
+    with the integer step index should pass ``(i + 1) * dt``).
     """
     if trace:
         act0 = st.q_active
@@ -640,14 +769,15 @@ def device_step(params: StepParams, st: DeviceCarry, t,
         sel, picked, run, e_new = pick(params, st, t, statics)
         st, (tr_comp, tr_comp_dl) = apply_step(
             params, st, t, sel, picked, run, e_new, statics, trace=True,
-            q_active_pre=act0)
+            q_active_pre=act0, t_end=t_end)
         return st, StepTrace(adm=tr_adm, evict=tr_ev, evict_dl=tr_ev_dl,
                              expire=tr_exp, expire_dl=tr_exp_dl,
                              complete=tr_comp, complete_dl=tr_comp_dl)
     st = admit(params, st, t, statics)
     st = drop_expired(params, st, t)
     sel, picked, run, e_new = pick(params, st, t, statics)
-    return apply_step(params, st, t, sel, picked, run, e_new, statics)
+    return apply_step(params, st, t, sel, picked, run, e_new, statics,
+                      t_end=t_end)
 
 
 class StepEvents(NamedTuple):
@@ -744,7 +874,8 @@ def simulate_device(params: StepParams, statics: StepStatics) -> StepResult:
 
     def step(st, i):
         return device_step(params, st, i.astype(_F32) * statics.dt,
-                           statics), None
+                           statics,
+                           t_end=(i + 1).astype(_F32) * statics.dt), None
 
     carry, _ = lax.scan(step, carry0, jnp.arange(statics.n_steps))
     return finalize(params, carry, statics)

@@ -37,6 +37,7 @@ from .grid import (  # noqa: F401
     sweep,
 )
 from .simulator import (  # noqa: F401
+    FLEET_MODES,
     finalize_fleet,
     init_fleet,
     run_segments,
@@ -48,4 +49,6 @@ from .state import (  # noqa: F401
     FleetConfig,
     FleetResult,
     FleetStatics,
+    pack_carry,
+    unpack_carry,
 )

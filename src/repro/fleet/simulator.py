@@ -68,6 +68,24 @@ _F32 = jnp.float32
 #: run_segments diffs them after each hook to stamp knob-update telemetry
 TUNABLE_FIELDS = ("eta", "e_opt", "exit_thr", "use_exit_thr", "persistent")
 
+#: execution modes of the time loop:
+#: - "vmap": lax.scan over vmap(device_step) — the XLA-fused reference
+#: - "pallas": same scan, but the pick stage runs in the fleet_priority
+#:   kernel (one pallas_call per *step*; kept as the per-stage kernel demo)
+#: - "fused": the whole segment's time loop runs inside ONE pallas_call
+#:   (repro.kernels.fleet_step) with the carry tile VMEM-resident
+FLEET_MODES = ("vmap", "pallas", "fused")
+
+
+def _resolve_mode(mode: Optional[str], use_pallas: bool) -> str:
+    """Fold the legacy ``use_pallas`` flag and the new ``mode`` kwarg into
+    one mode string (``mode`` wins when both are given)."""
+    if mode is None:
+        return "pallas" if use_pallas else "vmap"
+    if mode not in FLEET_MODES:
+        raise ValueError(f"mode must be one of {FLEET_MODES}, got {mode!r}")
+    return mode
+
 
 def _pick_pallas(cfg: FleetConfig, states: DeviceState, t,
                  statics: FleetStatics):
@@ -95,14 +113,17 @@ def _fleet_step(cfg: FleetConfig, states: DeviceState, i,
     the split admit/expire/Pallas-pick/apply pipeline when the pick runs in
     the kernel, which needs the whole device batch at once)."""
     t = i.astype(_F32) * statics.dt
+    t_end = (i + 1).astype(_F32) * statics.dt
     if not use_pallas:
         return jax.vmap(
-            lambda c, s: S.device_step(c, s, t, statics))(cfg, states)
+            lambda c, s: S.device_step(c, s, t, statics, t_end=t_end)
+        )(cfg, states)
     states = jax.vmap(lambda c, s: S.admit(c, s, t, statics))(cfg, states)
     states = jax.vmap(lambda c, s: S.drop_expired(c, s, t))(cfg, states)
     sel, picked, run, e_new = _pick_pallas(cfg, states, t, statics)
     return jax.vmap(
-        lambda c, s, a, p, r, e: S.apply_step(c, s, t, a, p, r, e, statics)
+        lambda c, s, a, p, r, e: S.apply_step(c, s, t, a, p, r, e, statics,
+                                              t_end=t_end)
     )(cfg, states, sel, picked, run, e_new)
 
 
@@ -127,15 +148,30 @@ def _scan_steps(cfg: FleetConfig, states: DeviceState, i0,
     return states
 
 
+def _scan_steps_fused(cfg: FleetConfig, states: DeviceState, i0,
+                      statics: FleetStatics, n_steps: int) -> DeviceState:
+    """Fused twin of :func:`_scan_steps`: the entire ``n_steps`` time loop
+    runs inside ONE ``pallas_call`` (:mod:`repro.kernels.fleet_step`) with a
+    ``block_d``-row carry tile VMEM-resident — no per-step dispatch, no HBM
+    carry round-trips inside the segment.  Bit-exact against the scan (the
+    kernel body is the same :func:`repro.core.step.device_step`)."""
+    from ..kernels import ops  # local import: kernels pull in pallas
+
+    return ops.fleet_fused_steps(cfg, states, i0, statics=statics,
+                                 n_steps=n_steps)
+
+
 def _fleet_step_trace(cfg: FleetConfig, states: DeviceState, i,
                       statics: FleetStatics, use_pallas: bool):
     """Descriptor-emitting twin of :func:`_fleet_step`: the same stages in
     the same order, additionally returning the step's packed
     :class:`repro.core.step.StepTrace` event words (a few bytes/device)."""
     t = i.astype(_F32) * statics.dt
+    t_end = (i + 1).astype(_F32) * statics.dt
     if not use_pallas:
         return jax.vmap(
-            lambda c, s: S.device_step(c, s, t, statics, trace=True)
+            lambda c, s: S.device_step(c, s, t, statics, trace=True,
+                                       t_end=t_end)
         )(cfg, states)
     act0 = states.q_active
     states, (tr_adm, tr_ev, tr_ev_dl) = jax.vmap(
@@ -147,7 +183,8 @@ def _fleet_step_trace(cfg: FleetConfig, states: DeviceState, i,
     sel, picked, run, e_new = _pick_pallas(cfg, states, t, statics)
     states, (tr_comp, tr_comp_dl) = jax.vmap(
         lambda c, s, a, p, r, e, a0: S.apply_step(
-            c, s, t, a, p, r, e, statics, trace=True, q_active_pre=a0)
+            c, s, t, a, p, r, e, statics, trace=True, q_active_pre=a0,
+            t_end=t_end)
     )(cfg, states, sel, picked, run, e_new, act0)
     return states, S.StepTrace(adm=tr_adm, evict=tr_ev, evict_dl=tr_ev_dl,
                                expire=tr_exp, expire_dl=tr_exp_dl,
@@ -265,14 +302,33 @@ def _simulate_fleet_plain(cfg: FleetConfig, statics: FleetStatics,
     return jax.vmap(lambda c, s: S.finalize(c, s, statics))(cfg, states)
 
 
+def _simulate_fleet_fused(cfg: FleetConfig,
+                          statics: FleetStatics) -> FleetResult:
+    """Monolithic fused run: init, ONE whole-horizon ``pallas_call``, and
+    finalize — the fused analogue of :func:`_simulate_fleet_plain`."""
+    states = _scan_steps_fused(cfg, init_fleet(cfg, statics), jnp.int32(0),
+                               statics, statics.n_steps)
+    return finalize_fleet(cfg, states, statics)
+
+
 def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
                    use_pallas: bool = False,
-                   telemetry: Optional[T.TelemetryConfig] = None):
+                   telemetry: Optional[T.TelemetryConfig] = None,
+                   mode: Optional[str] = None):
     """Simulate every device in ``cfg`` in one jitted scan.
 
     Returns a :class:`FleetResult` of ``(D,)`` metric arrays — plus
     ``(D, K)`` per-task breakdowns — aligned with the device axis of ``cfg``
     (see :func:`repro.fleet.grid.sweep` for the grid bookkeeping).
+
+    ``mode`` selects the time-loop execution shape (:data:`FLEET_MODES`):
+    ``"vmap"`` (default), ``"pallas"`` (per-step pick kernel; the legacy
+    ``use_pallas=True``), or ``"fused"`` — the whole horizon in ONE
+    ``pallas_call`` with the carry VMEM-resident
+    (:mod:`repro.kernels.fleet_step`).  All three are bit-exact against
+    each other.  ``mode="fused"`` does not support ``telemetry`` (the
+    per-step trace columns would defeat the in-kernel loop; use the vmap
+    path to instrument).
 
     ``telemetry`` (a :class:`repro.telemetry.TelemetryConfig`)
     additionally instruments the scan and returns
@@ -285,6 +341,13 @@ def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
     entirely — the emitted program is the pre-telemetry one, and the
     FleetResult is bit-exact either way.
     """
+    mode = _resolve_mode(mode, use_pallas)
+    if mode == "fused":
+        if telemetry is not None:
+            raise ValueError(
+                "mode='fused' does not support telemetry; use mode='vmap'")
+        return _simulate_fleet_fused(cfg, statics)
+    use_pallas = mode == "pallas"
     if telemetry is None:
         return _simulate_fleet_plain(cfg, statics, use_pallas)
     res, tel, ring = _simulate_fleet_tel(cfg, statics, use_pallas, telemetry)
@@ -354,6 +417,7 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
                  carry: Optional[DeviceState] = None,
                  start_step: int = 0,
                  use_pallas: bool = False,
+                 mode: Optional[str] = None,
                  mesh=None,
                  telemetry: Optional[T.TelemetryConfig] = None,
                  telemetry_carry: Optional[T.Telemetry] = None):
@@ -398,9 +462,24 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
     way ``carry`` resumes the simulation.  The simulation numerics are
     identical either way — only the return arity changes.
 
+    ``mode`` selects the time-loop execution shape exactly as in
+    :func:`simulate_fleet`; ``mode="fused"`` runs each segment as ONE
+    ``pallas_call`` (the carry still round-trips at every boundary, so
+    hooks and checkpoint resume work unchanged and stay bit-exact against
+    the vmap path).  Fused excludes ``telemetry`` and ``mesh``.
+
     Returns ``(FleetResult, DeviceState)`` — the finalized metrics and the
     end-of-horizon carry — plus the ``Telemetry`` when enabled.
     """
+    mode = _resolve_mode(mode, use_pallas)
+    use_pallas = mode == "pallas"
+    if mode == "fused":
+        if telemetry is not None:
+            raise ValueError(
+                "mode='fused' does not support telemetry; use mode='vmap'")
+        if mesh is not None:
+            raise ValueError(
+                "mode='fused' does not support mesh sharding yet")
     remaining = statics.n_steps - int(start_step)
     if not 0 <= int(start_step) <= statics.n_steps:
         raise ValueError(
@@ -439,7 +518,10 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
     i0 = int(start_step)
     for seg, n in enumerate(sizes):
         if n:
-            if telemetry is None:
+            if mode == "fused":
+                carry = _scan_steps_fused(cfg, carry, jnp.int32(i0),
+                                          statics, n)
+            elif telemetry is None:
                 carry = _scan_steps(cfg, carry, jnp.int32(i0), statics, n,
                                     use_pallas)
             else:

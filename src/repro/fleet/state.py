@@ -51,6 +51,26 @@ FleetResult = StepResult
 init_state = init_carry
 
 
+def pack_carry(carry: DeviceCarry) -> DeviceCarry:
+    """Cast the carry's boolean leaves to int32 0/1 masks — the TPU-friendly
+    dtype layout the fused kernel (:mod:`repro.kernels.fleet_step`) moves
+    through its refs, and a stable layout for checkpoint serialization.
+    Structure-preserving: the result is still a ``DeviceState`` pytree and
+    round-trips exactly through :func:`unpack_carry`."""
+    # local import: keep repro.fleet importable without pulling in pallas
+    from ..kernels.fleet_step import BOOL_CARRY_FIELDS, pack_tree
+
+    return pack_tree(carry, BOOL_CARRY_FIELDS)
+
+
+def unpack_carry(carry: DeviceCarry) -> DeviceCarry:
+    """Inverse of :func:`pack_carry`: re-materialize the int32 0/1 leaves
+    as booleans (``!= 0``)."""
+    from ..kernels.fleet_step import BOOL_CARRY_FIELDS, unpack_tree
+
+    return unpack_tree(carry, BOOL_CARRY_FIELDS)
+
+
 # --------------------------------------------------------------------------- #
 # Live-serving carry (repro.serve.fleet_engine).
 #
@@ -114,4 +134,6 @@ __all__ = [
     "ServeCarry",
     "ServeLog",
     "init_state",
+    "pack_carry",
+    "unpack_carry",
 ]

@@ -1,0 +1,45 @@
+"""Shared tile-size / padding helpers for the Pallas kernel wrappers.
+
+Every kernel in this package tiles one or more axes into VMEM-resident
+blocks.  When an axis size is not a multiple of the block, the kernels used
+to *shrink* the block (halve until divisible) — which silently collapses to
+1-row tiles for odd/prime sizes (D=999 -> 999 single-row grid steps, a
+catastrophic slowdown).  The fix is the same pad-and-slice idiom the fleet
+k-means wrappers in :mod:`repro.kernels.ops` already use: keep the block,
+pad the axis up to the next block multiple with values that cannot leak
+into real rows (zeros / identity gates / invalid sentinels, chosen per
+kernel), and slice the outputs back.
+
+Lives in its own leaf module so the kernel implementations can import it
+without pulling in :mod:`repro.kernels.ops` (which imports the kernels —
+the other direction would be circular).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_axis(a, axis: int, multiple: int, value=0.0):
+    """Constant-pad ``a`` along ``axis`` up to the next ``multiple``."""
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def choose_block(size: int, block: int) -> tuple[int, int]:
+    """Tile size and padded axis length for tiling ``size`` rows in blocks
+    of (at most) ``block``.
+
+    Returns ``(bd, padded)`` with ``padded % bd == 0`` and
+    ``padded - size < bd``: callers pad the axis to ``padded``
+    (:func:`pad_axis`) and slice kernel outputs back to ``size``.  When
+    ``size`` is already a block multiple this is the identity
+    (``padded == size``), so divisible shapes keep their exact program.
+    """
+    bd = min(block, size)
+    padded = -(-size // bd) * bd
+    return bd, padded

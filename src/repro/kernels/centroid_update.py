@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._tiling import choose_block, pad_axis
+
 
 def _centroid_update_kernel(x_ref, onehot_ref, c_ref, w_ref, o_ref):
     x = x_ref[...]           # (B, bd)
@@ -41,14 +43,20 @@ def centroid_update(
     """centroids: (k, d), x: (B, d), assign: (B,) int32 -> new (k, d)."""
     k, d = centroids.shape
     B = x.shape[0]
-    bd = min(block_d, d)
-    while d % bd:
-        bd //= 2
+    # pad the tiled feature axis to a block multiple (odd/prime d would
+    # otherwise collapse to 1-column tiles); zero feature columns update to
+    # (w*0 + 0)/(w + count) and are sliced back off
+    bd, dp = choose_block(d, block_d)
+    x = jnp.asarray(x, jnp.float32)
+    centroids = jnp.asarray(centroids, jnp.float32)
+    if dp != d:
+        x = pad_axis(x, 1, bd)
+        centroids = pad_axis(centroids, 1, bd)
     onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
     w = jnp.asarray([weight], jnp.float32)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _centroid_update_kernel,
-        grid=(d // bd,),
+        grid=(dp // bd,),
         in_specs=[
             pl.BlockSpec((B, bd), lambda i: (0, i)),
             pl.BlockSpec((B, k), lambda i: (0, 0)),
@@ -56,6 +64,7 @@ def centroid_update(
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((k, bd), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((k, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((k, dp), jnp.float32),
         interpret=interpret,
-    )(x.astype(jnp.float32), onehot, centroids.astype(jnp.float32), w)
+    )(x, onehot, centroids, w)
+    return out[:, :d]

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._tiling import choose_block, pad_axis
+
 NEG = -1e30  # python scalar: jnp constants would be captured consts in pallas
 
 
@@ -79,19 +81,32 @@ def decode_gqa(
     B, H, hd = q.shape
     C, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
-    bB, bC = min(block_b, B), min(block_c, C)
-    while B % bB:
-        bB //= 2
-    while C % bC:
-        bC //= 2
-    n_kv_blocks = C // bC
+    # pad both tiled axes to block multiples instead of shrinking the
+    # blocks: padded cache slots carry ``slot_pos = -1`` (always invalid,
+    # masked to NEG -> exp underflows to exactly 0, so real rows are
+    # bit-exact); padded batch rows are garbage and sliced off
+    bB, Bp = choose_block(B, block_b)
+    bC, Cp = choose_block(C, block_c)
+    k_cache, v_cache = jnp.asarray(k_cache), jnp.asarray(v_cache)
+    slot_pos, my_pos = jnp.asarray(slot_pos), jnp.asarray(my_pos)
+    if Cp != C:
+        k_cache = pad_axis(k_cache, 1, bC)
+        v_cache = pad_axis(v_cache, 1, bC)
+        slot_pos = pad_axis(slot_pos, 1, bC, value=-1)
+    if Bp != B:
+        q = pad_axis(jnp.asarray(q), 0, bB)
+        k_cache = pad_axis(k_cache, 0, bB)
+        v_cache = pad_axis(v_cache, 0, bB)
+        slot_pos = pad_axis(slot_pos, 0, bB, value=-1)
+        my_pos = pad_axis(my_pos, 0, bB)
+    n_kv_blocks = Cp // bC
 
-    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    qg = q.reshape(Bp, KV, G, hd).astype(jnp.float32)
     out = pl.pallas_call(
         functools.partial(
             _decode_gqa_kernel, n_kv_blocks=n_kv_blocks, window=window
         ),
-        grid=(B // bB, n_kv_blocks),
+        grid=(Bp // bB, n_kv_blocks),
         in_specs=[
             pl.BlockSpec((bB, KV, G, hd), lambda i, c: (i, 0, 0, 0)),
             pl.BlockSpec((bB, bC, KV, hd), lambda i, c: (i, c, 0, 0)),
@@ -100,7 +115,7 @@ def decode_gqa(
             pl.BlockSpec((bB,), lambda i, c: (i,)),
         ],
         out_specs=pl.BlockSpec((bB, KV, G, hd), lambda i, c: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Bp, KV, G, hd), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((bB, KV, G), jnp.float32),
             pltpu.VMEM((bB, KV, G), jnp.float32),
@@ -114,4 +129,4 @@ def decode_gqa(
         slot_pos,
         my_pos,
     )
-    return out.reshape(B, H, hd)
+    return out[:B].reshape(B, H, hd)

@@ -24,12 +24,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._tiling import choose_block, pad_axis
+
 NEG = -1e30
 
 
 def _flash_kernel(
     q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-    *, n_kv_blocks, block_q, block_k, causal, window, q_offset,
+    *, n_kv_blocks, block_q, block_k, causal, window, q_offset, kv_len,
 ):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
@@ -59,6 +61,8 @@ def _flash_kernel(
         mask &= qpos >= kpos
     if window:
         mask &= qpos - kpos <= window
+    if kv_len:  # kv axis was padded to a block multiple: mask padded keys
+        mask &= kpos < kv_len
     s = jnp.where(mask[None, :, None, :], s, NEG)
 
     m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
@@ -102,12 +106,13 @@ def flash_attention(
     B, S, H, hd = q.shape
     Skv, KV = k.shape[1], k.shape[2]
     G = H // KV
-    bQ, bK = min(block_q, S), min(block_k, Skv)
-    while S % bQ:
-        bQ //= 2
-    while Skv % bK:
-        bK //= 2
-    n_kv_blocks = Skv // bK
+    # pad the tiled sequence axes to block multiples instead of shrinking
+    # the blocks (odd/prime lengths would collapse to 1-row tiles).  Padded
+    # query rows are garbage and sliced off; padded kv positions are masked
+    # inside the kernel (``kpos < kv_len``) so real rows stay bit-exact.
+    bQ, Sp = choose_block(S, block_q)
+    bK, Skvp = choose_block(Skv, block_k)
+    n_kv_blocks = Skvp // bK
 
     # (B*KV, S, G, hd) so one grid axis covers batch x kv-head
     qg = (
@@ -116,20 +121,26 @@ def flash_attention(
     )
     kg = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
     vg = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    if Sp != S:
+        qg = pad_axis(qg, 1, bQ)
+    if Skvp != Skv:
+        kg = pad_axis(kg, 1, bK)
+        vg = pad_axis(vg, 1, bK)
 
     out = pl.pallas_call(
         functools.partial(
             _flash_kernel, n_kv_blocks=n_kv_blocks, block_q=bQ, block_k=bK,
             causal=causal, window=window, q_offset=q_offset,
+            kv_len=Skv if Skvp != Skv else 0,
         ),
-        grid=(B * KV, S // bQ, n_kv_blocks),
+        grid=(B * KV, Sp // bQ, n_kv_blocks),
         in_specs=[
             pl.BlockSpec((1, bQ, G, hd), lambda b, i, j: (b, i, 0, 0)),
             pl.BlockSpec((1, bK, hd), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bK, hd), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bQ, G, hd), lambda b, i, j: (b, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * KV, S, G, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B * KV, Sp, G, hd), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((1, bQ, G), jnp.float32),
             pltpu.VMEM((1, bQ, G), jnp.float32),
@@ -138,6 +149,6 @@ def flash_attention(
         interpret=interpret,
     )(qg, kg, vg)
     return (
-        out.reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4)
+        out[:, :S].reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4)
         .reshape(B, S, H, hd)
     )

@@ -37,6 +37,7 @@ from jax.experimental import pallas as pl
 
 from ..core import policy as P
 from ..core.step import select_and_charge
+from ._tiling import choose_block, pad_axis
 
 
 def _fleet_priority_kernel(
@@ -106,27 +107,16 @@ def fleet_priority(
 ):
     """Returns ``(sel (D,) i32, picked (D,) i32, run (D,) i32, e_new (D,) f32)``."""
     D, Q = active.shape
-    bd = min(block_d, D)
-    while D % bd:
-        bd //= 2
-    grid = (D // bd,)
+    # pad the device axis to a block multiple instead of shrinking the block
+    # (odd/prime fleet sizes would collapse to 1-row tiles).  Padded devices
+    # are all-zero rows — no cross-device ops exist, so real rows stay
+    # bit-exact; their outputs are sliced off below.
+    bd, Dp = choose_block(D, block_d)
+    grid = (Dp // bd,)
     f32 = jnp.float32
     row = pl.BlockSpec((bd, Q), lambda i: (i, 0))
     vec = pl.BlockSpec((bd,), lambda i: (i,))
-    return pl.pallas_call(
-        functools.partial(_fleet_priority_kernel, n_tasks=n_tasks),
-        grid=grid,
-        in_specs=[vec, row, row, row, row, row, vec, vec, vec, vec, vec,
-                  vec, vec, vec, row, row, vec, row, vec],
-        out_specs=[vec, vec, vec, vec],
-        out_shape=[
-            jax.ShapeDtypeStruct((D,), jnp.int32),
-            jax.ShapeDtypeStruct((D,), jnp.int32),
-            jax.ShapeDtypeStruct((D,), jnp.int32),
-            jax.ShapeDtypeStruct((D,), f32),
-        ],
-        interpret=interpret,
-    )(
+    ins = (
         policy.astype(jnp.int32), active.astype(f32), laxity.astype(f32),
         release.astype(f32), utility.astype(f32), mandatory.astype(f32),
         alpha.astype(f32), beta.astype(f32), eta.astype(f32),
@@ -135,3 +125,20 @@ def fleet_priority(
         drain.astype(f32), forced.astype(jnp.int32), task.astype(f32),
         rr_cursor.astype(f32),
     )
+    if Dp != D:
+        ins = tuple(pad_axis(a, 0, bd) for a in ins)
+    sel, picked, run, e_new = pl.pallas_call(
+        functools.partial(_fleet_priority_kernel, n_tasks=n_tasks),
+        grid=grid,
+        in_specs=[vec, row, row, row, row, row, vec, vec, vec, vec, vec,
+                  vec, vec, vec, row, row, vec, row, vec],
+        out_specs=[vec, vec, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp,), jnp.int32),
+            jax.ShapeDtypeStruct((Dp,), jnp.int32),
+            jax.ShapeDtypeStruct((Dp,), jnp.int32),
+            jax.ShapeDtypeStruct((Dp,), f32),
+        ],
+        interpret=interpret,
+    )(*ins)
+    return sel[:D], picked[:D], run[:D], e_new[:D]

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: the ENTIRE fleet time loop fused into one kernel.
+
+The previous "kernel mode" (:mod:`repro.kernels.fleet_priority`) only ran
+the pick stage in-tile: every timestep still dispatched one ``pallas_call``
+from inside the scan, bouncing the whole carry through HBM between the
+admit/expire/apply stages — a measured 5-7x *slowdown* over plain ``vmap``.
+This kernel inverts the loop structure: a ``block_d``-row tile of the full
+:class:`repro.core.step.DeviceCarry` (queue slots, energy, rr cursor, live
+registers, metric accumulators) is held in VMEM while a ``lax.fori_loop``
+runs ``n_steps`` timesteps per tile, evaluating the *entire*
+admit -> expire -> pick -> apply transition per step — ONE ``pallas_call``
+per segment instead of one per step, with zero HBM round-trips inside the
+horizon chunk.
+
+The transition body is :func:`repro.core.step.device_step` itself — the
+step core is written batch-polymorphic and gather-free (one-hot iota
+contractions instead of dynamic indexing, trailing-axis reductions), so the
+kernel and the ``vmap`` frontend share literally one implementation and the
+results are bit-exact against each other (asserted across the full parity
+matrix in ``tests/test_parity.py``).
+
+Dtype packing: Mosaic refs carry ``f32``/``i32``; boolean params/carry
+leaves ride as ``i32`` 0/1 masks and are re-materialized as bools in-tile
+(``!= 0``) and on the way out (:func:`pack_tree`/:func:`unpack_tree`, also
+exposed as ``repro.fleet.state.pack_carry``/``unpack_carry`` for
+checkpointing).  The device axis is padded to a block multiple
+(:mod:`repro.kernels._tiling`); padded devices have ``n_releases == 0`` so
+they never release work, and their rows are sliced off the outputs.
+
+On this CPU container the kernel executes in interpret mode — it validates
+the fused semantics (and the one-call-per-segment dispatch shape) rather
+than racing the vmap path; on a TPU backend the same call compiles to
+Mosaic with the carry VMEM-resident across the whole segment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..core.step import (DeviceCarry, StepParams, StepStatics, device_step,
+                         onehot_lowering)
+from ._tiling import choose_block, pad_axis
+
+#: StepParams / DeviceCarry leaves that are booleans in the pytree but ride
+#: through Pallas refs as int32 0/1 masks (TPU-friendly dtypes).
+BOOL_PARAM_FIELDS = ("imprecise", "is_edfm", "persistent", "use_exit_thr",
+                     "passes", "correct")
+BOOL_CARRY_FIELDS = ("was_off", "q_active", "q_correct", "q_apass")
+
+
+def pack_tree(nt, bool_fields):
+    """Cast the named boolean leaves of a NamedTuple pytree to int32."""
+    return type(nt)(*[
+        v.astype(jnp.int32) if f in bool_fields else v
+        for f, v in zip(nt._fields, nt)
+    ])
+
+
+def unpack_tree(nt, bool_fields):
+    """Re-materialize the named int32 0/1 leaves as booleans."""
+    return type(nt)(*[
+        (v != 0) if f in bool_fields else v
+        for f, v in zip(nt._fields, nt)
+    ])
+
+
+_N_PARAMS = len(StepParams._fields)
+_N_CARRY = len(DeviceCarry._fields)
+
+
+def _fleet_step_kernel(*refs, statics: StepStatics, n_steps: int):
+    """One device tile: reconstruct the pytrees from the packed refs, run
+    the whole segment's time loop in VMEM, write the carry back."""
+    i0_ref = refs[0]
+    p_refs = refs[1:1 + _N_PARAMS]
+    c_refs = refs[1 + _N_PARAMS:1 + _N_PARAMS + _N_CARRY]
+    o_refs = refs[1 + _N_PARAMS + _N_CARRY:]
+
+    params = unpack_tree(StepParams(*[r[...] for r in p_refs]),
+                         BOOL_PARAM_FIELDS)
+    st = unpack_tree(DeviceCarry(*[r[...] for r in c_refs]),
+                     BOOL_CARRY_FIELDS)
+    i0 = i0_ref[0]
+
+    def body(s, st):
+        # the shared clock: t = step_index * dt and t_end = (index+1) * dt,
+        # the same expressions as the vmap path's scan.  Both are single
+        # multiplies — always correctly rounded — so every frontend
+        # produces identical bits.  (A ``t + dt`` form would invite the
+        # backend to contract the mul+add into a single-rounding FMA in
+        # one program but not another, a 1-ulp drift that breaks parity.)
+        t = (i0 + s).astype(jnp.float32) * statics.dt
+        t_end = (i0 + s + 1).astype(jnp.float32) * statics.dt
+        return device_step(params, st, t, statics, t_end=t_end)
+
+    # Mosaic has no gather: trace the whole in-tile loop with table lookups
+    # lowered as one-hot iota contractions instead of ``take_along_axis``.
+    with onehot_lowering():
+        st = lax.fori_loop(0, n_steps, body, st)
+    for ref, v in zip(o_refs, pack_tree(st, BOOL_CARRY_FIELDS)):
+        ref[...] = v
+
+
+@functools.partial(
+    jax.jit, static_argnames=("statics", "n_steps", "block_d", "interpret"))
+def fleet_fused_steps(
+    cfg: StepParams,        # every leaf (D, ...)
+    carry: DeviceCarry,     # every leaf (D, ...)
+    i0,                     # i32 scalar: first step index of this segment
+    *,
+    statics: StepStatics,
+    n_steps: int,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> DeviceCarry:
+    """Advance the whole fleet ``n_steps`` timesteps in ONE ``pallas_call``.
+
+    Drop-in replacement for the vmap path's ``scan`` over
+    :func:`repro.core.step.device_step` — same carry in, same carry out,
+    bit-exact.  ``n_steps`` is static (a segment length); ``i0`` is traced,
+    so equal-length segments share one compilation.
+    """
+    D = cfg.policy.shape[0]
+    bd, Dp = choose_block(D, block_d)
+    p = pack_tree(cfg, BOOL_PARAM_FIELDS)
+    c = pack_tree(carry, BOOL_CARRY_FIELDS)
+    if Dp != D:
+        # padded devices are all-zero configs: n_releases == 0 means they
+        # never admit work and their garbage metrics are sliced off below
+        p = StepParams(*[pad_axis(l, 0, bd) for l in p])
+        c = DeviceCarry(*[pad_axis(l, 0, bd) for l in c])
+
+    def spec(leaf):
+        nz = leaf.ndim - 1
+        return pl.BlockSpec((bd,) + leaf.shape[1:],
+                            lambda i, _nz=nz: (i,) + (0,) * _nz)
+
+    outs = pl.pallas_call(
+        functools.partial(_fleet_step_kernel, statics=statics,
+                          n_steps=n_steps),
+        grid=(Dp // bd,),
+        in_specs=([pl.BlockSpec((1,), lambda i: (0,))]
+                  + [spec(l) for l in p] + [spec(l) for l in c]),
+        out_specs=[spec(l) for l in c],
+        out_shape=[jax.ShapeDtypeStruct(l.shape, l.dtype) for l in c],
+        interpret=interpret,
+    )(jnp.asarray(i0, jnp.int32).reshape(1), *p, *c)
+    new = unpack_tree(DeviceCarry(*outs), BOOL_CARRY_FIELDS)
+    if Dp != D:
+        new = jax.tree.map(lambda l: l[:D], new)
+    return new

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._tiling import choose_block, pad_axis
+
 POS = 1e30  # python scalar: jnp constants would be captured consts in pallas
 
 
@@ -51,11 +53,14 @@ def l1_topk2(
     """x: (B, d) f32, centroids: (k, d) f32 -> (d1 (B,), d2 (B,), idx (B,))."""
     B, d = x.shape
     k = centroids.shape[0]
-    block_b = min(block_b, B)
-    while B % block_b:
-        block_b //= 2
-    grid = (B // block_b,)
-    return pl.pallas_call(
+    # pad the row axis to a block multiple instead of shrinking the block
+    # (halving collapses odd/prime B to 1-row tiles); padded rows compute
+    # garbage distances that are sliced off below
+    block_b, Bp = choose_block(B, block_b)
+    if Bp != B:
+        x = pad_axis(x, 0, block_b)
+    grid = (Bp // block_b,)
+    d1, d2, idx = pl.pallas_call(
         _l1_topk2_kernel,
         grid=grid,
         in_specs=[
@@ -68,9 +73,10 @@ def l1_topk2(
             pl.BlockSpec((block_b,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B,), jnp.float32),
-            jax.ShapeDtypeStruct((B,), jnp.float32),
-            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
         ],
         interpret=interpret,
     )(x, centroids)
+    return d1[:B], d2[:B], idx[:B]

@@ -18,20 +18,37 @@ so the padding never leaks into results.
 """
 from __future__ import annotations
 
+import functools
+import os
+
 import jax
 import jax.numpy as jnp
 
+from ._tiling import pad_axis as _pad_axis  # noqa: F401  (public via ops)
 from .centroid_update import centroid_update as _centroid_update
 from .decode_gqa import decode_gqa as _decode_gqa
 from .flash_attn import flash_attention as _flash_attention
 from .fleet_priority import fleet_priority as _fleet_priority
+from .fleet_step import fleet_fused_steps as _fleet_fused_steps
 from .l1_topk2 import l1_topk2 as _l1_topk2
 from .pairwise_l1 import pairwise_l1 as _pairwise_l1
 from .rglru_scan import rglru_scan as _rglru_scan
 
 
+@functools.lru_cache(maxsize=1)
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Should Pallas run in interpret mode on this backend?
+
+    Pallas compiles natively on TPU (Mosaic) *and* GPU (Triton); only
+    plain-CPU backends need interpret mode.  Cached — the backend cannot
+    change within a process.  ``REPRO_PALLAS_INTERPRET=1`` (or ``0``)
+    overrides the autodetection either way, for debugging compiled-path
+    issues without editing call sites.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env:
+        return env not in ("0", "false", "no", "off")
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
 def l1_topk2(x, centroids, **kw):
@@ -62,17 +79,6 @@ def decode_gqa(q, k_cache, v_cache, slot_pos, my_pos, **kw):
 def flash_attention(q, k, v, **kw):
     kw.setdefault("interpret", _interpret())
     return _flash_attention(q, k, v, **kw)
-
-
-def _pad_axis(a, axis: int, multiple: int, value=0.0):
-    """Zero/constant-pad ``a`` along ``axis`` up to the next multiple."""
-    size = a.shape[axis]
-    rem = (-size) % multiple
-    if rem == 0:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, rem)
-    return jnp.pad(a, widths, constant_values=value)
 
 
 def fleet_l1_topk2(x, centroids, *, block_b: int = 256, lane: int = 128,
@@ -133,3 +139,13 @@ def fleet_priority(policy, active, laxity, release, utility, mandatory,
         eta, persistent, energy, e_opt, charge, capacity, gate_e, drain,
         forced, task, rr_cursor, n_tasks=n_tasks, **kw)
     return sel, picked.astype(bool), run.astype(bool), e_new
+
+
+def fleet_fused_steps(cfg, carry, i0, *, statics, n_steps, **kw):
+    """Whole-segment fused device-step: advance every device ``n_steps``
+    timesteps in ONE ``pallas_call`` with the carry tile VMEM-resident
+    (:mod:`repro.kernels.fleet_step`).  Bit-exact vs the vmap scan —
+    the kernel body IS :func:`repro.core.step.device_step`."""
+    kw.setdefault("interpret", _interpret())
+    return _fleet_fused_steps(cfg, carry, i0, statics=statics,
+                              n_steps=n_steps, **kw)

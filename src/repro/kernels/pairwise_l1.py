@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._tiling import choose_block, pad_axis
+
 
 def _pairwise_l1_kernel(x_ref, y_ref, o_ref):
     @pl.when(pl.program_id(2) == 0)
@@ -39,15 +41,23 @@ def pairwise_l1(
     """x: (B1, d), y: (B2, d) -> (B1, B2) L1 distances, f32."""
     B1, d = x.shape
     B2 = y.shape[0]
-    b1, b2, bd = min(block_b1, B1), min(block_b2, B2), min(block_d, d)
-    while B1 % b1:
-        b1 //= 2
-    while B2 % b2:
-        b2 //= 2
-    while d % bd:
-        bd //= 2
-    grid = (B1 // b1, B2 // b2, d // bd)
-    return pl.pallas_call(
+    # pad every tiled axis to its block multiple instead of shrinking the
+    # blocks (odd/prime sizes would collapse to 1-row tiles).  Zero feature
+    # columns contribute |0 - 0| = 0 to the reduction, so real entries stay
+    # bit-exact; padded rows/cols are sliced off.
+    b1, B1p = choose_block(B1, block_b1)
+    b2, B2p = choose_block(B2, block_b2)
+    bd, dp = choose_block(d, block_d)
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if dp != d:
+        x, y = pad_axis(x, 1, bd), pad_axis(y, 1, bd)
+    if B1p != B1:
+        x = pad_axis(x, 0, b1)
+    if B2p != B2:
+        y = pad_axis(y, 0, b2)
+    grid = (B1p // b1, B2p // b2, dp // bd)
+    out = pl.pallas_call(
         _pairwise_l1_kernel,
         grid=grid,
         in_specs=[
@@ -55,6 +65,7 @@ def pairwise_l1(
             pl.BlockSpec((b2, bd), lambda i, j, l: (j, l)),
         ],
         out_specs=pl.BlockSpec((b1, b2), lambda i, j, l: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((B1, B2), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B1p, B2p), jnp.float32),
         interpret=interpret,
-    )(x.astype(jnp.float32), y.astype(jnp.float32))
+    )(x, y)
+    return out[:B1, :B2]

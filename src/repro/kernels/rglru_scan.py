@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._tiling import choose_block, pad_axis
+
 
 def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hlast_ref, *, n_seq_blocks):
     s_idx = pl.program_id(2)
@@ -59,16 +61,29 @@ def rglru_scan(
 ):
     """a, b: (B, S, W) f32; h0: (B, W) f32 -> (h (B, S, W), h_last (B, W))."""
     B, S, W = a.shape
-    bB, bS, bW = min(block_b, B), min(block_s, S), min(block_w, W)
-    while B % bB:
-        bB //= 2
-    while S % bS:
-        bS //= 2
-    while W % bW:
-        bW //= 2
-    grid = (B // bB, W // bW, S // bS)  # sequence innermost (sequential)
+    # pad every tiled axis to its block multiple instead of shrinking the
+    # blocks (odd/prime sizes would collapse to 1-row tiles).  Padded batch
+    # rows / width lanes are zeros (garbage, sliced off); padded sequence
+    # steps run the identity recurrence ``h = 1*h + 0`` so ``h_last`` stays
+    # bit-exact through them.
+    bB, Bp = choose_block(B, block_b)
+    bS, Sp = choose_block(S, block_s)
+    bW, Wp = choose_block(W, block_w)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+    if Sp != S:
+        a = pad_axis(a, 1, bS, value=1.0)
+        b = pad_axis(b, 1, bS)
+    if Bp != B:
+        a, b = pad_axis(a, 0, bB), pad_axis(b, 0, bB)
+        h0 = pad_axis(h0, 0, bB)
+    if Wp != W:
+        a, b = pad_axis(a, 2, bW), pad_axis(b, 2, bW)
+        h0 = pad_axis(h0, 1, bW)
+    grid = (Bp // bB, Wp // bW, Sp // bS)  # sequence innermost (sequential)
     out, hlast = pl.pallas_call(
-        functools.partial(_rglru_kernel, n_seq_blocks=S // bS),
+        functools.partial(_rglru_kernel, n_seq_blocks=Sp // bS),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bB, bS, bW), lambda i, j, s: (i, s, j)),
@@ -80,9 +95,9 @@ def rglru_scan(
             pl.BlockSpec((bB, bW), lambda i, j, s: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
-            jax.ShapeDtypeStruct((B, W), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Sp, Wp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Wp), jnp.float32),
         ],
         interpret=interpret,
-    )(a.astype(jnp.float32), b.astype(jnp.float32), h0.astype(jnp.float32))
-    return out, hlast
+    )(a, b, h0)
+    return out[:B, :S, :W], hlast[:B, :W]

@@ -234,3 +234,141 @@ def test_flash_attention_bf16_inputs():
     got = ops.flash_attention(q, k, v, block_q=32, block_k=32)
     want = ref.flash_attention_ref(q, k, v)
     np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------------------------------- #
+# Pad-and-slice tiling — odd/prime sizes must run on full-width tiles, not
+# collapse to 1-row blocks (the old ``while size % bd: bd //= 2`` fallback).
+# Every kernel pads the tiled axis to a block multiple and slices the
+# padding back off; these tests force padding with small explicit blocks
+# and check the padded run agrees with the oracle / an unpadded tiling.
+# --------------------------------------------------------------------------- #
+
+
+def test_choose_block_pads_instead_of_shrinking():
+    from repro.kernels._tiling import choose_block
+
+    # the ISSUE's acceptance shape: D=999 must keep 256-row tiles (padded
+    # to 1024), not degrade to 1-row tiles
+    assert choose_block(999, 256) == (256, 1024)
+    assert choose_block(1024, 256) == (256, 1024)   # divisible: no padding
+    assert choose_block(997, 128) == (128, 1024)    # prime size
+    assert choose_block(5, 256) == (5, 5)           # size < block: one tile
+    assert choose_block(48, 16) == (16, 48)
+
+
+def test_pad_axis_identity_when_divisible():
+    from repro.kernels._tiling import pad_axis
+
+    x = jnp.arange(12.0).reshape(3, 4)
+    assert pad_axis(x, 0, 3) is x
+    y = pad_axis(x, 0, 5, value=-1.0)
+    assert y.shape == (5, 4)
+    np.testing.assert_array_equal(np.asarray(y[3:]), -1.0)
+    np.testing.assert_array_equal(np.asarray(y[:3]), np.asarray(x))
+
+
+@pytest.mark.parametrize("B,K,D", [(37, 5, 101), (13, 3, 7)])
+def test_l1_topk2_odd_sizes_padded_tiles(B, K, D):
+    k1, k2 = keys(2, seed=B)
+    x = jax.random.normal(k1, (B, D))
+    c = jax.random.normal(k2, (K, D))
+    d1, d2, idx = ops.l1_topk2(x, c, block_b=16)   # Bp > B: rows padded
+    rd1, rd2, ridx = ref.l1_topk2_ref(x, c)
+    np.testing.assert_allclose(d1, rd1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(d2, rd2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+def test_pairwise_l1_odd_sizes_padded_tiles():
+    k1, k2 = keys(2, seed=41)
+    a = jax.random.normal(k1, (37, 101))
+    b = jax.random.normal(k2, (23, 101))
+    got = ops.pairwise_l1(a, b, block_b1=16, block_b2=16, block_d=64)
+    np.testing.assert_allclose(got, ref.pairwise_l1_ref(a, b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_centroid_update_odd_feature_dim_padded_tiles():
+    k1, k2, k3 = keys(3, seed=42)
+    cents = jax.random.normal(k1, (5, 101))
+    feats = jax.random.normal(k2, (17, 101))
+    assign = jax.random.randint(k3, (17,), 0, 5)
+    got = ops.centroid_update(cents, feats, assign, 4.0, block_d=64)
+    np.testing.assert_allclose(
+        got, ref.centroid_update_ref(cents, feats, assign, 4.0),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_scan_odd_sizes_padded_tiles():
+    ks = keys(3, seed=43)
+    B, S, W = 3, 37, 53
+    a = jax.random.uniform(ks[0], (B, S, W), minval=0.7, maxval=0.999)
+    b = jax.random.normal(ks[1], (B, S, W)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, W))
+    # every axis padded: batch 3->4, seq 37->48 (identity-recurrence pad
+    # keeps h_last exact), width 53->64
+    h, hl = ops.rglru_scan(a, b, h0, block_b=2, block_s=16, block_w=32)
+    rh, rhl = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(h, rh, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(hl, rhl, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_gqa_odd_sizes_padded_tiles():
+    ks = keys(4, seed=44)
+    B, H, KV, hd, C = 5, 4, 2, 16, 37
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, C, KV, hd))
+    vc = jax.random.normal(ks[2], (B, C, KV, hd))
+    pos = jax.random.randint(ks[3], (B,), 1, C + 1)
+    slot = jnp.stack(
+        [jnp.where(jnp.arange(C) < p, jnp.arange(C), -1) for p in pos]
+    )
+    got = ops.decode_gqa(q, kc, vc, slot, pos, block_b=4, block_c=16)
+    want = ref.decode_gqa_ref(q, kc, vc, slot, pos)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_odd_seq_padded_tiles():
+    ks = keys(3, seed=45)
+    B, S, H, KV, hd = 2, 37, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    got = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_fleet_priority_odd_device_count_padded_tiles():
+    """Padded tiling (D=13 on 4-row blocks -> Dp=16) must be bit-identical
+    to the single-tile run (bd=13, no padding) on the same inputs."""
+    D, Q, n_tasks = 13, 4, 2
+    ks = keys(12, seed=46)
+    rng = np.random.default_rng(7)
+    args = dict(
+        policy=jnp.asarray(rng.integers(0, 4, D), jnp.int32),
+        active=jnp.asarray(rng.integers(0, 2, (D, Q)), jnp.float32),
+        laxity=jax.random.uniform(ks[0], (D, Q), minval=-1.0, maxval=3.0),
+        release=jax.random.uniform(ks[1], (D, Q), maxval=2.0),
+        utility=jax.random.uniform(ks[2], (D, Q)),
+        mandatory=jnp.asarray(rng.integers(0, 2, (D, Q)), jnp.float32),
+        alpha=jax.random.uniform(ks[3], (D,)),
+        beta=jax.random.uniform(ks[4], (D,)),
+        eta=jax.random.uniform(ks[5], (D,), minval=0.3, maxval=1.0),
+        persistent=jnp.asarray(rng.integers(0, 2, D), jnp.float32),
+        energy=jax.random.uniform(ks[6], (D,), maxval=0.05),
+        e_opt=jax.random.uniform(ks[7], (D,), maxval=0.05),
+        charge=jax.random.uniform(ks[8], (D,), maxval=0.01),
+        capacity=jnp.full((D,), 0.1, jnp.float32),
+        gate_e=jax.random.uniform(ks[9], (D, Q), maxval=0.02),
+        drain=jax.random.uniform(ks[10], (D, Q), maxval=0.005),
+        forced=jnp.asarray(rng.choice([-1, -1, -1, 0, 2], D), jnp.int32),
+        task=jnp.asarray(rng.integers(0, n_tasks, (D, Q)), jnp.int32),
+        rr_cursor=jnp.asarray(rng.integers(0, n_tasks, D), jnp.int32),
+    )
+    padded = ops.fleet_priority(*args.values(), n_tasks=n_tasks, block_d=4)
+    single = ops.fleet_priority(*args.values(), n_tasks=n_tasks, block_d=32)
+    for a, b, name in zip(padded, single, ("sel", "picked", "run", "e_new")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)

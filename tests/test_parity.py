@@ -18,6 +18,7 @@ Two tiers, now that every discretized frontend runs the ONE step core in
 Workload generation and the tolerance calibration live in
 ``tests/_workloads.py`` (shared with ``tests/test_fleet.py``).
 """
+import jax
 import numpy as np
 import pytest
 
@@ -125,6 +126,135 @@ def test_run_segments_carry_resume():
     with pytest.raises(ValueError, match="start_step"):
         fleet.run_segments(cfg, statics, 1, carry=carry,
                            start_step=statics.n_steps + 1)
+
+
+# --------------------------------------------------------------------------- #
+# Fused kernel mode: the whole time loop inside ONE pallas_call
+# (repro.kernels.fleet_step) must be bit-exact against the vmap scan —
+# same matrix as the stepped/fleet tier, plus segmented resume and the
+# one-call-per-segment dispatch shape.
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("k", sorted(TASK_SET_SEEDS))
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("pol", ALL_POLICIES)
+def test_fused_fleet_parity_bit_exact(pol, mode, k):
+    """mode="fused" runs the entire admit->expire->pick->apply loop inside
+    the kernel; the kernel body IS core.step.device_step, so every result
+    field must be exactly equal to the vmap scan — no tolerances."""
+    tasks = random_task_set(TASK_SET_SEEDS[k], k)
+    harv, eta = MODES[mode]
+    sim = SimConfig(policy=pol, horizon=HORIZON, seed=3)
+    cfg, statics = fleet.from_sim_config(tasks, harv, eta, sim=sim, dt=DT)
+    ref = fleet.simulate_fleet(cfg, statics)
+    fused = fleet.simulate_fleet(cfg, statics, mode="fused")
+    for name in ref._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, name)), np.asarray(getattr(fused, name)),
+            err_msg=name)
+
+
+def test_fused_run_segments_resume_mid_horizon():
+    """Fused segmented execution with checkpoint/resume: run half the
+    horizon fused, resume the carry at ``start_step``, and land bit-exactly
+    on the vmap run — results AND the end-of-horizon carry pytree."""
+    import dataclasses
+
+    harv, eta = MODES["intermittent"]
+    tasks = random_task_set(TASK_SET_SEEDS[2], 2)
+    sim = SimConfig(policy="zygarde", horizon=HORIZON, seed=3)
+    cfg, statics = fleet.from_sim_config(tasks, harv, eta, sim=sim, dt=DT)
+    full, cfull = fleet.run_segments(cfg, statics, 3, mode="vmap")
+
+    half = dataclasses.replace(statics, horizon=HORIZON / 2)
+    _, carry = fleet.run_segments(cfg, half, 2, mode="fused")
+    res, cf = fleet.run_segments(cfg, statics, 2, carry=carry,
+                                 start_step=half.n_steps, mode="fused")
+    for name in res._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, name)), np.asarray(getattr(full, name)),
+            err_msg=name)
+    for name in cf._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(cf, name)), np.asarray(getattr(cfull, name)),
+            err_msg=f"carry.{name}")
+
+
+def test_fused_odd_device_count_padded_tiles():
+    """An odd fleet size on a small block (D=5, block_d=2 -> Dp=6) pads the
+    device axis; padded all-zero devices never release work and their rows
+    are sliced off — real devices stay bit-exact vs the vmap scan."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    harv, eta = MODES["intermittent"]
+    tasks = random_task_set(TASK_SET_SEEDS[2], 2)
+    sim = SimConfig(policy="zygarde", horizon=HORIZON, seed=3)
+    cfg1, statics = fleet.from_sim_config(tasks, harv, eta, sim=sim, dt=DT)
+    cfg = jax.tree.map(lambda x: jnp.concatenate([x] * 5, axis=0), cfg1)
+    ref = fleet.simulate_fleet(cfg, statics)
+    carry = fleet.init_fleet(cfg, statics)
+    carry = ops.fleet_fused_steps(cfg, carry, jnp.int32(0), statics=statics,
+                                  n_steps=statics.n_steps, block_d=2)
+    fused = fleet.finalize_fleet(cfg, carry, statics)
+    for name in ref._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, name)), np.asarray(getattr(fused, name)),
+            err_msg=name)
+
+
+def _walk_eqns(jaxpr, stop_inside=("pallas_call",)):
+    """Yield every eqn in ``jaxpr`` and its sub-jaxprs, without descending
+    into the params of primitives named in ``stop_inside``."""
+    def subs(val):
+        if hasattr(val, "jaxpr"):          # ClosedJaxpr
+            return [val.jaxpr]
+        if hasattr(val, "eqns"):           # raw Jaxpr
+            return [val]
+        if isinstance(val, (list, tuple)):
+            return [j for v in val for j in subs(v)]
+        return []
+
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name in stop_inside:
+            continue
+        for val in eqn.params.values():
+            for sub in subs(val):
+                yield from _walk_eqns(sub, stop_inside)
+
+
+def test_fused_segment_is_one_pallas_call():
+    """The fused mode's whole point: a segment traces to exactly ONE
+    pallas_call with NO scan/while around it (the time loop lives inside
+    the kernel) — vs the per-step pallas mode, whose segment is a scan
+    wrapping a per-step kernel dispatch."""
+    from repro.fleet.simulator import _scan_steps
+    from repro.kernels import ops
+
+    harv, eta = MODES["intermittent"]
+    tasks = random_task_set(TASK_SET_SEEDS[1], 1)
+    sim = SimConfig(policy="zygarde", horizon=HORIZON, seed=3)
+    cfg, statics = fleet.from_sim_config(tasks, harv, eta, sim=sim, dt=DT)
+    carry = fleet.init_fleet(cfg, statics)
+
+    jaxpr = jax.make_jaxpr(
+        lambda c, s, i0: ops.fleet_fused_steps(
+            c, s, i0, statics=statics, n_steps=17)
+    )(cfg, carry, 0)
+    names = [e.primitive.name for e in _walk_eqns(jaxpr.jaxpr)]
+    assert names.count("pallas_call") == 1
+    assert "scan" not in names and "while" not in names
+
+    # the per-step kernel mode, for contrast: one scan, kernel inside it
+    jaxpr_step = jax.make_jaxpr(
+        lambda c, s, i0: _scan_steps(c, s, i0, statics, 17, True)
+    )(cfg, carry, 0)
+    names_step = [e.primitive.name for e in _walk_eqns(
+        jaxpr_step.jaxpr, stop_inside=())]
+    assert "scan" in names_step
 
 
 # --------------------------------------------------------------------------- #
