@@ -90,18 +90,16 @@ def _grid(task, horizon):
     )
 
 
-def _measure_fleet(cfg, statics, label, *, use_pallas=False, mode=None,
-                   repeats=5):
+def _measure_fleet(cfg, statics, label, *, mode=None, repeats=5):
     """AOT compile + steady-state timing of one simulate_fleet variant
     (roofline-joined under ``--profile``); returns (Measurement, result)."""
     meas = profiling.measure(
-        lambda c: fleet.simulate_fleet(c, statics, use_pallas=use_pallas,
-                                       mode=mode),
+        lambda c: fleet.simulate_fleet(c, statics, mode=mode),
         cfg, label=label, repeats=repeats, warmup=1)
     if common.PROFILE:
         meas = profiling.roofline_join(meas)
     meas.extra.pop("_compiled", None)
-    res = fleet.simulate_fleet(cfg, statics, use_pallas=use_pallas, mode=mode)
+    res = fleet.simulate_fleet(cfg, statics, mode=mode)
     return meas, res
 
 
@@ -200,7 +198,7 @@ def run(quick: bool = True) -> None:
 
     vmap_m, res_v = _measure_fleet(cfg, statics, "fleet_vmap_scan")
     pallas_m, res_p = _measure_fleet(cfg, statics, "fleet_pallas",
-                                     use_pallas=True)
+                                     mode="pallas")
     assert (np.asarray(res_v.scheduled) == np.asarray(res_p.scheduled)).all()
 
     # telemetry overhead, both tiers: bit-exact results, default tier

@@ -14,6 +14,22 @@ Rows carry ``jobs_per_sec`` (gated with the wide throughput band by
 scheduled jobs (seeded + deterministic, gated with the tight score
 band).  The fleet is also re-timed with ``adapt=False`` to price the
 adaptation/propagation hook.
+
+Two streaming rows exercise :meth:`FleetServeEngine.run_stream`, the
+donated chunked path whose resident footprint is O(chunk) rather than
+O(total jobs):
+
+* ``fleet_stream_adapt_off`` — the monolithic adapt-off workload chunked
+  4x (128 devices x 4 chunks x 3200 jobs), bit-exact vs ``run`` and
+  gated to stay at least at the monolithic rate.
+* ``fleet_stream_1m`` — >= 1e6 live jobs in ONE ``run_stream`` call
+  (4096 devices x 245 jobs each), impossible monolithically without
+  materialising the full O(total-jobs) feature tables.
+
+Both report the compile/steady split the same way
+:mod:`repro.launch.profiling` does — ``run_stream`` AOT-compiles its
+chunk runners (``jit -> lower -> compile``), so ``compile_s`` is the
+one-off cost and ``stream_jobs_per_sec`` times staging + execution only.
 """
 from __future__ import annotations
 
@@ -45,6 +61,21 @@ def _config(n_jobs, adapt):
 def _fresh_model():
     m = agile("mnist")
     return type(m)(m.cfg, m.params, [b for b in m.bank])
+
+
+def _stream_row(mode, res, n_dev):
+    """Flat row for one run_stream call: steady throughput with the
+    compile split held out, plus the O(chunk) memory evidence."""
+    sched = float(np.asarray(res.fleet.scheduled).sum())
+    acc = float(np.asarray(res.fleet.correct).sum()) / max(sched, 1.0)
+    return dict(
+        mode=mode, devices=n_dev, jobs=res.jobs, n_chunks=res.n_chunks,
+        wall_s=round(res.wall_s, 3),
+        stream_jobs_per_sec=round(res.jobs_per_sec, 1),
+        compile_s=round(res.compile_s, 3),
+        serve_peak_bytes=int(res.peak_bytes),
+        chunk_table_bytes=int(res.chunk_table_bytes),
+        accuracy_score=round(acc, 4))
 
 
 def run(quick: bool = True) -> None:
@@ -90,6 +121,34 @@ def run(quick: bool = True) -> None:
     assert live["speedup"] >= 20.0, (
         f"live fleet {live['jobs_per_sec']} jobs/s is only "
         f"{live['speedup']}x the scalar engine (need >= 20x)")
+
+    # streaming: the same adapt-off workload chunked through donated
+    # windows — one cold call, compile split out by run_stream itself
+    seng = FleetServeEngine([_fresh_model()], harv, eta=1.0,
+                            config=_config(n_jobs, adapt=False))
+    sres = seng.run_stream([reqs], n_devices=n_dev, n_chunks=4)
+    rows.append(_stream_row("fleet_stream_adapt_off", sres, n_dev))
+    mono_off = rows[2]
+    assert sres.jobs == mono_off["jobs"], "stream/mono workload mismatch"
+    assert sres.jobs_per_sec >= 0.7 * mono_off["jobs_per_sec"], (
+        f"streaming serve {sres.jobs_per_sec:.1f} jobs/s fell below the "
+        f"monolithic rate {mono_off['jobs_per_sec']} jobs/s")
+
+    # million-job row: one run_stream call, >= 1e6 released jobs, resident
+    # tables bounded by the chunk window (total_jobs cycles the base
+    # stream; coarser units keep dt at 0.1 so the horizon stays ~5k steps)
+    m_dev, m_jobs, m_chunks = 4096, 245, 8
+    mcfg = ServeConfig(policy="zygarde", period=_PERIOD, deadline=1.5,
+                       horizon=m_jobs * _PERIOD + 2.0, adapt=False,
+                       start_charged=True, sim_dt=0.1,
+                       unit_time=[0.4] * _fresh_model().n_units)
+    meng = FleetServeEngine([_fresh_model()], harv, eta=1.0, config=mcfg)
+    mres = meng.run_stream([reqs], n_devices=m_dev, total_jobs=m_jobs,
+                           n_chunks=m_chunks)
+    assert mres.jobs >= 1_000_000, (
+        f"million-job row only released {mres.jobs} jobs")
+    rows.append(_stream_row("fleet_stream_1m", mres, m_dev))
+
     emit("serve", rows)
 
 

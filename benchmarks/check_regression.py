@@ -51,9 +51,17 @@ BASELINE_DIR = FRESH_DIR / "baselines"
 #: mode on CPU runners, so only the wide band is meaningful there)
 THROUGHPUT_KEYS = ("device_steps_per_sec", "devices_per_sec",
                    "candidates_per_sec", "windows_per_sec",
-                   "jobs_per_sec", "fused_device_steps_per_sec")
+                   "jobs_per_sec", "fused_device_steps_per_sec",
+                   "stream_jobs_per_sec")
+#: lower-is-better machine-dependent metrics, gated with the same wide
+#: band mirrored (fresh must stay below (1 + tolerance) x baseline).  A
+#: zero on either side skips the gate: ``serve_peak_bytes`` degrades to 0
+#: on backends without memory_stats (CPU), where it means "unmeasured",
+#: not "no memory".
+LOWER_IS_BETTER_KEYS = ("serve_peak_bytes",)
 #: row fields that identify a row (checked, never gated)
-IDENTITY_KEYS = ("mode", "n_segments", "budget", "devices", "n_tasks")
+IDENTITY_KEYS = ("mode", "n_segments", "budget", "devices", "n_tasks",
+                 "n_chunks")
 
 
 def _is_score_key(key: str) -> bool:
@@ -102,6 +110,15 @@ def compare_docs(name: str, base: dict, fresh: dict, *,
                     problems.append(
                         f"{where}: {key} regressed {bval:g} -> {fval:g} "
                         f"(floor {floor:g} at tolerance "
+                        f"{throughput_tolerance:g})")
+            elif key in LOWER_IS_BETTER_KEYS:
+                if bval <= 0 or fval <= 0:
+                    continue          # 0 = unmeasured on this backend
+                ceil = (1.0 + throughput_tolerance) * bval
+                if fval > ceil:
+                    problems.append(
+                        f"{where}: {key} grew {bval:g} -> {fval:g} "
+                        f"(ceiling {ceil:g} at tolerance "
                         f"{throughput_tolerance:g})")
             elif _is_score_key(key):
                 if fval < bval - score_tolerance:

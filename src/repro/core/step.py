@@ -122,6 +122,36 @@ def _take1(table, idx):
     return _take(table, idx[..., None])[..., 0]
 
 
+def take_rows(table, idx):
+    """``table[..., idx, :]`` — one row of the second-to-last axis per index.
+
+    ``table``: ``(..., N, M)``; ``idx``: int ``(...,)`` with leading axes
+    broadcastable against the table's -> ``(..., M)`` in ``table.dtype``.
+    The live-serving transition uses this to pull one device's feature /
+    centroid row out of the flattened ``(K*J*U, ...)`` tables.  Same
+    lowering contract as :func:`_take`: ``take_along_axis`` (clamped) on
+    the XLA frontends, a one-hot iota contraction over the row axis inside
+    Mosaic kernels — bit-exact against each other (one hot lane,
+    ``x + 0 == x``).  A 2-D table with batched indices lowers as a plain
+    ``jnp.take`` so the operand is gathered directly instead of being
+    broadcast across the batch.
+    """
+    if not _ONEHOT_ONLY:
+        n = table.shape[-2]
+        if table.ndim == 2:
+            return jnp.take(table, jnp.clip(idx, 0, n - 1), axis=0)
+        lead = jnp.broadcast_shapes(table.shape[:-2], idx.shape)
+        t = jnp.broadcast_to(table, lead + table.shape[-2:])
+        ix = jnp.broadcast_to(idx[..., None, None],
+                              lead + (1,) + table.shape[-1:])
+        return jnp.take_along_axis(t, ix, axis=-2, mode="clip")[..., 0, :]
+    oh = _oh_eq(idx, table.shape[-2])[..., None]       # (..., N, 1)
+    if table.dtype == jnp.bool_:
+        return jnp.any(oh & table, axis=-2)
+    return jnp.sum(jnp.where(oh, table, jnp.zeros((), table.dtype)),
+                   axis=-2)
+
+
 def _flat2(t):
     """Collapse the two trailing axes (e.g. (..., K, U) -> (..., K*U))."""
     return t.reshape(t.shape[:-2] + (t.shape[-2] * t.shape[-1],))
@@ -669,6 +699,14 @@ def apply_step(params: StepParams, st: DeviceCarry, t, sel, picked, run,
     # live margin, otherwise the precomputed passes table applies
     if live:
         margin_sel, passed_sel, correct_sel = outcomes
+        if jnp.ndim(passed_sel) == complete.ndim - 1:
+            # batch-polymorphic: outcomes carry the leading device/tile
+            # axes but not the queue axis — expand so the broadcasts below
+            # align the right way up (value-identical on the vmap path,
+            # where the outcomes are rank-0 scalars)
+            margin_sel = margin_sel[..., None]
+            passed_sel = passed_sel[..., None]
+            correct_sel = correct_sel[..., None]
         passed = jnp.broadcast_to(passed_sel, complete.shape)
         q_margin = jnp.where(complete, margin_sel, st.q_margin)
         q_correct = jnp.where(complete, correct_sel, st.q_correct)

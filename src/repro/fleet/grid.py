@@ -339,7 +339,7 @@ def build(grid: SweepGrid) -> tuple[FleetConfig, FleetStatics, list[dict]]:
     return stack_configs(devices), statics, meta
 
 
-def sweep(grid: SweepGrid, use_pallas: bool = False, mesh=None):
+def sweep(grid: SweepGrid, use_pallas=None, mesh=None, mode=None):
     """Simulate the whole grid in one jitted call.
 
     Returns ``(FleetResult, meta)``: stacked (D,) metric arrays (plus the
@@ -352,5 +352,5 @@ def sweep(grid: SweepGrid, use_pallas: bool = False, mesh=None):
 
     cfg, statics, meta = build(grid)
     res = simulate_fleet_sharded(cfg, statics, mesh=mesh,
-                                 use_pallas=use_pallas)
+                                 use_pallas=use_pallas, mode=mode)
     return res, meta

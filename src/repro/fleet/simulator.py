@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import warnings
 from typing import Callable, Optional
 
 import numpy as np
@@ -77,11 +78,20 @@ TUNABLE_FIELDS = ("eta", "e_opt", "exit_thr", "use_exit_thr", "persistent")
 FLEET_MODES = ("vmap", "pallas", "fused")
 
 
-def _resolve_mode(mode: Optional[str], use_pallas: bool) -> str:
-    """Fold the legacy ``use_pallas`` flag and the new ``mode`` kwarg into
-    one mode string (``mode`` wins when both are given)."""
+def _resolve_mode(mode: Optional[str],
+                  use_pallas: Optional[bool] = None) -> str:
+    """Fold the legacy ``use_pallas`` flag and the ``mode`` kwarg into one
+    mode string.  ``use_pallas`` is DEPRECATED: passing it (either value)
+    warns; the mode strings (:data:`FLEET_MODES`) are the API.  An explicit
+    ``mode`` wins when both are given."""
+    if use_pallas is not None:
+        warnings.warn(
+            "use_pallas= is deprecated; pass mode='pallas' (or 'vmap' / "
+            "'fused') instead", DeprecationWarning, stacklevel=3)
+        if mode is None:
+            return "pallas" if use_pallas else "vmap"
     if mode is None:
-        return "pallas" if use_pallas else "vmap"
+        return "vmap"
     if mode not in FLEET_MODES:
         raise ValueError(f"mode must be one of {FLEET_MODES}, got {mode!r}")
     return mode
@@ -312,7 +322,7 @@ def _simulate_fleet_fused(cfg: FleetConfig,
 
 
 def simulate_fleet(cfg: FleetConfig, statics: FleetStatics,
-                   use_pallas: bool = False,
+                   use_pallas: Optional[bool] = None,
                    telemetry: Optional[T.TelemetryConfig] = None,
                    mode: Optional[str] = None):
     """Simulate every device in ``cfg`` in one jitted scan.
@@ -416,7 +426,7 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
                  hook: Optional[SegmentHook] = None,
                  carry: Optional[DeviceState] = None,
                  start_step: int = 0,
-                 use_pallas: bool = False,
+                 use_pallas: Optional[bool] = None,
                  mode: Optional[str] = None,
                  mesh=None,
                  telemetry: Optional[T.TelemetryConfig] = None,
@@ -558,7 +568,8 @@ def run_segments(cfg: FleetConfig, statics: FleetStatics,
 
 
 def simulate_fleet_sharded(cfg: FleetConfig, statics: FleetStatics,
-                           mesh=None, use_pallas: bool = False) -> FleetResult:
+                           mesh=None, use_pallas: Optional[bool] = None,
+                           mode: Optional[str] = None) -> FleetResult:
     """:func:`simulate_fleet` with the device axis partitioned over ``mesh``.
 
     The fleet axis is embarrassingly parallel (no cross-device collectives in
@@ -571,12 +582,13 @@ def simulate_fleet_sharded(cfg: FleetConfig, statics: FleetStatics,
 
     ``mesh=None`` falls back to the plain single-backend path.
     """
+    mode = _resolve_mode(mode, use_pallas)
     if mesh is None:
-        return simulate_fleet(cfg, statics, use_pallas=use_pallas)
+        return simulate_fleet(cfg, statics, mode=mode)
     # local import: repro.launch is a heavier dependency tree than the fleet
     from ..launch.sharding import shard_fleet_config
 
     n_real = cfg.n_devices
     cfg = shard_fleet_config(mesh, cfg)
-    res = simulate_fleet(cfg, statics, use_pallas=use_pallas)
+    res = simulate_fleet(cfg, statics, mode=mode)
     return jax.tree.map(lambda x: x[:n_real], res)

@@ -30,6 +30,18 @@ def pad_axis(a, axis: int, multiple: int, value=0.0):
     return jnp.pad(a, widths, constant_values=value)
 
 
+def pad_tree(nt, multiple: int, axis: int = 0, value=0.0):
+    """:func:`pad_axis` applied to every leaf of a NamedTuple pytree.
+
+    The whole-segment kernels (:mod:`repro.kernels.fleet_step`) tile the
+    leading device axis of several pytrees at once (params, carry, bank,
+    log) — all of them pad with the same block multiple, and padded rows
+    are inert by construction (``n_releases == 0`` configs) and sliced
+    back off the outputs.
+    """
+    return type(nt)(*[pad_axis(l, axis, multiple, value) for l in nt])
+
+
 def choose_block(size: int, block: int) -> tuple[int, int]:
     """Tile size and padded axis length for tiling ``size`` rows in blocks
     of (at most) ``block``.

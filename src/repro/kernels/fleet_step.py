@@ -43,13 +43,17 @@ from jax.experimental import pallas as pl
 
 from ..core.step import (DeviceCarry, StepParams, StepStatics, device_step,
                          onehot_lowering)
-from ._tiling import choose_block, pad_axis
+from ..fleet.state import ServeBank, ServeCarry, ServeLog
+from ._tiling import choose_block, pad_axis, pad_tree
 
 #: StepParams / DeviceCarry leaves that are booleans in the pytree but ride
 #: through Pallas refs as int32 0/1 masks (TPU-friendly dtypes).
 BOOL_PARAM_FIELDS = ("imprecise", "is_edfm", "persistent", "use_exit_thr",
                      "passes", "correct")
 BOOL_CARRY_FIELDS = ("was_off", "q_active", "q_correct", "q_apass")
+#: ServeLog leaves that are booleans (packed the same way for the fused
+#: serve kernel).
+BOOL_LOG_FIELDS = ("correct", "sched")
 
 
 def pack_tree(nt, bool_fields):
@@ -153,3 +157,150 @@ def fleet_fused_steps(
     if Dp != D:
         new = jax.tree.map(lambda l: l[:D], new)
     return new
+
+
+# --------------------------------------------------------------------- #
+# Fused live serving: classify + live-register update in-tile.
+# --------------------------------------------------------------------- #
+
+_N_BANK = len(ServeBank._fields)
+_N_LOG = len(ServeLog._fields)
+_N_TABLES = 5   # sel_feats, labels, clabels, fidx, thr
+
+
+def _serve_step_kernel(*refs, statics: StepStatics, n_steps: int):
+    """One device tile of live serving: rebuild the pytrees from the packed
+    refs, run the whole segment's serve loop in VMEM — the per-step body IS
+    :func:`repro.serve.fleet_engine.serve_step`, the exact trace the XLA
+    scan path runs, lowered with one-hot gathers — and write the device
+    carry + outcome log back.  The centroid bank tile is read-only
+    (adaptation is fleet-level and compiled out in fused mode)."""
+    # lazy: the serve engine imports this package's public wrappers
+    from ..serve.fleet_engine import ServeTables, serve_step
+
+    i0 = refs[0][0]
+    off = 2
+    p_refs = refs[off:off + _N_PARAMS]
+    off += _N_PARAMS
+    c_refs = refs[off:off + _N_CARRY]
+    off += _N_CARRY
+    b_refs = refs[off:off + _N_BANK]
+    off += _N_BANK
+    l_refs = refs[off:off + _N_LOG]
+    off += _N_LOG
+    t_refs = refs[off:off + _N_TABLES]
+    off += _N_TABLES
+    o_refs = refs[off:]
+
+    params = unpack_tree(StepParams(*[r[...] for r in p_refs]),
+                         BOOL_PARAM_FIELDS)
+    dev = unpack_tree(DeviceCarry(*[r[...] for r in c_refs]),
+                      BOOL_CARRY_FIELDS)
+    bank = ServeBank(*[r[...] for r in b_refs])
+    log = unpack_tree(ServeLog(*[r[...] for r in l_refs]), BOOL_LOG_FIELDS)
+    sel_f, labels, clabels, fidx, thr = [r[...] for r in t_refs]
+    # full_feats is adaptation-only (never read with adapt compiled out);
+    # alias the selected table so the pytree stays total
+    tables = ServeTables(sel_feats=sel_f, full_feats=sel_f, labels=labels,
+                         clabels=clabels, fidx=fidx, thr=thr)
+    job0 = refs[1][...]
+
+    def body(s, dl):
+        d, lg = dl
+        t = (i0 + s).astype(jnp.float32) * statics.dt
+        d, lg, _ = serve_step(params, tables, d, bank, lg, t, job0,
+                              statics=statics)
+        return (d, lg)
+
+    with onehot_lowering():
+        dev, log = lax.fori_loop(0, n_steps, body, (dev, log))
+    outs = (list(pack_tree(dev, BOOL_CARRY_FIELDS))
+            + list(pack_tree(log, BOOL_LOG_FIELDS)))
+    for ref, v in zip(o_refs, outs):
+        ref[...] = v
+
+
+@functools.partial(
+    jax.jit, static_argnames=("statics", "n_steps", "block_d", "interpret",
+                              "shared_bank", "per_dev_tables"))
+def serve_fused_steps(
+    cfg: StepParams,         # every leaf (D, ...)
+    carry: ServeCarry,       # dev/log leaves (D, ...); bank per mode
+    tables,                  # ServeTables; feature leaves (D, ...) if
+                             # per_dev_tables else shared
+    i0,                      # i32 scalar: first step index of this segment
+    job0,                    # (K,) i32: global job id of window row 0
+    *,
+    statics: StepStatics,
+    n_steps: int,
+    block_d: int = 128,
+    interpret: bool = False,
+    shared_bank: bool = False,
+    per_dev_tables: bool = False,
+) -> ServeCarry:
+    """Advance live serving ``n_steps`` timesteps in ONE ``pallas_call``.
+
+    The L1-top-2 classify + live-register update run in-tile with the
+    centroid bank VMEM-resident: a ``block_d``-row tile of the device
+    carry, outcome log, bank (unless ``shared_bank``) and feature tables
+    (if ``per_dev_tables``) is held while a ``fori_loop`` evaluates the
+    full admit → expire → pick → classify → apply transition per step.
+    Bit-exact vs :meth:`FleetServeEngine._scan_steps` — the kernel body is
+    the same :func:`serve_step` trace.  Requires ``adapt=False`` (bank
+    adaptation is fleet-level); the bank passes through unchanged.
+    """
+    D = cfg.policy.shape[0]
+    bd, Dp = choose_block(D, block_d)
+    p = pack_tree(cfg, BOOL_PARAM_FIELDS)
+    c = pack_tree(carry.dev, BOOL_CARRY_FIELDS)
+    lg = pack_tree(carry.log, BOOL_LOG_FIELDS)
+    b = carry.bank
+    sel_f, labels = tables.sel_feats, tables.labels
+    if Dp != D:
+        p = pad_tree(p, bd)
+        c = pad_tree(c, bd)
+        lg = pad_tree(lg, bd)
+        if not shared_bank:
+            b = pad_tree(b, bd)
+        if per_dev_tables:
+            sel_f = pad_axis(sel_f, 0, bd)
+            labels = pad_axis(labels, 0, bd)
+
+    def bspec(leaf):
+        nz = leaf.ndim - 1
+        return pl.BlockSpec((bd,) + leaf.shape[1:],
+                            lambda i, _nz=nz: (i,) + (0,) * _nz)
+
+    def wspec(leaf):
+        nz = leaf.ndim
+        return pl.BlockSpec(leaf.shape, lambda i, _nz=nz: (0,) * _nz)
+
+    job0 = jnp.asarray(job0, jnp.int32)
+    bank_spec = bspec if not shared_bank else wspec
+    tab_spec = bspec if per_dev_tables else wspec
+    tab_list = [sel_f, labels, tables.clabels, tables.fidx, tables.thr]
+    tab_specs = [tab_spec(sel_f), tab_spec(labels),
+                 wspec(tables.clabels), wspec(tables.fidx),
+                 wspec(tables.thr)]
+    out_tmpl = list(c) + list(lg)
+
+    outs = pl.pallas_call(
+        functools.partial(_serve_step_kernel, statics=statics,
+                          n_steps=n_steps),
+        grid=(Dp // bd,),
+        in_specs=([pl.BlockSpec((1,), lambda i: (0,)), wspec(job0)]
+                  + [bspec(l) for l in p] + [bspec(l) for l in c]
+                  + [bank_spec(l) for l in b] + [bspec(l) for l in lg]
+                  + tab_specs),
+        out_specs=[bspec(l) for l in out_tmpl],
+        out_shape=[jax.ShapeDtypeStruct(l.shape, l.dtype)
+                   for l in out_tmpl],
+        interpret=interpret,
+    )(jnp.asarray(i0, jnp.int32).reshape(1), job0, *p, *c, *b, *lg,
+      *tab_list)
+    new_dev = unpack_tree(DeviceCarry(*outs[:_N_CARRY]), BOOL_CARRY_FIELDS)
+    new_log = unpack_tree(ServeLog(*outs[_N_CARRY:]), BOOL_LOG_FIELDS)
+    if Dp != D:
+        new_dev = jax.tree.map(lambda l: l[:D], new_dev)
+        new_log = jax.tree.map(lambda l: l[:D], new_log)
+    return ServeCarry(dev=new_dev, bank=carry.bank, log=new_log)

@@ -30,6 +30,7 @@ from .decode_gqa import decode_gqa as _decode_gqa
 from .flash_attn import flash_attention as _flash_attention
 from .fleet_priority import fleet_priority as _fleet_priority
 from .fleet_step import fleet_fused_steps as _fleet_fused_steps
+from .fleet_step import serve_fused_steps as _serve_fused_steps
 from .l1_topk2 import l1_topk2 as _l1_topk2
 from .pairwise_l1 import pairwise_l1 as _pairwise_l1
 from .rglru_scan import rglru_scan as _rglru_scan
@@ -149,3 +150,15 @@ def fleet_fused_steps(cfg, carry, i0, *, statics, n_steps, **kw):
     kw.setdefault("interpret", _interpret())
     return _fleet_fused_steps(cfg, carry, i0, statics=statics,
                               n_steps=n_steps, **kw)
+
+
+def serve_fused_steps(cfg, carry, tables, i0, job0, *, statics, n_steps,
+                      **kw):
+    """Whole-segment fused LIVE serving: advance every device ``n_steps``
+    timesteps in ONE ``pallas_call`` with the L1-top-2 classify +
+    live-register update in-tile and the centroid bank VMEM-resident
+    (:mod:`repro.kernels.fleet_step`).  Bit-exact vs the serve scan —
+    the kernel body IS :func:`repro.serve.fleet_engine.serve_step`."""
+    kw.setdefault("interpret", _interpret())
+    return _serve_fused_steps(cfg, carry, tables, i0, job0,
+                              statics=statics, n_steps=n_steps, **kw)

@@ -283,15 +283,21 @@ def shard_serve_carry(mesh: Mesh, carry: Any, *,
                           log=shard_fleet_config(mesh, carry.log))
 
 
-def shard_serve_tables(mesh: Mesh, tables: Any,
-                       per_device: bool = False) -> Any:
-    """Place a :class:`repro.serve.fleet_engine.ServeTables`.
+def serve_table_shardings(mesh: Mesh, tables: Any,
+                          per_device: bool = False) -> Any:
+    """Per-leaf :class:`NamedSharding` pytree for a
+    :class:`repro.serve.fleet_engine.ServeTables` — the placement *rule*
+    without the placement.
 
     The classifier metadata (``clabels``/``fidx``/``thr``) never has a
     device axis and replicates.  The feature/label tables gain a leading
     ``D`` axis only when every device serves its *own* request stream
     (``per_device=True``) — then they shard over the fleet axis; a shared
     stream replicates (each shard classifies against the same table).
+    Exposed separately so streaming callers can hand the shardings to
+    ``jax.device_put`` on freshly staged chunk windows (same shapes every
+    chunk, so the rule is computed once) — :func:`shard_serve_tables` is
+    this rule applied.
     """
     batched = {"sel_feats", "full_feats", "labels"} if per_device else set()
     axes = tuple(mesh.axis_names)
@@ -299,5 +305,13 @@ def shard_serve_tables(mesh: Mesh, tables: Any,
     for name, leaf in tables._asdict().items():
         spec = (P(axes, *([None] * (leaf.ndim - 1))) if name in batched
                 else P())
-        out[name] = jax.device_put(leaf, NamedSharding(mesh, spec))
+        out[name] = NamedSharding(mesh, spec)
     return type(tables)(**out)
+
+
+def shard_serve_tables(mesh: Mesh, tables: Any,
+                       per_device: bool = False) -> Any:
+    """Place a :class:`repro.serve.fleet_engine.ServeTables` according to
+    :func:`serve_table_shardings`."""
+    return jax.tree.map(jax.device_put, tables,
+                        serve_table_shardings(mesh, tables, per_device))

@@ -226,6 +226,189 @@ def classify_unit(bank: ServeBank, tables: ServeTables, tk, u, job):
     return margin, ci, pred
 
 
+def _classify_rows(bank: ServeBank, tables: ServeTables, tk, u, job):
+    """Batch-polymorphic twin of :func:`classify_unit`.
+
+    ``tk``/``u``/``job`` carry arbitrary leading axes (the scan passes
+    ``(D,)``, the fused kernel a ``(bd,)`` tile); ``bank``/feature leaves
+    may or may not share those leading axes (shared vs per-device modes).
+    All gathers go through the dual-lowering :func:`repro.core.step.take_rows`
+    / ``_take`` helpers so the same trace compiles as ``take_along_axis``
+    under XLA and as one-hot iota contractions inside Mosaic — and the
+    arithmetic (innermost L1 reduction, first-min tie-break, one-hot-masked
+    second minimum, scale-free margin) matches :func:`classify_unit`
+    bit-for-bit.
+    """
+    K = tables.fidx.shape[-3]
+    Ub = tables.fidx.shape[-2]
+    Wl = tables.labels.shape[-1]
+    C = bank.centroids.shape[-2]
+    F = bank.centroids.shape[-1]
+    ku = tk * Ub + u
+    sf = tables.sel_feats.reshape(
+        tables.sel_feats.shape[:-4] + (K * Wl * Ub,
+                                       tables.sel_feats.shape[-1]))
+    fsel = S.take_rows(sf, (tk * Wl + job) * Ub + u)          # (..., S)
+    idxs = S.take_rows(
+        tables.fidx.reshape(tables.fidx.shape[:-3]
+                            + (K * Ub, tables.fidx.shape[-1])), ku)
+    crow = S.take_rows(
+        bank.centroids.reshape(bank.centroids.shape[:-4] + (K * Ub, C * F)),
+        ku)
+    crow = crow.reshape(crow.shape[:-1] + (C, F))             # (..., C, F)
+    csel = S._take(crow, idxs[..., None, :])                  # (..., C, S)
+    dist = jnp.sum(jnp.abs(fsel[..., None, :] - csel), axis=-1)
+    d1 = jnp.min(dist, axis=-1)
+    ci = jnp.argmin(dist, axis=-1).astype(_I32)
+    iota_c = lax.broadcasted_iota(_I32, dist.shape, dist.ndim - 1)
+    d2 = jnp.min(jnp.where(iota_c == ci[..., None], _POS, dist), axis=-1)
+    margin = (d2 - d1) / jnp.maximum(d1 + d2, 1e-9)
+    pred = S._take1(
+        tables.clabels.reshape(tables.clabels.shape[:-3] + (K * Ub * C,)),
+        ku * C + ci)
+    return margin, ci, pred
+
+
+def serve_step(cfg: FleetConfig, tables: ServeTables, dev, bank: ServeBank,
+               log: ServeLog, t, job0, *, statics: FleetStatics):
+    """One live-serving timestep for every device — batch-polymorphic.
+
+    The whole-fleet twin of :meth:`FleetServeEngine._scan_steps`'s per-step
+    body, written over arbitrary leading device axes so the exact same
+    trace runs as the scan body (XLA, leading ``(D,)``) *and* inside the
+    fused Pallas segment kernel (a ``(bd,)`` VMEM tile under
+    :func:`repro.core.step.onehot_lowering`): admit → drop-expired → pick →
+    classify against the bank → inject ``(margin, passed, correct)`` into
+    :func:`repro.core.step.apply_step` → latch the utility pass → write the
+    per-job outcome log.
+
+    ``job0`` (``(K,)`` i32) rebases global job ids into the streamed table
+    window: row ``j`` of the ``(..., K, Wl)`` feature/label/log leaves holds
+    job ``job0[k] + j``.  The monolithic path passes zeros, making the
+    rebasing the identity.  Bank adaptation stays fleet-level (the
+    propagation convs don't tile) — the engine applies it after this step
+    from the returned ``(first_pass, tk, u, job, ci)`` aux; the ordering
+    swap is exact because the log never reads the bank.
+
+    Like :func:`repro.core.step.apply_step`'s live mode, ``t_end`` is left
+    to the ``t + dt`` fallback in *both* execution contexts so the serve
+    paths stay bit-identical to each other and to the scalar engine.
+    """
+    K = cfg.period.shape[-1]
+    n_u = cfg.unit_time.shape[-1]
+    Ue = cfg.exit_thr.shape[-1]
+    Wl = tables.labels.shape[-1]
+    Ub = tables.fidx.shape[-2]
+    Q = statics.queue_size
+
+    dev = S.admit(cfg, dev, t, statics, True)
+    dev = S.drop_expired(cfg, dev, t, True)
+    sel, picked, run, e_new = S.pick(cfg, dev, t, statics, True)
+
+    # selected-slot identity, pre-apply
+    tk = jnp.clip(S._take1(dev.q_task, sel), 0, K - 1)
+    u = jnp.clip(S._take1(dev.q_unit, sel), 0, n_u - 1)
+    job = jnp.clip(S._take1(dev.q_job, sel) - S._take1(job0, tk),
+                   0, Wl - 1)
+    complete = run & (S._take1(dev.q_time_left, sel) - statics.dt
+                      <= statics.dt * 1e-3)
+    exited_pre = S._take1(dev.q_exited, sel)
+    apass_pre = S._take1(dev.q_apass, sel)
+    ddl = S._take1(dev.q_deadline, sel)
+    nu_sel = S._take1(cfg.n_units, tk)
+    thr_cfg = S._take1(S._flat2(cfg.exit_thr), tk * Ue + u)
+
+    margin, ci, pred = _classify_rows(bank, tables, tk, u, job)
+    label = S._take1(
+        tables.labels.reshape(tables.labels.shape[:-2] + (K * Wl,)),
+        tk * Wl + job)
+    correct = pred == label
+    pass_bank = margin > S._take1(
+        tables.thr.reshape(tables.thr.shape[:-2] + (K * Ub,)), tk * Ub + u)
+    passed = jnp.where(cfg.use_exit_thr, margin > thr_cfg, pass_bank)
+
+    dev = S.apply_step(cfg, dev, t, sel, picked, run, e_new, statics, True,
+                       (margin, passed, correct))
+
+    # engine-owned utility-pass latch: adaptation fires at the FIRST
+    # bank-threshold pass (like DynamicJobProfile — even under EDF, where
+    # the scheduler itself never exits early)
+    first_pass = complete & pass_bank & ~apass_pre
+    oh = S._oh_eq(sel, Q)
+    dev = dev._replace(
+        q_apass=dev.q_apass | (oh & (complete & pass_bank)[..., None]))
+
+    # per-job outcome log (mirrors apply_step's completion math)
+    exit_now = complete & cfg.imprecise & (exited_pre < 0) & passed
+    exited_mid = jnp.where(exit_now, u, exited_pre)
+    full_mand = complete & (exited_mid < 0) & (u + 1 >= nu_sel)
+    mand_now = exit_now | full_mand
+    sched_now = (t + statics.dt) <= ddl
+    nd = complete.ndim
+    kk = lax.broadcasted_iota(_I32, complete.shape + (K, Wl), nd)
+    jj = lax.broadcasted_iota(_I32, complete.shape + (K, Wl), nd + 1)
+    m_jd = (complete[..., None, None]
+            & (kk == tk[..., None, None]) & (jj == job[..., None, None]))
+
+    def put(old, new, mask=None):
+        mm = m_jd if mask is None else m_jd & mask[..., None, None]
+        return jnp.where(mm, new[..., None, None], old)
+
+    log = ServeLog(
+        units=put(log.units, u + 1),
+        pred=put(log.pred, pred),
+        correct=put(log.correct, correct),
+        margin=put(log.margin, margin),
+        exit_unit=put(log.exit_unit, u, first_pass),
+        sched=put(log.sched, sched_now, mand_now),
+    )
+    return dev, log, (first_pass, tk, u, job, ci)
+
+
+def _shift_log(log: ServeLog, shift):
+    """Advance the per-task log window by ``shift`` jobs.
+
+    Row ``j`` of the new window is row ``j + shift[k]`` of the old; rows
+    shifted in from beyond the old window reset to the t=0 defaults (the
+    same values :meth:`FleetServeEngine.build`'s ``log0`` uses, so a job
+    that is never served reads identically in streamed and monolithic
+    runs).  ``shift`` is a traced ``(K,)`` i32 — every chunk shares one
+    compiled program.
+    """
+    Wl = log.units.shape[-1]
+    K = shift.shape[-1]
+    jj = lax.broadcasted_iota(_I32, (K, Wl), 1)
+    src = jj + shift[..., None]
+    valid = src < Wl
+    srcc = jnp.clip(src, 0, Wl - 1)
+
+    def gather(leaf, default):
+        idx = jnp.broadcast_to(srcc, leaf.shape)
+        moved = jnp.take_along_axis(leaf, idx, axis=-1)
+        return jnp.where(valid, moved, jnp.asarray(default, leaf.dtype))
+
+    return ServeLog(
+        units=gather(log.units, 0),
+        pred=gather(log.pred, -1),
+        correct=gather(log.correct, False),
+        margin=gather(log.margin, 0.0),
+        exit_unit=gather(log.exit_unit, -1),
+        sched=gather(log.sched, False),
+    )
+
+
+def _device_peak_bytes() -> int:
+    """Peak live device bytes, or 0 where the backend keeps no memory
+    statistics (plain-CPU ``memory_stats()`` returns ``None``)."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return 0
+    if not stats:
+        return 0
+    return int(stats.get("peak_bytes_in_use", 0))
+
+
 @dataclass
 class FleetServeResult:
     """Outcome of one vectorized live-serving run.
@@ -250,6 +433,15 @@ class FleetServeResult:
     jobs: int
     wall_s: float
     telemetry: Optional[T.Telemetry] = None
+    #: steady-state/compile split (streaming runs): ``wall_s`` above counts
+    #: staging + execution only; one-time chunk-runner compiles land here
+    compile_s: float = 0.0
+    #: backend peak live bytes after the run (0 on stats-less backends)
+    peak_bytes: int = 0
+    #: device bytes of ONE staged feature-window table — the O(chunk)
+    #: resident footprint that replaces the O(total jobs) tables of `run`
+    chunk_table_bytes: int = 0
+    n_chunks: int = 1
 
     @property
     def jobs_per_sec(self) -> float:
@@ -289,6 +481,11 @@ class FleetServeEngine:
         self.adapt_weight = float(adapt_weight)
         self.bank0, self._bank_tables, self.meta = stack_banks(self.models)
         self._runners: dict = {}
+        # AOT-compiled streaming chunk runners, keyed by (static config,
+        # arg shape/dtype signature).  jit's own dispatch cache is NOT
+        # populated by ``lower().compile()``, so the executables are cached
+        # and invoked directly — same-shape chunks never recompile.
+        self._compiled: dict = {}
 
     # ------------------------------------------------------------------ #
     # Builders.
@@ -481,11 +678,18 @@ class FleetServeEngine:
         return ServeBank(centroids=cents, counts=counts)
 
     def _scan_steps(self, cfg: FleetConfig, tables: ServeTables,
-                    carry, i0, tel=None, *, statics: FleetStatics,
+                    carry, i0, tel=None, job0=None, *,
+                    statics: FleetStatics,
                     n_steps: int, adapt: bool, shared: bool,
                     per_dev_tables: bool,
                     tcfg: Optional[T.TelemetryConfig] = None):
         """Scan ``n_steps`` live timesteps from step index ``i0``.
+
+        The per-step transition is the batch-polymorphic
+        :func:`serve_step` (shared verbatim with the fused Pallas kernel),
+        plus the fleet-level bank adaptation from its aux outputs.
+        ``job0`` (``(K,)`` i32, default zeros) rebases global job ids into
+        streamed table windows — see :meth:`run_stream`.
 
         With ``tcfg`` set, the scan emits the telemetry columns of the
         requested tier and reduces them into ``tel`` post-scan, returning
@@ -507,6 +711,8 @@ class FleetServeEngine:
         u_max = cfg.unit_time.shape[2] - 1
         J = tables.labels.shape[-1]
         Q = statics.queue_size
+        if job0 is None:
+            job0 = jnp.zeros((K,), _I32)
         tab_axes = ServeTables(
             sel_feats=0 if per_dev_tables else None,
             full_feats=0 if per_dev_tables else None,
@@ -518,32 +724,61 @@ class FleetServeEngine:
             """Selected-slot identity for one device, pre-apply."""
             tk = jnp.clip(s.q_task[a], 0, K - 1)
             u = jnp.clip(s.q_unit[a], 0, u_max)
-            job = jnp.clip(s.q_job[a], 0, J - 1)
+            job = jnp.clip(s.q_job[a] - job0[tk], 0, J - 1)
             complete = r & (s.q_time_left[a] - statics.dt
                             <= statics.dt * 1e-3)
             return (tk, u, job, complete, s.q_exited[a], s.q_apass[a],
                     s.q_deadline[a], c.n_units[tk], c.imprecise,
                     c.use_exit_thr, c.exit_thr[tk, u])
 
+        def adapt_bank(bank, tk, u, job, ci, first_pass):
+            Ub = tables.fidx.shape[-2]
+            if per_dev_tables:
+                x_full = tables.full_feats[
+                    jnp.arange(tk.shape[0]), tk, job, u]
+            else:
+                ff = tables.full_feats.reshape(
+                    (K * J * Ub, tables.full_feats.shape[-1]))
+                x_full = S.take_rows(ff, (tk * J + job) * Ub + u)
+
+            def _upd(args):
+                b, xf, tkk, uu, cii, fp = args
+                if shared:
+                    return self._adapt_shared(b, xf, tkk, uu, cii, fp)
+                return jax.vmap(self._adapt_per_device)(
+                    b, xf, tkk, uu, cii, fp)
+
+            # most steps complete nothing: skip the propagation convs
+            # entirely unless some device's utility test just passed
+            return lax.cond(
+                jnp.any(first_pass), _upd, lambda args: args[0],
+                (bank, x_full, tk, u, ci, first_pass))
+
         def step(carry, i):
+            dev, bank, log = carry
+            t = i.astype(_F32) * statics.dt
+            dev, log, (first_pass, tk, u, job, ci) = serve_step(
+                cfg, tables, dev, bank, log, t, job0, statics=statics)
+            if adapt:
+                bank = adapt_bank(bank, tk, u, job, ci, first_pass)
+            new_carry = ServeCarry(dev=dev, bank=bank, log=log)
+            if counters:
+                return new_carry, T_trace.emit_counters(dev)
+            return new_carry, None
+
+        def step_trace(carry, i):
             dev, bank, log = carry
             dev0 = dev
             t = i.astype(_F32) * statics.dt
             act0 = dev.q_active
-            if trace:
-                dev, (tr_adm, tr_ev, tr_ev_dl) = jax.vmap(
-                    lambda c, s: S.admit(c, s, t, statics, True,
-                                         trace=True))(cfg, dev)
-                dev, (tr_exp, tr_exp_dl) = jax.vmap(
-                    lambda c, s, a0: S.drop_expired(c, s, t, True,
-                                                    trace=True,
-                                                    q_active_pre=a0)
-                )(cfg, dev, act0)
-            else:
-                dev = jax.vmap(
-                    lambda c, s: S.admit(c, s, t, statics, True))(cfg, dev)
-                dev = jax.vmap(
-                    lambda c, s: S.drop_expired(c, s, t, True))(cfg, dev)
+            dev, (tr_adm, tr_ev, tr_ev_dl) = jax.vmap(
+                lambda c, s: S.admit(c, s, t, statics, True,
+                                     trace=True))(cfg, dev)
+            dev, (tr_exp, tr_exp_dl) = jax.vmap(
+                lambda c, s, a0: S.drop_expired(c, s, t, True,
+                                                trace=True,
+                                                q_active_pre=a0)
+            )(cfg, dev, act0)
             sel, picked, run, e_new = jax.vmap(
                 lambda c, s: S.pick(c, s, t, statics, True))(cfg, dev)
             (tk, u, job, complete, exited_pre, apass_pre, ddl, nu_sel,
@@ -560,23 +795,16 @@ class FleetServeEngine:
             pass_bank = margin > tables.thr[tk, u]
             passed = jnp.where(use_thr, margin > thr_cfg, pass_bank)
 
-            if trace:
-                dev, (tr_comp, tr_comp_dl) = jax.vmap(
-                    lambda c, s, a, p, r, e, mg, ps, co, a0: S.apply_step(
-                        c, s, t, a, p, r, e, statics, True, (mg, ps, co),
-                        trace=True, q_active_pre=a0))(
-                    cfg, dev, sel, picked, run, e_new, margin, passed,
-                    correct, act0)
-                tr = S.StepTrace(adm=tr_adm, evict=tr_ev,
-                                 evict_dl=tr_ev_dl, expire=tr_exp,
-                                 expire_dl=tr_exp_dl, complete=tr_comp,
-                                 complete_dl=tr_comp_dl)
-            else:
-                dev = jax.vmap(
-                    lambda c, s, a, p, r, e, mg, ps, co: S.apply_step(
-                        c, s, t, a, p, r, e, statics, True, (mg, ps, co)))(
-                    cfg, dev, sel, picked, run, e_new, margin, passed,
-                    correct)
+            dev, (tr_comp, tr_comp_dl) = jax.vmap(
+                lambda c, s, a, p, r, e, mg, ps, co, a0: S.apply_step(
+                    c, s, t, a, p, r, e, statics, True, (mg, ps, co),
+                    trace=True, q_active_pre=a0))(
+                cfg, dev, sel, picked, run, e_new, margin, passed,
+                correct, act0)
+            tr = S.StepTrace(adm=tr_adm, evict=tr_ev,
+                             evict_dl=tr_ev_dl, expire=tr_exp,
+                             expire_dl=tr_exp_dl, complete=tr_comp,
+                             complete_dl=tr_comp_dl)
 
             # engine-owned utility-pass latch: adaptation fires at the FIRST
             # bank-threshold pass (like DynamicJobProfile — even under EDF,
@@ -587,24 +815,7 @@ class FleetServeEngine:
                 q_apass=dev.q_apass | (oh & (complete & pass_bank)[:, None]))
 
             if adapt:
-                if per_dev_tables:
-                    x_full = tables.full_feats[
-                        jnp.arange(tk.shape[0]), tk, job, u]
-                else:
-                    x_full = tables.full_feats[tk, job, u]
-
-                def _upd(args):
-                    b, xf, tkk, uu, cii, fp = args
-                    if shared:
-                        return self._adapt_shared(b, xf, tkk, uu, cii, fp)
-                    return jax.vmap(self._adapt_per_device)(
-                        b, xf, tkk, uu, cii, fp)
-
-                # most steps complete nothing: skip the propagation convs
-                # entirely unless some device's utility test just passed
-                bank = lax.cond(
-                    jnp.any(first_pass), _upd, lambda args: args[0],
-                    (bank, x_full, tk, u, ci, first_pass))
+                bank = adapt_bank(bank, tk, u, job, ci, first_pass)
 
             # per-job outcome log (mirrors apply_step's completion math)
             exit_now = complete & imprec & (exited_pre < 0) & passed
@@ -629,11 +840,10 @@ class FleetServeEngine:
                 sched=put(log.sched, sched_now, mand_now),
             )
             new_carry = ServeCarry(dev=dev, bank=bank, log=log)
-            if trace:
-                return new_carry, T_trace.emit_full(spec, tr, dev0, dev)
-            if counters:
-                return new_carry, T_trace.emit_counters(dev)
-            return new_carry, None
+            return new_carry, T_trace.emit_full(spec, tr, dev0, dev)
+
+        if trace:
+            step = step_trace
 
         if tcfg is None:
             carry, _ = lax.scan(step, carry, i0 + jnp.arange(n_steps))
@@ -671,6 +881,7 @@ class FleetServeEngine:
         carry: Optional[ServeCarry] = None,
         mesh=None,
         telemetry: Optional[T.TelemetryConfig] = None,
+        mode: str = "scan",
     ) -> FleetServeResult:
         """Serve every request stream live through one jitted fleet scan.
 
@@ -684,12 +895,31 @@ class FleetServeEngine:
         telemetry pytree through the serve scan and fills
         ``FleetServeResult.telemetry`` — the serve outcome itself is
         bit-exact either way.
+
+        ``mode="fused"`` runs each segment as ONE ``pallas_call``
+        (:func:`repro.kernels.ops.serve_fused_steps`): the classify +
+        live-register update execute in-tile with the centroid bank
+        VMEM-resident, bit-exact vs the scan.  Adaptation moves centroids
+        through whole-model convs (``unit_apply_flat``) that don't tile,
+        so the fused mode requires ``adapt=False`` — and it has no
+        telemetry/mesh hooks.
         """
+        if mode not in ("scan", "fused"):
+            raise ValueError(f"unknown serve mode {mode!r}")
+        adapt = bool(self.config.adapt)
+        if mode == "fused":
+            if adapt:
+                raise ValueError(
+                    "mode='fused' requires adapt=False: bank adaptation "
+                    "propagates centroids through whole-model convs that "
+                    "cannot run inside a device tile")
+            if telemetry is not None or mesh is not None:
+                raise ValueError(
+                    "mode='fused' does not support telemetry= or mesh=")
         cfg, statics, tables, carry0, per_dev = self.build(
             requests, n_devices, seeds=seeds)
         if carry is not None:
             carry0 = carry
-        adapt = bool(self.config.adapt)
         shared = self.bank_mode == "shared"
         tel = (None if telemetry is None
                else T.init_fleet_telemetry(telemetry, cfg))
@@ -718,6 +948,16 @@ class FleetServeEngine:
         out = carry0
         for n in sizes:
             if not n:
+                continue
+            if mode == "fused":
+                from ..kernels import ops
+
+                out = ops.serve_fused_steps(
+                    cfg, out, tables, jnp.int32(i0),
+                    jnp.zeros((len(self.models),), _I32),
+                    statics=statics, n_steps=n, shared_bank=shared,
+                    per_dev_tables=per_dev)
+                i0 += n
                 continue
             runner = self._runner(statics, n, adapt, shared, per_dev,
                                   telemetry)
@@ -751,4 +991,357 @@ class FleetServeEngine:
             jobs=int(np.asarray(fleet.released).sum()),
             wall_s=wall,
             telemetry=tel,
+        )
+
+    # ------------------------------------------------------------------ #
+    # Streaming entry point: O(chunk) device memory for any job total.
+    # ------------------------------------------------------------------ #
+
+    @staticmethod
+    def _count_releases(period: float, horizon: float,
+                        max_jobs: int) -> int:
+        """Replicate ``grid._n_releases``'s float release accumulation
+        (bit-for-bit, including the ``t += period`` slip) with the cap
+        taken from the streamed job total instead of ``len(profiles)``."""
+        t, j = 0.0, 0
+        while t < horizon and j < max_jobs:
+            t += period
+            j += 1
+        return j
+
+    def build_stream(
+        self,
+        requests,
+        n_devices: Optional[int] = None,
+        *,
+        seeds: Optional[Sequence[int]] = None,
+        total_jobs=None,
+    ):
+        """Like :meth:`build`, but O(1) in the total job count.
+
+        The grid builder gets single-job placeholder profiles (live mode
+        never reads the replay tables) with ``n_releases`` overridden to
+        the streamed totals, and the feature/label tables stay host-side
+        numpy — :meth:`run_stream` stages a bounded window of them per
+        chunk.  ``total_jobs`` (int or per-task sequence, default = the
+        base stream length) sets how many jobs each task serves; totals
+        beyond the base stream cycle it (job ``j`` reuses request
+        ``j % len(base)``).
+
+        Returns ``(cfg, statics, base_tables, dev0, bank0, per_dev,
+        totals, base_len)`` with ``base_tables`` a numpy dict.
+        """
+        cfg = self.config
+        K = len(self.models)
+        per_dev = not isinstance(requests[0][0], Request)
+        if per_dev:
+            D = len(requests)
+            if n_devices is not None and n_devices != D:
+                raise ValueError(
+                    f"n_devices={n_devices} but {D} request streams given")
+            streams = requests
+        else:
+            D = int(n_devices or 1)
+            streams = [requests]
+        if len(streams[0]) != K:
+            raise ValueError(
+                f"{len(streams[0])} request streams per device for "
+                f"{K} models")
+        base_len = [max(len(s[k]) for s in streams) for k in range(K)]
+        if any(b <= 0 for b in base_len):
+            raise ValueError("every task needs at least one base request")
+        if total_jobs is None:
+            totals = list(base_len)
+        elif np.ndim(total_jobs) == 0:
+            totals = [int(total_jobs)] * K
+        else:
+            totals = [int(x) for x in total_jobs]
+
+        tasks = self._task_specs([1] * K)
+        dt = grid._check_dt(
+            grid._default_dt(tasks) if cfg.sim_dt is None
+            else float(cfg.sim_dt), tasks)
+        statics = FleetStatics(queue_size=cfg.queue_size, dt=dt,
+                               horizon=cfg.horizon,
+                               slot_s=self.harvester.slot_s)
+        seeds = (list(seeds) if seeds is not None else [cfg.seed] * D)
+        if len(seeds) != D:
+            raise ValueError(f"{len(seeds)} seeds for {D} devices")
+        events = {s: grid.sample_events(self.harvester, cfg.horizon, s)
+                  for s in set(seeds)}
+        devs = [grid.device_config(
+            tasks, self.harvester, self.eta, self.cap,
+            policy=cfg.policy, horizon=cfg.horizon, events=events[s],
+            e_opt_fraction=cfg.e_opt_fraction,
+            start_charged=cfg.start_charged,
+        ) for s in seeds]
+        fleet_cfg = grid.stack_configs(devs)
+        n_rel = np.array([self._count_releases(tasks[k].period, cfg.horizon,
+                                               totals[k])
+                          for k in range(K)], np.int32)
+        fleet_cfg = fleet_cfg._replace(
+            n_releases=jnp.asarray(np.broadcast_to(n_rel, (D, K)).copy()))
+
+        feats = [build_feature_tables(
+            self.models, s, self.meta, self._bank_tables,
+            feature_batch=self.feature_batch, n_jobs=max(base_len))
+            for s in streams]
+        if per_dev:
+            base = {k: np.stack([f[k] for f in feats]) for k in feats[0]}
+        else:
+            base = feats[0]
+
+        dev0 = jax.vmap(lambda c: init_state(c, statics))(fleet_cfg)
+        bank0 = self.bank0
+        if self.bank_mode == "per-device":
+            bank0 = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (D,) + l.shape), bank0)
+        return (fleet_cfg, statics, base, dev0, bank0, per_dev, totals,
+                base_len)
+
+    def _stream_step_chunk(self, cfg, tables, carry, i0, job0, shift, *,
+                           statics, n_steps, adapt, shared,
+                           per_dev_tables, mode):
+        """One donated chunk: advance the log window, scan the chunk."""
+        carry = carry._replace(log=_shift_log(carry.log, shift))
+        if mode == "fused":
+            from ..kernels import ops
+
+            return ops.serve_fused_steps(
+                cfg, carry, tables, i0, job0, statics=statics,
+                n_steps=n_steps, shared_bank=shared,
+                per_dev_tables=per_dev_tables)
+        return self._scan_steps(cfg, tables, carry, i0, None, job0,
+                                statics=statics, n_steps=n_steps,
+                                adapt=adapt, shared=shared,
+                                per_dev_tables=per_dev_tables, tcfg=None)
+
+    def _stream_step_chunk_tel(self, cfg, tables, carry, i0, job0, shift,
+                               tel, *, statics, n_steps, adapt, shared,
+                               per_dev_tables, tcfg):
+        carry = carry._replace(log=_shift_log(carry.log, shift))
+        carry, tel, _ = self._scan_steps(cfg, tables, carry, i0, tel, job0,
+                                         statics=statics, n_steps=n_steps,
+                                         adapt=adapt, shared=shared,
+                                         per_dev_tables=per_dev_tables,
+                                         tcfg=tcfg)
+        return carry, tel
+
+    def _stream_runner(self, *, statics, n_steps, adapt, shared,
+                       per_dev_tables, mode, tcfg, args):
+        """AOT-compiled chunk runner with the carry (and telemetry)
+        buffers DONATED — chunk N+1's carry reuses chunk N's memory, so
+        peak live bytes don't grow with the chunk count.  ``lower().
+        compile()`` bypasses jit's dispatch cache, so executables are
+        cached here keyed by (static config, arg shapes/dtypes): every
+        same-shape chunk reuses one compilation."""
+        if tcfg is None:
+            fn = functools.partial(
+                self._stream_step_chunk, statics=statics, n_steps=n_steps,
+                adapt=adapt, shared=shared, per_dev_tables=per_dev_tables,
+                mode=mode)
+            donate = (2,)
+        else:
+            fn = functools.partial(
+                self._stream_step_chunk_tel, statics=statics,
+                n_steps=n_steps, adapt=adapt, shared=shared,
+                per_dev_tables=per_dev_tables, tcfg=tcfg)
+            donate = (2, 6)
+        sig = tuple((tuple(l.shape), str(l.dtype))
+                    for l in jax.tree.leaves(args))
+        key = (statics, n_steps, adapt, shared, per_dev_tables, mode,
+               tcfg, sig)
+        hit = self._compiled.get(key)
+        if hit is not None:
+            return hit, 0.0
+        t0 = time.perf_counter()
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        cs = time.perf_counter() - t0
+        self._compiled[key] = compiled
+        return compiled, cs
+
+    def run_stream(
+        self,
+        requests,
+        n_devices: Optional[int] = None,
+        *,
+        seeds: Optional[Sequence[int]] = None,
+        total_jobs=None,
+        n_chunks: int = 1,
+        mode: str = "scan",
+        collect_log: bool = True,
+        telemetry: Optional[T.TelemetryConfig] = None,
+    ) -> FleetServeResult:
+        """Serve a job stream of any length with O(chunk) device memory.
+
+        The horizon is split into ``n_chunks`` step ranges; each chunk
+        stages only the bounded window of per-job feature/label rows its
+        steps can touch (computed from periods, deadlines and clock
+        drift), rebases job ids with ``job0``, and runs one donated,
+        AOT-cached chunk program — the :class:`ServeCarry` buffers are
+        reused in place between chunks and the full per-job log is
+        assembled host-side.  Bit-exact vs :meth:`run` on the same
+        requests for ANY chunking.  ``total_jobs`` streams past the base
+        request list by cycling it (job ``j`` serves request
+        ``j % len(base)``), which is how a single call serves millions of
+        jobs.  ``mode="fused"`` routes each chunk through the fused
+        Pallas segment kernel.  ``telemetry`` supports the ``"counters"``
+        tier (the ``"full"`` tier's ring fold is per-run host state —
+        use :meth:`run`).
+        """
+        cfg_s = self.config
+        adapt = bool(cfg_s.adapt)
+        shared = self.bank_mode == "shared"
+        if mode not in ("scan", "fused"):
+            raise ValueError(f"unknown serve mode {mode!r}")
+        if mode == "fused" and (adapt or telemetry is not None):
+            raise ValueError(
+                "mode='fused' requires adapt=False and no telemetry")
+        if telemetry is not None and telemetry.level == "full":
+            raise ValueError(
+                "run_stream supports the 'counters' telemetry tier only")
+
+        (fleet_cfg, statics, base, dev0, bank0, per_dev, totals,
+         base_len) = self.build_stream(requests, n_devices, seeds=seeds,
+                                       total_jobs=total_jobs)
+        D = int(fleet_cfg.policy.shape[0])
+        K = len(self.models)
+        periods = np.array(per_task(cfg_s.period, K), float)
+        deadl = np.array(per_task(cfg_s.deadline, K), float)
+        drift = float(np.max(np.abs(np.asarray(fleet_cfg.clock_drift))))
+        n_steps = statics.n_steps
+        nc = int(max(1, min(n_chunks, max(n_steps, 1))))
+        segs = [s for s in np.array_split(np.arange(n_steps), nc)
+                if len(s)]
+        bounds = [(int(s[0]), int(s[-1]) + 1) for s in segs]
+
+        # per-chunk job windows: a job live during [t0, t1) must release
+        # before t1 and expire after t0 (with the slow-clock drift bound
+        # t_read = t * (1 + drift) stretching lifetimes by ≤ 1 + 2*drift);
+        # ±2 rows absorb the f32 release-accumulation slip
+        lo_list, hi_list = [], []
+        for s0, s1 in bounds:
+            t0s, t1s = s0 * statics.dt, s1 * statics.dt
+            lo_list.append(np.floor(
+                (t0s / (1.0 + 2.0 * drift) - deadl) / periods
+            ).astype(np.int64) - 2)
+            hi_list.append(np.floor(t1s / periods).astype(np.int64) + 2)
+        Wl = int(max(int(np.max(h - l))
+                     for l, h in zip(lo_list, hi_list)))
+        Wl = max(Wl, 1)
+
+        sel_b, full_b, lab_b = (base["sel_feats"], base["full_feats"],
+                                base["labels"])
+
+        def stage(w0):
+            idx = w0[:, None] + np.arange(Wl)[None, :]
+            ps, pf, pl = [], [], []
+            for k in range(K):
+                src = idx[k] % base_len[k]
+                ps.append(np.take(sel_b[..., k, :, :, :], src, axis=-3))
+                pf.append(np.take(full_b[..., k, :, :, :], src, axis=-3))
+                pl.append(np.take(lab_b[..., k, :], src, axis=-1))
+            return (np.stack(ps, axis=-4), np.stack(pf, axis=-4),
+                    np.stack(pl, axis=-2))
+
+        log0 = ServeLog(
+            units=jnp.zeros((D, K, Wl), _I32),
+            pred=jnp.full((D, K, Wl), -1, _I32),
+            correct=jnp.zeros((D, K, Wl), bool),
+            margin=jnp.zeros((D, K, Wl), _F32),
+            exit_unit=jnp.full((D, K, Wl), -1, _I32),
+            sched=jnp.zeros((D, K, Wl), bool),
+        )
+        carry = ServeCarry(dev=dev0, bank=bank0, log=log0)
+        # donated chunk inputs must not alias non-donated args: init_state
+        # forwards some config leaves by reference (e.g. dev.energy IS
+        # cfg.start_energy when starting charged), and XLA rejects
+        # `f(a, donate(a))`.  One up-front copy of the O(chunk) carry
+        # breaks every such alias; later chunks reuse donated buffers.
+        carry = jax.tree.map(jnp.array, carry)
+        tel = (None if telemetry is None
+               else T.init_fleet_telemetry(telemetry, fleet_cfg))
+
+        full_log = None
+        if collect_log:
+            Jt = max(max(totals), 1)
+            full_log = dict(
+                units=np.zeros((D, K, Jt), np.int32),
+                pred=np.full((D, K, Jt), -1, np.int32),
+                correct=np.zeros((D, K, Jt), bool),
+                margin=np.zeros((D, K, Jt), np.float32),
+                exit_unit=np.full((D, K, Jt), -1, np.int32),
+                sched=np.zeros((D, K, Jt), bool),
+            )
+
+        compile_s = 0.0
+        wall = 0.0
+        chunk_bytes = 0
+        prev_w0 = lo_list[0]
+        win_cols = np.arange(Wl)
+        for (s0, s1), w0 in zip(bounds, lo_list):
+            selw, fullw, labw = stage(w0)
+            shift = (w0 - prev_w0).astype(np.int64)
+            assert (shift >= 0).all(), "job windows must advance"
+            prev_w0 = w0
+            t_a = time.perf_counter()
+            tabs = ServeTables(sel_feats=jnp.asarray(selw),
+                               full_feats=jnp.asarray(fullw),
+                               labels=jnp.asarray(labw),
+                               **self._bank_tables)
+            i0 = jnp.int32(s0)
+            j0 = jnp.asarray(w0, _I32)
+            sh = jnp.asarray(shift, _I32)
+            stage_s = time.perf_counter() - t_a
+            args = ((fleet_cfg, tabs, carry, i0, j0, sh) if tel is None
+                    else (fleet_cfg, tabs, carry, i0, j0, sh, tel))
+            runner, cs = self._stream_runner(
+                statics=statics, n_steps=s1 - s0, adapt=adapt,
+                shared=shared, per_dev_tables=per_dev, mode=mode,
+                tcfg=telemetry, args=args)
+            compile_s += cs
+            t_r = time.perf_counter()
+            res = runner(*args)
+            jax.block_until_ready(res)
+            wall += time.perf_counter() - t_r + stage_s
+            if tel is None:
+                carry = res
+            else:
+                carry, tel = res
+            chunk_bytes = max(chunk_bytes, sum(
+                int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(tabs)))
+            if collect_log:
+                win = {f: np.asarray(getattr(carry.log, f))
+                       for f in ServeLog._fields}
+                for k in range(K):
+                    cols = w0[k] + win_cols
+                    ok = (cols >= 0) & (cols < totals[k])
+                    if ok.any():
+                        for f in full_log:
+                            full_log[f][:, k, cols[ok]] = win[f][:, k, ok]
+
+        t_r = time.perf_counter()
+        fleet = finalize_fleet(fleet_cfg, carry.dev, statics, live=True)
+        jax.block_until_ready(fleet)
+        wall += time.perf_counter() - t_r
+        if full_log is None:
+            full_log = {f: np.asarray(getattr(carry.log, f))
+                        for f in ServeLog._fields}
+        return FleetServeResult(
+            fleet=fleet,
+            units=full_log["units"],
+            pred=full_log["pred"],
+            correct=full_log["correct"],
+            margin=full_log["margin"],
+            exit_unit=full_log["exit_unit"],
+            sched=full_log["sched"],
+            carry=carry,
+            jobs=int(np.asarray(fleet.released).sum()),
+            wall_s=wall,
+            telemetry=tel,
+            compile_s=compile_s,
+            peak_bytes=_device_peak_bytes(),
+            chunk_table_bytes=chunk_bytes,
+            n_chunks=len(bounds),
         )

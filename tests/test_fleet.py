@@ -345,8 +345,8 @@ def test_pallas_priority_kernel_matches_jnp_path():
         horizon=15.0,
     )
     cfg, statics, _ = fleet.build(grid)
-    ref = fleet.simulate_fleet(cfg, statics, use_pallas=False)
-    ker = fleet.simulate_fleet(cfg, statics, use_pallas=True)
+    ref = fleet.simulate_fleet(cfg, statics, mode="vmap")
+    ker = fleet.simulate_fleet(cfg, statics, mode="pallas")
     for name in ref._fields:
         np.testing.assert_array_equal(
             np.asarray(getattr(ref, name)), np.asarray(getattr(ker, name)),

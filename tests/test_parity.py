@@ -338,8 +338,8 @@ def test_pallas_kernel_matches_jnp_on_task_sets():
         dt=DT,
     )
     cfg, statics, _ = fleet.build(grid)
-    ref = fleet.simulate_fleet(cfg, statics, use_pallas=False)
-    ker = fleet.simulate_fleet(cfg, statics, use_pallas=True)
+    ref = fleet.simulate_fleet(cfg, statics, mode="vmap")
+    ker = fleet.simulate_fleet(cfg, statics, mode="pallas")
     for name in ref._fields:
         np.testing.assert_array_equal(
             np.asarray(getattr(ref, name)), np.asarray(getattr(ker, name)),

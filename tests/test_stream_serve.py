@@ -1,0 +1,243 @@
+"""Streaming serve (`run_stream`) and fused serve-mode contracts.
+
+The streaming path claims bit-exactness against the monolithic
+:meth:`FleetServeEngine.run` for ANY chunking of the same job stream —
+windowed feature staging, `job0` rebasing and donated log shifting must be
+invisible — and the fused serve mode claims bit-exactness against the scan
+path (the kernel body is the same `serve_step` trace).  These tests pin
+both, plus the memory contract: chunk runners donate their carries
+(`input_output_alias` in the compiled HLO) and the staged window tables are
+O(chunk), not O(total jobs).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy
+from repro.serve import FleetServeEngine, Request, ServeConfig
+
+
+def _persistent():
+    return energy.Harvester("battery", 1.0, 0.0, 1.0)
+
+
+def _fresh_model(trained_cnn, threshold=None):
+    from repro.core.agile import AgileCNN
+
+    bank = [uc if threshold is None
+            else uc._replace(threshold=jnp.float32(threshold))
+            for uc in trained_cnn.bank]
+    return AgileCNN(trained_cnn.cfg, trained_cnn.params, bank)
+
+
+def _requests(ds, n, period):
+    return [Request(ds.x_test[i], int(ds.y_test[i]), release=i * period)
+            for i in range(n)]
+
+
+def _cfg(policy, n, adapt, period=2.0, deadline=1.5):
+    return ServeConfig(policy=policy, period=period, deadline=deadline,
+                       horizon=n * period + 2.0, adapt=adapt,
+                       start_charged=True, sim_dt=0.05)
+
+
+def _engine(trained_cnn, cfg, threshold=None, **kw):
+    return FleetServeEngine([_fresh_model(trained_cnn, threshold)],
+                            _persistent(), eta=1.0, config=cfg,
+                            feature_batch=1, **kw)
+
+
+_LOG_FIELDS = ("units", "pred", "correct", "margin", "exit_unit", "sched")
+
+
+def _assert_same_outcome(ra, rb, jobs=None):
+    """Bitwise equality of per-job logs, end carry and fleet aggregates."""
+    for f in _LOG_FIELDS:
+        a, b = getattr(ra, f), getattr(rb, f)
+        j = min(a.shape[-1], b.shape[-1]) if jobs is None else jobs
+        np.testing.assert_array_equal(a[..., :j], b[..., :j], err_msg=f)
+    for f, a, b in zip(ra.carry.dev._fields, ra.carry.dev, rb.carry.dev):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"dev.{f}")
+    for f, a, b in zip(ra.carry.bank._fields, ra.carry.bank, rb.carry.bank):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"bank.{f}")
+    assert ra.jobs == rb.jobs
+
+
+@pytest.mark.parametrize("bank_mode", ["per-device", "shared"])
+@pytest.mark.parametrize("n_chunks", [1, 3])
+def test_stream_matches_monolithic(trained_cnn, mnist_tiny, bank_mode,
+                                   n_chunks):
+    """run_stream == run, bitwise, for any chunking — with adaptation on
+    (the bank evolves across chunk boundaries) in both bank modes."""
+    n = 6
+    cfg = _cfg("zygarde", n, adapt=True)
+    reqs = _requests(mnist_tiny, n, cfg.period)
+    r_mono = _engine(trained_cnn, cfg, 0.02, bank_mode=bank_mode).run(
+        [reqs], n_devices=2)
+    r_st = _engine(trained_cnn, cfg, 0.02, bank_mode=bank_mode).run_stream(
+        [reqs], n_devices=2, n_chunks=n_chunks)
+    assert r_st.n_chunks == n_chunks
+    _assert_same_outcome(r_mono, r_st, jobs=n)
+
+
+def test_stream_per_device_streams(trained_cnn, mnist_tiny):
+    """Per-device request streams (batched feature tables) stream the
+    same way they run monolithically."""
+    n = 5
+    cfg = _cfg("zygarde", n, adapt=False)
+    streams = [[_requests(mnist_tiny, n, cfg.period)],
+               [_requests(mnist_tiny, n, cfg.period)[::-1]]]
+    for s in streams:
+        for k, r in enumerate(s[0]):
+            s[0][k] = Request(r.x, r.label, release=k * cfg.period)
+    r_mono = _engine(trained_cnn, cfg).run(streams)
+    r_st = _engine(trained_cnn, cfg).run_stream(streams, n_chunks=2)
+    _assert_same_outcome(r_mono, r_st, jobs=n)
+
+
+def test_stream_total_jobs_cycles_base(trained_cnn, mnist_tiny):
+    """total_jobs beyond the base stream cycles it: identical to a
+    monolithic run over the explicitly repeated request list."""
+    base_n, total = 3, 9
+    cfg = _cfg("zygarde", total, adapt=False)
+    base = _requests(mnist_tiny, base_n, cfg.period)
+    repeated = [Request(base[i % base_n].x, base[i % base_n].label,
+                        release=i * cfg.period) for i in range(total)]
+    r_mono = _engine(trained_cnn, cfg).run([repeated], n_devices=2)
+    r_st = _engine(trained_cnn, cfg).run_stream(
+        [base], n_devices=2, total_jobs=total, n_chunks=3)
+    assert r_st.jobs == r_mono.jobs == 2 * total
+    _assert_same_outcome(r_mono, r_st, jobs=total)
+
+
+def test_stream_donates_carry_and_bounds_memory(trained_cnn, mnist_tiny):
+    """The chunk runners donate the ServeCarry (input/output aliasing in
+    the compiled HLO) and the staged window tables are O(chunk): finer
+    chunking shrinks the resident table, and both stay below the
+    monolithic O(total-jobs) table footprint."""
+    n = 40
+    cfg = ServeConfig(policy="zygarde", period=2.0, deadline=1.5,
+                      horizon=n * 2.0 + 2.0, adapt=False,
+                      start_charged=True, sim_dt=0.05)
+    reqs = _requests(mnist_tiny, n, 2.0)
+
+    eng = _engine(trained_cnn, cfg)
+    r8 = eng.run_stream([reqs], n_devices=2, n_chunks=8)
+    assert eng._compiled, "chunk runners were not AOT-cached"
+    for compiled in eng._compiled.values():
+        assert "input_output_alias" in compiled.as_text()
+    # no recompile across same-shape chunks: 8 chunks, at most 2 distinct
+    # chunk lengths (array_split) -> at most 2 executables
+    assert len(eng._compiled) <= 2
+
+    r2 = _engine(trained_cnn, cfg).run_stream([reqs], n_devices=2,
+                                              n_chunks=2)
+    mono = _engine(trained_cnn, cfg)
+    r_mono = mono.run([reqs], n_devices=2)
+    _assert_same_outcome(r_mono, r8, jobs=n)
+
+    # O(chunk) windows: the 8-chunk window is a strict subset of the job
+    # axis, and no wider than the 2-chunk window
+    w8 = r8.carry.log.units.shape[-1]
+    w2 = r2.carry.log.units.shape[-1]
+    assert w8 <= w2
+    assert w8 < n
+    assert 0 < r8.chunk_table_bytes <= r2.chunk_table_bytes
+    if r8.peak_bytes and r2.peak_bytes:      # backend keeps memory stats
+        assert r8.peak_bytes <= r2.peak_bytes * 1.25
+
+
+def test_stream_telemetry_counters(trained_cnn, mnist_tiny):
+    """The counters telemetry tier threads through the donated chunk
+    runners and matches the monolithic run's counters."""
+    from repro.telemetry import TelemetryConfig
+
+    n = 5
+    cfg = _cfg("zygarde", n, adapt=False)
+    reqs = _requests(mnist_tiny, n, cfg.period)
+    tcfg = TelemetryConfig()
+    r_mono = _engine(trained_cnn, cfg).run([reqs], n_devices=2,
+                                           telemetry=tcfg)
+    r_st = _engine(trained_cnn, cfg).run_stream([reqs], n_devices=2,
+                                                n_chunks=2, telemetry=tcfg)
+    _assert_same_outcome(r_mono, r_st, jobs=n)
+    for f, a, b in zip(r_mono.telemetry._fields, r_mono.telemetry,
+                       r_st.telemetry):
+        a, b = np.asarray(a), np.asarray(b)
+        if np.issubdtype(a.dtype, np.floating):
+            # float accumulators: chunked partial sums re-associate the
+            # reduction -> ulp-level drift is expected, counts stay exact
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"telemetry.{f}")
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=f"telemetry.{f}")
+
+
+@pytest.mark.parametrize("bank_mode", ["per-device", "shared"])
+@pytest.mark.parametrize("policy", ["zygarde", "edf"])
+def test_fused_serve_matches_scan(trained_cnn, mnist_tiny, policy,
+                                  bank_mode):
+    """mode='fused' (classify in-tile, one pallas_call per segment) is
+    bit-exact vs the scan path, with early exits exercised by a low
+    uniform threshold."""
+    n = 4
+    cfg = _cfg(policy, n, adapt=False)
+    reqs = _requests(mnist_tiny, n, cfg.period)
+    r_scan = _engine(trained_cnn, cfg, 0.02, bank_mode=bank_mode).run(
+        [reqs], n_devices=3)
+    r_fused = _engine(trained_cnn, cfg, 0.02, bank_mode=bank_mode).run(
+        [reqs], n_devices=3, mode="fused")
+    _assert_same_outcome(r_scan, r_fused, jobs=n)
+
+
+def test_fused_stream_matches_scan_stream(trained_cnn, mnist_tiny):
+    """Streaming chunks through the fused kernel == streaming them
+    through the scan == the monolithic run."""
+    n = 5
+    cfg = _cfg("zygarde", n, adapt=False)
+    reqs = _requests(mnist_tiny, n, cfg.period)
+    r_mono = _engine(trained_cnn, cfg).run([reqs], n_devices=2)
+    r_fused = _engine(trained_cnn, cfg).run_stream(
+        [reqs], n_devices=2, n_chunks=2, mode="fused")
+    _assert_same_outcome(r_mono, r_fused, jobs=n)
+
+
+def test_fused_rejects_adapt_and_telemetry(trained_cnn, mnist_tiny):
+    from repro.telemetry import TelemetryConfig
+
+    n = 2
+    reqs = _requests(mnist_tiny, n, 2.0)
+    with pytest.raises(ValueError, match="adapt"):
+        _engine(trained_cnn, _cfg("zygarde", n, adapt=True)).run(
+            [reqs], n_devices=1, mode="fused")
+    with pytest.raises(ValueError, match="telemetry"):
+        _engine(trained_cnn, _cfg("zygarde", n, adapt=False)).run(
+            [reqs], n_devices=1, mode="fused",
+            telemetry=TelemetryConfig())
+    with pytest.raises(ValueError):
+        _engine(trained_cnn, _cfg("zygarde", n, adapt=False)).run(
+            [reqs], n_devices=1, mode="bogus")
+
+
+def test_use_pallas_flag_deprecated():
+    """Satellite: the legacy use_pallas= boolean warns and maps onto the
+    mode strings; mode= itself stays silent."""
+    import warnings
+
+    from repro.fleet import simulator
+
+    with pytest.warns(DeprecationWarning):
+        assert simulator._resolve_mode(None, True) == "pallas"
+    with pytest.warns(DeprecationWarning):
+        assert simulator._resolve_mode(None, False) == "vmap"
+    with pytest.warns(DeprecationWarning):
+        # an explicit mode wins over the deprecated flag
+        assert simulator._resolve_mode("fused", True) == "fused"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert simulator._resolve_mode(None, None) == "vmap"
+        assert simulator._resolve_mode("pallas", None) == "pallas"
