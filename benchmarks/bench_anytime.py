@@ -1,0 +1,145 @@
+"""Anytime big-model serving: throughput and depth-vs-deadline rows.
+
+One :class:`repro.serve.anytime.AnytimeServeEngine` serves a seeded
+request trace through a small trained transformer (qwen1.5 family,
+4 units) and emits:
+
+* a throughput row — ``requests_per_sec`` through the jitted
+  continuous-batching scan (machine-dependent, gated with the wide
+  band by ``check_regression``);
+* one row per deadline-tightness level — ``mean_depth``, on-time rate
+  and the deterministic ``score`` (on-time full-depth-agreement
+  fraction, gated with the tight band) plus ``depth_score``
+  (``1 - mean_depth/n_units``, the optional-compute saving, also
+  tight-gated so depth-control regressions trip CI);
+* a fixed-depth EDF reference row on the tight trace, so the anytime
+  advantage stays visible in the artifact.
+
+The model is trained for a few seconds (seeded) so the exit margins are
+informative — without training every margin is noise and the depth
+sweep gates nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import anytime as A
+from repro.models import transformer as T
+from repro.serve import AnytimeConfig, AnytimeRequest, AnytimeServeEngine
+from repro.train import make_train_step
+from repro.train.optimizer import adamw_init
+
+from .common import emit
+
+_SEED = 0
+_N_REQ = 16
+_N_TOKENS = 6
+
+
+@functools.lru_cache(maxsize=None)
+def _trained_model(train_steps: int = 40):
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=4, vocab=64, d_model=128, n_heads=4, n_kv_heads=4,
+        head_dim=32, d_ff=256, exit_every=1)
+    params = T.init_params(cfg, jax.random.PRNGKey(_SEED))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, lr=3e-3))
+    rng = np.random.default_rng(_SEED)
+    for _ in range(train_steps):
+        start = rng.integers(0, cfg.vocab, size=(16, 1))
+        toks = (start + np.arange(17)) % cfg.vocab
+        params, opt, _ = step(params, opt, {"tokens": jnp.asarray(toks)})
+    return cfg, params
+
+
+def _knobs(cfg, params, engine):
+    rng = np.random.default_rng(_SEED + 1)
+    start = rng.integers(0, cfg.vocab, size=(8, 1))
+    toks = (start + np.arange(17)) % cfg.vocab
+    unit_logits = jax.jit(
+        lambda b: A.anytime_forward(cfg, params, engine.heads, b)
+    )({"tokens": jnp.asarray(toks)})
+    U, B, S, V = unit_logits.shape
+    thr, use = A.calibrate_thresholds(unit_logits.reshape(U, B * S, V))
+    return engine.default_knobs(exit_thr=thr,
+                                use_exit_thr=use.astype(jnp.float32))
+
+
+def _requests(cfg, deadline: float):
+    rng = np.random.default_rng(_SEED + 2)
+    reqs = []
+    for i in range(_N_REQ):
+        start = int(rng.integers(0, cfg.vocab))
+        reqs.append(AnytimeRequest(
+            prompt=[start, (start + 1) % cfg.vocab], n_tokens=_N_TOKENS,
+            release=0.25 * i, deadline=0.25 * i + deadline))
+    return reqs
+
+
+def _engine(cfg, params, policy: str) -> AnytimeServeEngine:
+    scfg = AnytimeConfig(policy=policy, batch_slots=4, max_steps=256,
+                         prompt_len=2, max_new_tokens=8)
+    return AnytimeServeEngine(cfg, params, serve_cfg=scfg, seed=_SEED)
+
+
+def _row(mode, deadline, res, n_units, wall_s=None):
+    row = dict(mode=mode, deadline_s=deadline,
+               on_time=res.on_time, n_requests=res.n_requests,
+               mean_depth=round(res.mean_depth, 3),
+               depth_score=round(1.0 - res.mean_depth / n_units, 4),
+               score=round(res.score, 4))
+    if wall_s is not None:
+        row["wall_s"] = round(wall_s, 3)
+        row["requests_per_sec"] = round(res.n_requests / wall_s, 2)
+    return row
+
+
+def run(quick: bool = True) -> None:
+    cfg, params = _trained_model()
+    engine = _engine(cfg, params, "anytime")
+    knobs = _knobs(cfg, params, engine)
+
+    # throughput: one warm run of the medium-tightness trace (compile
+    # amortised by the cold run)
+    reqs = _requests(cfg, 1.6)
+    engine.run(reqs, knobs=knobs)                       # cold: compiles
+    t0 = time.perf_counter()
+    res = engine.run(reqs, knobs=knobs)                 # timed, warm
+    wall = time.perf_counter() - t0
+    rows = [_row("anytime_throughput", 1.6, res, cfg.n_units, wall)]
+
+    # depth control vs deadline tightness: tighter budgets must cut
+    # optional depth (monotone mean_depth), looser ones may afford it
+    depths = []
+    for deadline in (3.0, 1.6, 1.3):
+        r = engine.run(_requests(cfg, deadline), knobs=knobs)
+        depths.append(r.mean_depth)
+        rows.append(_row(f"anytime_deadline_{deadline}", deadline, r,
+                         cfg.n_units))
+    assert all(d1 >= d2 - 1e-9 for d1, d2 in zip(depths, depths[1:])), (
+        f"mean depth not monotone in deadline tightness: {depths}")
+
+    # fixed-depth EDF reference on the tight trace
+    edf = _engine(cfg, params, "edf")
+    r_edf = edf.run(_requests(cfg, 1.3), knobs=edf.default_knobs())
+    rows.append(_row("edf_deadline_1.3", 1.3, r_edf, cfg.n_units))
+
+    anytime_tight = rows[3]
+    assert anytime_tight["score"] > r_edf.score, (
+        "anytime depth control lost to fixed-depth EDF on the tight "
+        f"trace: {anytime_tight['score']} < {r_edf.score:.4f}")
+
+    emit("anytime", rows)
+
+
+if __name__ == "__main__":
+    run()

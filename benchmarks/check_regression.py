@@ -52,7 +52,7 @@ BASELINE_DIR = FRESH_DIR / "baselines"
 THROUGHPUT_KEYS = ("device_steps_per_sec", "devices_per_sec",
                    "candidates_per_sec", "windows_per_sec",
                    "jobs_per_sec", "fused_device_steps_per_sec",
-                   "stream_jobs_per_sec")
+                   "stream_jobs_per_sec", "requests_per_sec")
 #: lower-is-better machine-dependent metrics, gated with the same wide
 #: band mirrored (fresh must stay below (1 + tolerance) x baseline).  A
 #: zero on either side skips the gate: ``serve_peak_bytes`` degrades to 0

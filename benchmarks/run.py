@@ -27,6 +27,7 @@ import traceback
 
 from . import (
     bench_adapt,
+    bench_anytime,
     bench_capacitor,
     bench_classifiers,
     bench_clock,
@@ -53,6 +54,7 @@ BENCHES = (
     ("fleet", bench_fleet_segments.run),
     ("kernels", bench_kernels.run),
     ("serve", bench_serve.run),
+    ("anytime", bench_anytime.run),
     ("adapt_tune", bench_adapt.run),
     ("forecast", bench_forecast.run),
     ("capacitor_fig21", bench_capacitor.run),
@@ -64,7 +66,7 @@ BENCHES = (
 )
 
 SMOKE_BENCHES = ("fleet_throughput", "fleet", "kernels", "serve",
-                 "adapt_tune", "forecast")
+                 "anytime", "adapt_tune", "forecast")
 
 
 def write_bench_json(name: str, wall_s: float, rows: dict, timings: dict,

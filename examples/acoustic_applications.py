@@ -18,6 +18,8 @@ and the utility test, event/deadline misses from the harvested energy.
 
     PYTHONPATH=src python examples/acoustic_applications.py
 """
+import argparse
+
 import numpy as np
 
 from repro.core import energy
@@ -39,6 +41,11 @@ N_EVENTS = 30
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="paper §9.1 acoustic applications on six harvester setups")
+    ap.add_argument("--events", type=int, default=N_EVENTS)
+    args = ap.parse_args()
+    n_events = args.events
     # one shared acoustic frontend: ESC-10-shaped binary event detector
     ds = make_dataset("vww", n_train=384, n_test=256, separability=1.2)
     print("training the acoustic event detector ...")
@@ -51,13 +58,13 @@ def main() -> None:
         harv = energy.calibrate_harvester(eta, power, name=source)
         reqs = [
             Request(ds.x_test[j], int(ds.y_test[j]), release=j * 2.0)
-            for j in range(N_EVENTS)
+            for j in range(n_events)
         ]
         engine = ServeEngine(
             [model], harv, eta,
             config=ServeConfig(
                 policy="zygarde", period=2.0, deadline=3.0,
-                horizon=N_EVENTS * 2.0 + 5.0, seed=100 + i,
+                horizon=n_events * 2.0 + 5.0, seed=100 + i,
                 unit_time=np.full(model.n_units, 0.4),
                 unit_energy=np.full(model.n_units, 8e-3),
             ),

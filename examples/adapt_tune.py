@@ -12,6 +12,8 @@ Run: ``PYTHONPATH=src python examples/adapt_tune.py``
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from repro import adapt
@@ -39,6 +41,13 @@ def make_task(n_jobs=30, n_units=4, exit_at=1, correct_from=2):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="tune (eta, E_opt) with the fleet-batched objective")
+    ap.add_argument("--budget", type=int, default=128)
+    ap.add_argument("--driver", default="es",
+                    choices=sorted(adapt.DRIVERS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
     problem = adapt.TuneProblem(
         task=make_task(),
         harvesters=(energy.Harvester("solar", 0.95, 0.95, 0.08),
@@ -56,8 +65,8 @@ def main() -> None:
           f"e_opt_fraction={default['e_opt_fraction']:.2f}  "
           f"on-time accuracy={default_score:.4f}")
 
-    result = adapt.tune(problem.objective(), space, budget=128, driver="es",
-                        seed=0)
+    result = adapt.tune(problem.objective(), space, budget=args.budget,
+                        driver=args.driver, seed=args.seed)
     print(f"ES-tuned        eta={result.best_params['eta']:.3f} "
           f"e_opt_fraction={result.best_params['e_opt_fraction']:.2f}  "
           f"on-time accuracy={result.best_score:.4f} "

@@ -14,6 +14,7 @@ Run: ``PYTHONPATH=src python examples/fleet_multitask.py``
 """
 from __future__ import annotations
 
+import argparse
 from collections import defaultdict
 
 import numpy as np
@@ -39,6 +40,11 @@ def make_task(task_id, name, period, deadline, n_units, unit_t, exit_at,
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="two-task fleet sweep: policy × eta grid")
+    ap.add_argument("--seeds", type=int, default=6)
+    ap.add_argument("--horizon", type=float, default=30.0)
+    args = ap.parse_args()
     names_tasks = (
         # audio: keyword spotting — fast period, tight deadline, shallow net
         make_task(0, "audio", period=0.6, deadline=1.0, n_units=3,
@@ -53,8 +59,8 @@ def main() -> None:
         policies=("zygarde", "edf", "edf-m", "rr"),
         etas=(0.5, 0.8, 1.0),
         harvesters=(energy.Harvester("solar", 0.95, 0.95, 0.08),),
-        seeds=tuple(range(6)),
-        horizon=30.0,
+        seeds=tuple(range(args.seeds)),
+        horizon=args.horizon,
     )
     res, meta = fleet.sweep(grid)
     print(f"simulated {len(meta)} devices × {meta[0]['n_tasks']} tasks "

@@ -9,6 +9,7 @@ Run: ``PYTHONPATH=src python examples/fleet_sweep.py``
 """
 from __future__ import annotations
 
+import argparse
 from collections import defaultdict
 
 import numpy as np
@@ -34,13 +35,18 @@ def make_task(n_jobs=40, n_units=4, exit_at=1):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="policy × eta × seed fleet sweep in one jitted call")
+    ap.add_argument("--seeds", type=int, default=8)
+    ap.add_argument("--horizon", type=float, default=40.0)
+    args = ap.parse_args()
     grid = fleet.SweepGrid(
         task=make_task(),
         policies=("zygarde", "edf", "edf-m", "rr"),
         etas=(0.2, 0.5, 0.8, 1.0),
         harvesters=(energy.Harvester("solar", 0.95, 0.95, 0.08),),
-        seeds=tuple(range(8)),
-        horizon=40.0,
+        seeds=tuple(range(args.seeds)),
+        horizon=args.horizon,
     )
     res, meta = fleet.sweep(grid)
     print(f"simulated {len(meta)} devices in one jitted call")

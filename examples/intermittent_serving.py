@@ -22,6 +22,8 @@ scalar event loop, printing jobs/sec for all three.
 """
 import time
 
+import argparse
+
 import numpy as np
 
 from repro import fleet
@@ -43,6 +45,11 @@ def build(name: str, seed: int):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="§9.2 visual-sensing serving: zygarde vs edf vs rr")
+    ap.add_argument("--requests", type=int, default=N_REQ)
+    args = ap.parse_args()
+    n_req = args.requests
     print("training the two visual tasks ...")
     # cifar100 (5-way) plays the sign recogniser; vww (2-way) the shapes
     sign_ds, sign = build("cifar100", seed=0)
@@ -50,7 +57,7 @@ def main() -> None:
 
     harvester = energy.calibrate_harvester(0.71, 0.35, name="solar")
 
-    def requests(ds, n=N_REQ, period=1.0):
+    def requests(ds, n=n_req, period=1.0):
         return [
             Request(ds.x_test[i], int(ds.y_test[i]), release=i * period)
             for i in range(n)
@@ -59,13 +66,13 @@ def main() -> None:
     def config(policy):
         return ServeConfig(
             policy=policy, period=1.0, deadline=2.0,
-            horizon=N_REQ + 5.0, adapt=(policy == "zygarde"),
+            horizon=n_req + 5.0, adapt=(policy == "zygarde"),
             unit_time=np.full(max(sign.n_units, shape.n_units), 0.22),
             unit_energy=np.full(max(sign.n_units, shape.n_units), 7e-3),
             seed=3,
         )
 
-    print(f"\nserving 2 tasks x {N_REQ} requests on solar (eta=0.71)")
+    print(f"\nserving 2 tasks x {n_req} requests on solar (eta=0.71)")
     print("policy      scheduled  correct  optional  reboots  idle-s")
     results = {}
     scalar_rate = 0.0
@@ -92,7 +99,7 @@ def main() -> None:
 
     # replay fleet: precomputed job profiles through the batched simulator
     def replay_task(model, ds, tid):
-        profs = model.profile_batch(ds.x_test[:N_REQ], ds.y_test[:N_REQ])
+        profs = model.profile_batch(ds.x_test[:n_req], ds.y_test[:n_req])
         return TaskSpec(
             task_id=tid, period=1.0, deadline=2.0,
             unit_time=np.full(model.n_units, 0.22),
@@ -104,7 +111,7 @@ def main() -> None:
         task=(replay_task(sign, sign_ds, 0), replay_task(shape, shape_ds, 1)),
         policies=("zygarde",), etas=(0.71,), harvesters=(harvester,),
         capacitors=(energy.Capacitor(),), seeds=tuple(seeds),
-        horizon=N_REQ + 5.0,
+        horizon=n_req + 5.0,
     )
     rcfg, statics, _ = fleet.build(grid)
     fleet.simulate_fleet(rcfg, statics).released.block_until_ready()

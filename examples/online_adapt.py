@@ -41,6 +41,8 @@ Run: ``PYTHONPATH=src python examples/online_adapt.py``
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from repro import adapt, fleet
@@ -206,7 +208,12 @@ def run_demo(seed: int = SEED, verbose: bool = False) -> dict:
 
 
 def main() -> None:
-    out = run_demo(verbose=True)
+    ap = argparse.ArgumentParser(
+        description="online (eta, E_opt) re-estimation on a "
+                    "nonstationary harvest trace")
+    ap.add_argument("--seed", type=int, default=SEED)
+    args = ap.parse_args()
+    out = run_demo(seed=args.seed, verbose=True)
     assert out["online"]["score"] > out["best_static"]["score"], (
         "online adaptation should beat the best static constants")
     assert out["online"]["score"] > out["default"]["score"]

@@ -9,6 +9,8 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import argparse
+
 import numpy as np
 
 from repro.core import energy
@@ -19,10 +21,15 @@ from repro.train import train_agile_cnn
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="full Zygarde pipeline: train, bank, infer, schedule")
+    ap.add_argument("--epochs", type=int, default=3)
+    args = ap.parse_args()
     # 1-2: network trainer (paper §6.1): train -> bank -> thresholds
     ds = make_dataset("mnist", n_train=384, n_test=192)
     print("training agile CNN (layer-aware loss) ...")
-    trained = train_agile_cnn(ds, epochs=3, n_pairs=768, batch_size=32)
+    trained = train_agile_cnn(ds, epochs=args.epochs, n_pairs=768,
+                              batch_size=32)
     print(f"  loss: {trained.history[0]:.3f} -> {trained.history[-1]:.3f}")
 
     model = AgileCNN(trained.cfg, trained.params, trained.bank)

@@ -70,5 +70,10 @@ from .online import (  # noqa: F401
     observed_supply,
     workload_demand,
 )
+from .anytime import (  # noqa: F401
+    anytime_space,
+    knobs_from_params,
+    make_anytime_objective,
+)
 from .search import DRIVERS, TuneResult, tune  # noqa: F401
 from .space import Param, SearchSpace  # noqa: F401

@@ -1,0 +1,120 @@
+"""Tuning the anytime serving engine's knobs with ``repro.adapt.tune``.
+
+The anytime engine's exit thresholds, energy gate and eta factor are
+dynamic arguments of one compiled scan
+(:meth:`repro.serve.anytime.AnytimeServeEngine.score_fn`), so a candidate
+*population* maps onto a ``jax.vmap`` axis: one jitted call scores every
+candidate against the same request trace + supply trace — the same
+population-is-the-batch trick :class:`repro.adapt.objective.TuneProblem`
+plays with the fleet simulator, now over the continuous-batching LLM
+engine.
+
+Knob names (the ``SearchSpace`` vocabulary, matching the fleet tuner):
+
+* ``exit_threshold``  — one margin threshold broadcast over all units;
+* ``exit_thr_<u>``    — per-unit thresholds (overrides the broadcast);
+* ``e_opt_fraction``  — the Eq. 7 energy gate as a fraction of the
+  capacitor capacity;
+* ``eta``             — the harvest-predictability factor.
+
+Usage::
+
+    from repro import adapt
+    from repro.adapt.anytime import anytime_space, make_anytime_objective
+
+    objective = make_anytime_objective(engine, requests)
+    result = adapt.tune(objective, anytime_space(engine), budget=64)
+    knobs = knobs_from_params(engine, result.best_params)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..serve.anytime import AnytimeKnobs, AnytimeServeEngine, AnytimeTables
+from .space import SearchSpace
+
+__all__ = ["anytime_space", "make_anytime_objective", "knobs_from_params"]
+
+
+def anytime_space(engine: AnytimeServeEngine, *, per_unit: bool = False,
+                  thr_range=(0.0, 10.0), eta_range=None,
+                  e_opt_range=(0.05, 0.95)) -> SearchSpace:
+    """The default knob space for one engine.
+
+    ``per_unit=True`` searches an independent threshold per non-final
+    unit (``exit_thr_<u>``) instead of one shared ``exit_threshold``;
+    ``eta_range=None`` leaves eta out of the search (it is a *measured*
+    property of the harvester in the paper — tune it only for
+    sensitivity studies).
+    """
+    bounds = {}
+    if per_unit:
+        for u in range(engine.n_units - 1):
+            bounds[f"exit_thr_{u}"] = thr_range
+    else:
+        bounds["exit_threshold"] = thr_range
+    bounds["e_opt_fraction"] = e_opt_range
+    if eta_range is not None:
+        bounds["eta"] = eta_range
+    return SearchSpace.of(**bounds)
+
+
+def knobs_from_params(engine: AnytimeServeEngine, params: dict,
+                      base: Optional[AnytimeKnobs] = None) -> AnytimeKnobs:
+    """Materialise a scalar parameter dict (e.g. ``TuneResult
+    .best_params``) into :class:`AnytimeKnobs`; unnamed knobs keep their
+    ``base`` (default) values."""
+    batched = _knob_batch(
+        engine, {k: jnp.asarray([v], jnp.float32)
+                 for k, v in params.items()}, 1, base)
+    return jax.tree.map(lambda a: a[0], batched)
+
+
+def _knob_batch(engine: AnytimeServeEngine, cand: dict, n: int,
+                base: Optional[AnytimeKnobs]) -> AnytimeKnobs:
+    """Map ``{name: (N,)}`` candidate columns onto an (N,)-batched
+    :class:`AnytimeKnobs`."""
+    U = engine.n_units
+    k = base if base is not None else engine.default_knobs()
+    exit_thr = jnp.broadcast_to(k.exit_thr, (n, U))
+    if "exit_threshold" in cand:
+        exit_thr = jnp.broadcast_to(
+            jnp.asarray(cand["exit_threshold"], jnp.float32)[:, None],
+            (n, U))
+    for u in range(U):
+        name = f"exit_thr_{u}"
+        if name in cand:
+            exit_thr = exit_thr.at[:, u].set(
+                jnp.asarray(cand[name], jnp.float32))
+    use = jnp.broadcast_to(k.use_exit_thr, (n, U))
+    eta = (jnp.asarray(cand["eta"], jnp.float32) if "eta" in cand
+           else jnp.broadcast_to(k.eta, (n,)))
+    e_opt = (jnp.asarray(cand["e_opt_fraction"], jnp.float32)
+             * engine.scfg.capacity if "e_opt_fraction" in cand
+             else jnp.broadcast_to(k.e_opt, (n,)))
+    return AnytimeKnobs(exit_thr=exit_thr, use_exit_thr=use, eta=eta,
+                        e_opt=e_opt)
+
+
+def make_anytime_objective(engine: AnytimeServeEngine, requests, *,
+                           tardiness_weight: float = 0.0,
+                           base_knobs: Optional[AnytimeKnobs] = None):
+    """An ``{name: (N,) array} -> (N,) scores`` objective over the
+    engine's deterministic score (on-time agreed-token fraction minus a
+    tardiness penalty) — plug straight into :func:`repro.adapt.tune`.
+    One compiled vmap evaluates the whole candidate population."""
+    tables = (requests if isinstance(requests, AnytimeTables)
+              else engine.pack(requests))
+    score = engine.score_fn(tables, tardiness_weight=tardiness_weight)
+    batched = jax.jit(jax.vmap(score))
+
+    def objective(cand: dict):
+        cols = {k: jnp.asarray(v, jnp.float32) for k, v in cand.items()}
+        n = next(iter(cols.values())).shape[0]
+        return jax.device_get(batched(_knob_batch(
+            engine, cols, n, base_knobs)))
+
+    return objective

@@ -112,6 +112,7 @@ class ModelConfig:
 
     # Zygarde agile (early-exit) settings ------------------------------------ #
     exit_every: int = 4  # one schedulable *unit* per this many layers
+    mandatory_units: int = 1  # imprecise-computation mandatory prefix (units)
     n_clusters: int = 16  # k for the per-unit k-means classifier bank
     feature_dim: int = 128  # selected feature dims fed to the classifier
     utility_threshold: float = 0.1  # default margin threshold (per-unit at runtime)
@@ -141,6 +142,12 @@ class ModelConfig:
     def n_units(self) -> int:
         """Number of schedulable Zygarde units (layer groups)."""
         return -(-self.n_layers // self.exit_every)
+
+    @property
+    def resolved_mandatory_units(self) -> int:
+        """Mandatory prefix clamped to [1, n_units] (a config whose layer
+        count shrank — e.g. ``reduced()`` — keeps a valid prefix)."""
+        return max(1, min(self.mandatory_units, self.n_units))
 
     @property
     def pattern_period(self) -> int:
@@ -251,6 +258,7 @@ class ModelConfig:
             if self.n_frontend_tokens
             else 0,
             exit_every=1,
+            mandatory_units=1,
             n_clusters=4,
             feature_dim=min(self.feature_dim, 32),
             moe_group_size=64,

@@ -16,6 +16,7 @@ GLM4_9B = register(
         rope_theta=10_000.0,
         train_microbatches=4,
         exit_every=4,
+        mandatory_units=3,
         long_context="window",
         long_window=4096,
     )

@@ -16,6 +16,7 @@ QWEN15_05B = register(
         act="swiglu",
         rope_theta=1_000_000.0,
         exit_every=3,
+        mandatory_units=2,
         long_context="window",
         long_window=4096,
     )

@@ -22,6 +22,7 @@ XLSTM_125M = register(
         norm="layernorm",
         train_microbatches=4,
         exit_every=2,
+        mandatory_units=2,
         long_context="native",
     )
 )

@@ -1,11 +1,30 @@
-"""Production serving driver: Zygarde intermittent serving of agile models.
+"""Serving driver: Zygarde scheduling over live models, small and large.
 
-Builds one or more classification tasks (agile CNN or reduced transformer),
-a calibrated energy harvester, and runs the ServeEngine — live unit-wise
-execution with early exit, centroid adaptation, and the zeta_I scheduler.
+Two engines behind one CLI:
+
+* ``--engine scalar`` (default) — the reference event-driven loop
+  (:class:`repro.serve.ServeEngine`): one or more classification tasks
+  (agile CNN or reduced transformer), a calibrated energy harvester, and
+  live unit-wise execution with early exit, centroid adaptation, and the
+  zeta_I scheduler.  For the *vectorized* descendants of this path —
+  thousands of devices per jitted call (``FleetServeEngine``), the fused
+  Pallas segment kernel (``run(..., mode="fused")``), and million-job
+  streaming (``run_stream``) — see ``examples/intermittent_serving.py``
+  and ``docs/serving.md``; they share this engine's semantics and are
+  tested bit-exact against it.
+* ``--engine anytime`` — deadline-aware anytime serving of a registered
+  big-model config (:class:`repro.serve.anytime.AnytimeServeEngine`):
+  continuous batching over a jitted decode loop, per-request deadlines,
+  early-exit depth control from the exit-head margins, and the Eq. 7
+  energy gate (``docs/anytime_serving.md``).
+
+Examples::
 
     PYTHONPATH=src python -m repro.launch.serve --tasks mnist esc10 \
         --policy zygarde --eta 0.71 --source solar --requests 40
+
+    PYTHONPATH=src python -m repro.launch.serve --engine anytime \
+        --arch xlstm-125m --policy zygarde --requests 24 --deadline 2.5
 """
 from __future__ import annotations
 
@@ -28,37 +47,24 @@ def build_task(name: str, seed: int):
     return ds, model
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--tasks", nargs="+", default=["mnist"],
-                    choices=["mnist", "esc10", "cifar100", "vww"])
-    ap.add_argument("--policy", default="zygarde",
-                    choices=["zygarde", "edf", "edf-m", "rr"])
-    ap.add_argument("--eta", type=float, default=0.71)
-    ap.add_argument("--source", default="solar",
-                    choices=["battery", "solar", "rf"])
-    ap.add_argument("--power", type=float, default=0.3)
-    ap.add_argument("--requests", type=int, default=30)
-    ap.add_argument("--period", type=float, default=1.0)
-    ap.add_argument("--deadline", type=float, default=2.0)
-    ap.add_argument("--no-adapt", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def build_harvester(args):
     if args.source == "battery":
-        harv, eta = energy.Harvester("battery", 1.0, 0.0, 1.0), 1.0
-    else:
-        harv = energy.calibrate_harvester(args.eta, args.power,
-                                          name=args.source)
-        eta = args.eta
+        return energy.Harvester("battery", 1.0, 0.0, 1.0), 1.0
+    harv = energy.calibrate_harvester(args.eta, args.power,
+                                      name=args.source)
+    return harv, args.eta
 
+
+def run_scalar(args) -> None:
+    harv, eta = build_harvester(args)
     models, request_streams = [], []
     for i, name in enumerate(args.tasks):
         print(f"training agile model for task {name!r} ...")
         ds, model = build_task(name, args.seed + i)
         models.append(model)
         request_streams.append([
-            Request(ds.x_test[j], int(ds.y_test[j]), release=j * args.period)
+            Request(ds.x_test[j], int(ds.y_test[j]),
+                    release=j * args.period)
             for j in range(min(args.requests, len(ds.x_test)))
         ])
 
@@ -66,7 +72,8 @@ def main() -> None:
     engine = ServeEngine(
         models, harv, eta,
         config=ServeConfig(
-            policy=args.policy, period=args.period, deadline=args.deadline,
+            policy=args.policy, period=args.period,
+            deadline=args.deadline,
             horizon=args.requests * args.period + 5.0,
             adapt=not args.no_adapt, seed=args.seed,
             unit_time=np.full(n_units, 0.25),
@@ -82,6 +89,77 @@ def main() -> None:
     corr_pct = 100 * res.correct / max(res.scheduled, 1)
     print(f"scheduled {res.scheduled}/{res.released} ({sched_pct:.0f}%), "
           f"{corr_pct:.0f}% of scheduled classified correctly")
+
+
+def run_anytime(args) -> None:
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import (AnytimeConfig, AnytimeRequest,
+                             AnytimeServeEngine)
+
+    # CPU-runnable variant of the registered config, deep enough to have
+    # optional units worth skipping
+    cfg = get_config(args.arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=max(cfg.n_layers, 4), vocab=min(cfg.vocab, 64),
+        d_model=min(cfg.d_model, 128), exit_every=1)
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    policy = {"zygarde": "anytime", "edf": "edf", "edf-m": "edf-m",
+              "rr": "anytime"}[args.policy]
+    # enough steps for the full release span: idle steps cost t_base
+    span = args.requests * args.period + args.deadline + 1.0
+    serve_cfg = AnytimeConfig(
+        policy=policy, batch_slots=4,
+        max_steps=int(span / 0.02) + 64, prompt_len=2,
+        max_new_tokens=8)
+    harv = None if args.source == "battery" else build_harvester(args)[0]
+    engine = AnytimeServeEngine(cfg, params, serve_cfg=serve_cfg,
+                                supply=harv, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        AnytimeRequest(
+            prompt=[int(rng.integers(0, cfg.vocab))], n_tokens=6,
+            release=i * args.period,
+            deadline=i * args.period + args.deadline)
+        for i in range(args.requests)
+    ]
+    print(f"anytime-serving {len(reqs)} requests on {args.arch} "
+          f"({cfg.n_units} units, policy {policy!r}, "
+          f"source {args.source}) ...")
+    res = engine.run(reqs)
+    print(json.dumps(res.as_dict(), indent=2))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Zygarde serving driver (scalar agile engine or "
+                    "anytime big-model engine)")
+    ap.add_argument("--engine", default="scalar",
+                    choices=["scalar", "anytime"])
+    ap.add_argument("--tasks", nargs="+", default=["mnist"],
+                    choices=["mnist", "esc10", "cifar100", "vww"])
+    ap.add_argument("--arch", default="xlstm-125m",
+                    help="registered model config for --engine anytime")
+    ap.add_argument("--policy", default="zygarde",
+                    choices=["zygarde", "edf", "edf-m", "rr"])
+    ap.add_argument("--eta", type=float, default=0.71)
+    ap.add_argument("--source", default="solar",
+                    choices=["battery", "solar", "rf"])
+    ap.add_argument("--power", type=float, default=0.3)
+    ap.add_argument("--requests", type=int, default=30)
+    ap.add_argument("--period", type=float, default=1.0)
+    ap.add_argument("--deadline", type=float, default=2.0)
+    ap.add_argument("--no-adapt", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.engine == "anytime":
+        run_anytime(args)
+    else:
+        run_scalar(args)
 
 
 if __name__ == "__main__":

@@ -11,9 +11,12 @@ paper's four small CNNs.  All models expose:
 
 Early-exit ("agile") execution additionally uses
 :func:`repro.models.transformer.unit_forward` to run one Zygarde unit
-(a group of ``cfg.exit_every`` blocks) at a time.
+(a group of ``cfg.exit_every`` blocks) at a time; :mod:`repro.models
+.anytime` builds the full imprecise-computation view on top of it —
+per-unit exit heads, margins, and depth selection for the anytime
+serving engine (:mod:`repro.serve.anytime`).
 """
-from . import common, transformer, cnn  # noqa: F401
+from . import anytime, common, transformer, cnn  # noqa: F401
 from .transformer import (  # noqa: F401
     init_params,
     forward,

@@ -1,0 +1,249 @@
+"""Anytime (imprecise) execution of the big-model configs.
+
+Zygarde schedules DNNs as *imprecise computations*: a mandatory prefix of
+the network must run for a job to count at all, and optional suffix units
+refine the answer when time and energy allow (paper §3; *Scheduling
+Real-time Deep Learning Services as Imprecise Computations* applies the
+same framing to server-side DL).  This module gives every registered
+``ModelConfig`` family (dense / MoE / RG-LRU hybrid / xLSTM) that
+structure without retraining the backbone:
+
+* the layer stack is grouped into ``cfg.n_units`` schedulable units of
+  ``cfg.exit_every`` layers each, the first
+  ``cfg.resolved_mandatory_units`` of them mandatory;
+* each non-final unit gets a *lightweight early-exit head*: the model's
+  own ``final_norm`` + (tied) LM head, modulated by a per-unit diagonal
+  gain vector (:func:`init_heads`).  Gains initialise to ones, so an
+  untrained head is exactly "read the LM head early" (CALM-style), adds
+  ~``U x d_model`` parameters, and — crucially — the **final** unit
+  bypasses the gain entirely and uses the stock readout, which makes
+  full-depth anytime output bit-exact vs :func:`repro.models.forward` /
+  :func:`repro.models.decode_step` under ``jit`` (asserted per-config in
+  ``tests/test_anytime.py``);
+* the exit decision is the classifier-margin utility test shared with
+  the agile-CNN path (:func:`repro.core.policy.exit_test`): exit at the
+  first unit whose top1-top2 logit margin clears its threshold
+  (:func:`select_depth`), thresholds calibrated offline against a
+  target agreement with the full-depth prediction
+  (:func:`calibrate_thresholds`) or tuned online by ``repro.adapt``.
+
+The serving engine (:mod:`repro.serve.anytime`) drives
+:func:`unit_decode_step` inside a jitted continuous-batching scan and
+turns the per-unit margins into deadline/energy-aware depth control.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import policy
+from . import transformer as T
+from .common import apply_norm, dtype_of, shard
+
+__all__ = [
+    "init_heads", "exit_readout", "anytime_forward", "unit_decode_step",
+    "margins", "select_depth", "take_at_depth", "calibrate_thresholds",
+    "unit_boundaries",
+]
+
+
+def unit_boundaries(cfg) -> Tuple[int, ...]:
+    """Absolute layer count after which each unit ends (last entry =
+    ``cfg.n_layers``)."""
+    return tuple(min(cfg.n_layers, (u + 1) * cfg.exit_every)
+                 for u in range(cfg.n_units))
+
+
+def init_heads(cfg, key=None) -> dict:
+    """Per-unit exit-head parameters: a diagonal gain on the normed hidden
+    state, sharing the model's own final norm + LM head.
+
+    Ones-init means a fresh head is the identity modulation — exits read
+    the stock LM head early, and the head adds only ``U * d_model``
+    parameters.  ``key`` is accepted for API symmetry with
+    :func:`repro.models.init_params` (ones-init ignores it).  The final
+    unit never applies a gain (see :func:`exit_readout`), so training the
+    gains cannot perturb full-depth output.
+    """
+    del key
+    return {"gain": jnp.ones((cfg.n_units, cfg.d_model), dtype_of(cfg))}
+
+
+def _head_matrix(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def exit_readout(cfg, params, heads, x: jax.Array, unit: int) -> jax.Array:
+    """Exit-head logits for ``unit`` from hidden state ``x``.
+
+    ``x`` is ``(B, D)`` (decode) or ``(B, S, D)`` (sequence); returns f32
+    logits with a trailing vocab axis.  For the final unit this is
+    literally the stock readout chain (bit-exact with
+    ``decode_step`` / ``forward``); earlier units modulate the normed
+    hidden state by their gain vector first.
+    """
+    h = apply_norm(cfg.norm, params["final_norm"], x)
+    if unit < cfg.n_units - 1:
+        h = h * heads["gain"][unit].astype(h.dtype)
+    head = _head_matrix(cfg, params)
+    if x.ndim == 2:
+        logits = jnp.einsum("bd,dv->bv", h, head).astype(jnp.float32)
+        return shard(logits, "batch", "vocab")
+    logits = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+    return shard(logits, "batch", None, "vocab")
+
+
+def anytime_forward(cfg, params, heads, batch: dict, *,
+                    window: Optional[int] = None) -> jax.Array:
+    """Sequence-path anytime forward: ``(U, B, S, V)`` per-unit logits.
+
+    Runs the stack unit by unit (:func:`repro.models.transformer
+    .unit_forward`) and reads an exit head after each unit.  Under
+    ``jit``, row ``U-1`` is bit-exact vs ``forward(...)[0]``.
+    """
+    x, enc_out = T.embed_inputs(cfg, params, batch)
+    outs = []
+    for u in range(cfg.n_units):
+        x, _ = T.unit_forward(cfg, params, x, u, enc_out=enc_out,
+                              window=window)
+        outs.append(exit_readout(cfg, params, heads, x, u))
+    return jnp.stack(outs)
+
+
+def unit_decode_step(cfg, params, heads, state: dict, token: jax.Array, *,
+                     window: Optional[int] = None):
+    """One anytime serving step: ``token (B,) int32 -> ((U, B, V) f32
+    per-unit logits, new state)``.
+
+    Mirrors ``decode_step(..., unroll=True)`` layer for layer (requires a
+    ``stacked=False`` decode state), reading an exit head at every unit
+    boundary.  The final unit's row is bit-exact vs ``decode_step`` under
+    ``jit``.  The full stack always executes — depth control happens in
+    the *scheduler* (:mod:`repro.serve.anytime`), which accounts
+    time/energy only for the depth it selects; physically skipping
+    optional layers per slot would force data-dependent control flow into
+    the batched step.
+    """
+    period, n_scan, rem_kinds = T._layer_plan(cfg)
+    bounds = unit_boundaries(cfg)
+    x = params["embed"][token]
+    pos = state["pos"]
+
+    new_per_q = [[None] * n_scan for _ in range(period)]
+    new_rem = [None] * len(rem_kinds)
+    unit_logits = []
+    unit = 0
+    for i in range(cfg.n_layers):
+        kind, bp = T.get_block(cfg, params, i)
+        if i < n_scan * period:
+            q, r = i % period, i // period
+            st = state["stack"][q][r]
+        else:
+            st = state["rem"][i - n_scan * period]
+        x, ns = T.block_step(bp, cfg, kind, x, st, pos, window=window)
+        if i < n_scan * period:
+            new_per_q[q][r] = ns
+        else:
+            new_rem[i - n_scan * period] = ns
+        if i + 1 == bounds[unit]:
+            unit_logits.append(exit_readout(cfg, params, heads, x, unit))
+            unit += 1
+
+    new_state = dict(state)
+    new_state["pos"] = pos + 1
+    new_state["stack"] = tuple(tuple(states) for states in new_per_q)
+    new_state["rem"] = tuple(new_rem)
+    return jnp.stack(unit_logits), new_state
+
+
+def margins(unit_logits: jax.Array) -> jax.Array:
+    """Top1 - top2 logit margin per unit: ``(U, ..., V) -> (U, ...)``.
+
+    The LLM analogue of the agile path's classifier L1 margin — the
+    confidence signal the utility test thresholds."""
+    top2, _ = jax.lax.top_k(unit_logits, 2)
+    return top2[..., 0] - top2[..., 1]
+
+
+def select_depth(margin: jax.Array, exit_thr: jax.Array,
+                 use_exit_thr: jax.Array, mandatory=1):
+    """Depth selected by the utility test.
+
+    margin       : (U, ...) per-unit margins
+    exit_thr     : (U,) per-unit thresholds
+    use_exit_thr : (U,) bool/0-1 per-unit enables
+    mandatory    : scalar; units before this index may not exit
+
+    Returns ``(depth, exit_unit)`` — ``depth`` in ``[1, U]`` (units to
+    run: the first enabled unit ``u >= mandatory - 1`` whose margin
+    clears its threshold, else full depth), and ``exit_unit`` in
+    ``[0, U]`` (the histogram bin: U = never exited), both i32 with the
+    trailing shape of ``margin``.
+    """
+    U = margin.shape[0]
+    extra = (1,) * (margin.ndim - 1)
+    u = jnp.arange(U).reshape((U,) + extra)
+    can = (u >= jnp.asarray(mandatory) - 1) & (u < U - 1)
+    enabled = jnp.asarray(use_exit_thr).astype(bool).reshape((U,) + extra)
+    thr = jnp.asarray(exit_thr, jnp.float32).reshape((U,) + extra)
+    fire = can & enabled & policy.exit_test(margin, thr)
+    first = jnp.argmax(fire, axis=0).astype(jnp.int32)
+    any_fire = jnp.any(fire, axis=0)
+    depth = jnp.where(any_fire, first + 1, U).astype(jnp.int32)
+    exit_unit = jnp.where(any_fire, first, U).astype(jnp.int32)
+    return depth, exit_unit
+
+
+def take_at_depth(values: jax.Array, depth: jax.Array) -> jax.Array:
+    """Select the per-unit value at each element's depth.
+
+    values: (U, ...) stacked per-unit outputs (optionally with extra
+    trailing axes, e.g. a vocab axis); depth: (...) in [1, U] matching
+    the leading batch shape.  Returns values[depth - 1] elementwise.
+    """
+    idx = depth.astype(jnp.int32) - 1
+    while idx.ndim < values.ndim - 1:
+        idx = idx[..., None]
+    return jnp.take_along_axis(values, idx[None], axis=0)[0]
+
+
+def calibrate_thresholds(unit_logits, *, target_agreement: float = 0.98):
+    """Host-side threshold calibration against full-depth agreement.
+
+    For each non-final unit, finds the smallest margin threshold such
+    that among calibration tokens with ``margin > threshold`` the exit
+    prediction agrees with the full-depth prediction at rate >=
+    ``target_agreement``; units that cannot reach the target at any
+    threshold stay disabled.  Returns ``(exit_thr (U,) f32,
+    use_exit_thr (U,) bool)`` as jnp arrays, ready for
+    :func:`select_depth` or as ``repro.adapt`` search seeds.
+    """
+    ul = np.asarray(jax.device_get(unit_logits), np.float32)
+    U, V = ul.shape[0], ul.shape[-1]
+    flat = ul.reshape(U, -1, V)
+    preds = flat.argmax(-1)
+    part = np.partition(flat, V - 2, axis=-1)
+    marg = part[..., -1] - part[..., -2]
+    final = preds[-1]
+    thr = np.full((U,), np.inf, np.float32)
+    use = np.zeros((U,), bool)
+    for u in range(U - 1):
+        agree = (preds[u] == final).astype(np.float64)
+        order = np.argsort(-marg[u], kind="stable")
+        cum = np.cumsum(agree[order]) / np.arange(1, order.size + 1)
+        ok = np.nonzero(cum >= target_agreement)[0]
+        if not ok.size:
+            continue
+        k = int(ok.max())         # largest high-margin prefix meeting target
+        m_in = marg[u][order[k]]  # smallest included margin
+        if k + 1 < order.size:
+            thr[u] = 0.5 * (m_in + marg[u][order[k + 1]])
+        else:
+            thr[u] = m_in - 1.0   # everything qualifies
+        if thr[u] >= m_in:        # ties: keep the strict > test inclusive
+            thr[u] = np.nextafter(m_in, -np.inf)
+        use[u] = True
+    return jnp.asarray(thr), jnp.asarray(use)

@@ -1,2 +1,10 @@
 from .engine import ServeEngine, ServeConfig, DynamicJobProfile, Request  # noqa: F401
 from .fleet_engine import FleetServeEngine, FleetServeResult  # noqa: F401
+from .anytime import (  # noqa: F401
+    AnytimeConfig,
+    AnytimeKnobs,
+    AnytimeRequest,
+    AnytimeResult,
+    AnytimeServeEngine,
+    AnytimeTables,
+)

@@ -1,14 +1,30 @@
-"""Serving engine: job queue + Zygarde scheduler + agile executor + energy sim.
+"""Scalar serving engine: job queue + Zygarde scheduler + agile executor.
 
-Unlike :func:`repro.core.scheduler.simulate` (which replays precomputed job
-profiles for large-scale scheduler studies), the engine *actually executes*
-the model unit-by-unit through the agile frontends, including runtime
-centroid adaptation — classification outcomes therefore depend on the order
-the scheduler chose, exactly as on the device.
+This is the *reference* single-device engine — an event-driven loop over
+one agile CNN / reduced-transformer task set.  Unlike
+:func:`repro.core.scheduler.simulate` (which replays precomputed job
+profiles for large-scale scheduler studies), the engine *actually
+executes* the model unit-by-unit through the agile frontends, including
+runtime centroid adaptation — classification outcomes therefore depend on
+the order the scheduler chose, exactly as on the device.
 
-Job profiles are *lazy*: unit u's utility-test outcome is computed the first
-time the scheduler executes unit u (``DynamicJobProfile``), so the same
-event-driven simulator drives both the replay and live paths.
+Job profiles are *lazy*: unit u's utility-test outcome is computed the
+first time the scheduler executes unit u (``DynamicJobProfile``), so the
+same event-driven simulator drives both the replay and live paths.
+
+Scaled-up siblings (this module stays the semantics oracle they are
+tested against):
+
+* :class:`repro.serve.fleet_engine.FleetServeEngine` — the vectorized
+  fleet path: one jitted ``lax.scan`` serves thousands of devices, with
+  ``run(..., mode="fused")`` executing the whole segment loop inside one
+  Pallas kernel and ``run_stream`` streaming million-job workloads
+  through donated chunked scans.  Bit-exact vs this engine on
+  clock-commensurate workloads (``tests/test_fleet_engine.py``).
+* :class:`repro.serve.anytime.AnytimeServeEngine` — deadline-aware
+  anytime serving of the big-model configs: continuous batching over a
+  jitted decode loop with per-request early-exit depth control
+  (``docs/anytime_serving.md``).
 """
 from __future__ import annotations
 

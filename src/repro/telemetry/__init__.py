@@ -38,6 +38,7 @@ from .state import (  # noqa: F401
     TelemetryConfig,
     init_fleet_telemetry,
     init_telemetry,
+    record_anytime_step,
     record_knob_updates,
     record_step,
 )

@@ -221,6 +221,49 @@ def record_step(tel: Telemetry, ev: S.StepEvents, t) -> Telemetry:
     return tel
 
 
+def record_anytime_step(tel: Telemetry, *, releases, misses, scheduled,
+                        retired, slack_sum, slack_min, depth_hist,
+                        occupancy, energy, t) -> Telemetry:
+    """Fold one anytime-serving engine step into the telemetry.
+
+    The continuous-batching engine (:mod:`repro.serve.anytime`) has no
+    :class:`repro.core.step.StepEvents` — its transition produces the
+    aggregates directly: ``releases`` = admissions, ``scheduled`` /
+    ``misses`` = on-time / late completions, ``depth_hist`` = a
+    ``(U + 1,)`` i32 increment of per-*token* selected depths (bins
+    0..U-1 = exited at that unit, bin U = ran full depth), ``slack_*``
+    over this step's completions (``slack_min = +inf`` when none),
+    ``occupancy`` = busy batch slots.  Same ring semantics as
+    :func:`record_step`: at most one event per kind per step.
+    """
+    releases = jnp.asarray(releases, _I32)
+    misses = jnp.asarray(misses, _I32)
+    scheduled = jnp.asarray(scheduled, _I32)
+    retired = jnp.asarray(retired, _I32)
+    occupancy = jnp.asarray(occupancy, _I32)
+    tel = tel._replace(
+        c_release=tel.c_release + releases,
+        c_miss=tel.c_miss + misses,
+        c_sched=tel.c_sched + scheduled,
+        c_retired=tel.c_retired + retired,
+        slack_sum=tel.slack_sum + jnp.asarray(slack_sum, _F32),
+        slack_min=jnp.minimum(tel.slack_min,
+                              jnp.asarray(slack_min, _F32)),
+        exit_hist=tel.exit_hist + jnp.asarray(depth_hist, _I32),
+        occ_sum=tel.occ_sum + occupancy,
+        occ_max=jnp.maximum(tel.occ_max, occupancy),
+        energy_sum=tel.energy_sum + jnp.asarray(energy, _F32),
+        energy_min=jnp.minimum(tel.energy_min,
+                               jnp.asarray(energy, _F32)),
+        n_steps=tel.n_steps + 1,
+    )
+    mean_slack = jnp.asarray(slack_sum, _F32) / jnp.maximum(retired, 1)
+    tel = _push(tel, misses > 0, EVENT_KINDS["miss"],
+                misses.astype(_F32), t)
+    tel = _push(tel, retired > 0, EVENT_KINDS["complete"], mean_slack, t)
+    return tel
+
+
 @jax.jit
 def record_knob_updates(tel: Telemetry, changed, t) -> Telemetry:
     """Host-boundary event: an adaptation hook rewrote the tunable config

@@ -1,0 +1,228 @@
+"""Anytime serving of the big-model configs: early-exit heads over the
+registered transformer families + the deadline-aware continuous-batching
+engine (`docs/anytime_serving.md`).
+
+The load-bearing contract is *bit-exactness at full depth*: with fresh
+(ones-init) heads, the last row of the anytime readouts must equal the
+stock forward / decode outputs exactly — under ``jit``, like every other
+parity claim in this repo — so enabling anytime serving can never change
+what the model computes, only how much of it the scheduler charges for.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import adapt
+from repro.configs import get_config
+from repro.models import anytime as A
+from repro.models import transformer as T
+from repro.serve import (
+    AnytimeConfig,
+    AnytimeRequest,
+    AnytimeServeEngine,
+)
+from repro.telemetry import TelemetryConfig
+
+# one family per step-core path: attention+GQA (qwen), partial-RoPE +
+# sliding-window (glm), recurrent xLSTM — the three configs the engine
+# acceptance covers
+ANYTIME_ARCHS = ("xlstm-125m", "qwen1.5-0.5b", "glm4-9b")
+
+
+def token_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S)), dtype=jnp.int32)}
+
+
+# --------------------------------------------------------------------- #
+# Full-depth bit-exactness (sequence + decode paths), per family.
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("arch", ANYTIME_ARCHS)
+def test_sequence_full_depth_bit_exact(arch, key):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, key)
+    heads = A.init_heads(cfg)
+    batch = token_batch(cfg)
+
+    ref = jax.jit(lambda p, b: T.forward(cfg, p, b, remat=False)[0])(
+        params, batch)
+    got = jax.jit(lambda p, b: A.anytime_forward(cfg, p, heads, b))(
+        params, batch)
+
+    B, S = batch["tokens"].shape
+    assert got.shape == (cfg.n_units, B, S, cfg.vocab)
+    assert bool(jnp.isfinite(got).all())
+    # exact equality, not a tolerance: the final unit reads the stock head
+    np.testing.assert_array_equal(np.asarray(got[-1]), np.asarray(ref))
+
+
+@pytest.mark.parametrize("arch", ANYTIME_ARCHS)
+def test_decode_full_depth_bit_exact(arch, key):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, key)
+    heads = A.init_heads(cfg)
+    B, L = 2, 8
+    s_ref = T.init_decode_state(cfg, B, L, cache_len=L, stacked=False)
+    s_any = T.init_decode_state(cfg, B, L, cache_len=L, stacked=False)
+
+    step_ref = jax.jit(lambda p, s, t: T.decode_step(
+        cfg, p, s, t, unroll=True))
+    step_any = jax.jit(lambda p, s, t: A.unit_decode_step(
+        cfg, p, heads, s, t))
+
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        tok = jnp.asarray(rng.integers(0, cfg.vocab, (B,)), jnp.int32)
+        l_ref, s_ref = step_ref(params, s_ref, tok)
+        ul, s_any = step_any(params, s_any, tok)
+        assert ul.shape == (cfg.n_units, B, cfg.vocab)
+        np.testing.assert_array_equal(np.asarray(ul[-1]),
+                                      np.asarray(l_ref))
+    # the decode states advanced identically too
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        s_ref, s_any)
+
+
+# --------------------------------------------------------------------- #
+# The utility test: threshold sweep -> monotone depth.
+# --------------------------------------------------------------------- #
+
+
+def test_select_depth_monotone_in_threshold():
+    """Raising the margin threshold can only deepen execution."""
+    rng = np.random.default_rng(0)
+    U, N = 4, 256
+    margin = jnp.asarray(rng.exponential(2.0, (U, N)), jnp.float32)
+    use = jnp.ones((U,), jnp.float32)
+    prev = None
+    for t in np.linspace(0.0, float(margin.max()) + 1.0, 9):
+        depth, exit_unit = A.select_depth(
+            margin, jnp.full((U,), t, jnp.float32), use, mandatory=1)
+        assert int(depth.min()) >= 1 and int(depth.max()) <= U
+        mean = float(depth.mean())
+        if prev is not None:
+            assert mean >= prev - 1e-9
+        prev = mean
+    # threshold above every margin => the sweep ends at full depth
+    assert prev == pytest.approx(U)
+
+
+def test_take_at_depth_picks_unit_rows():
+    U, N, V = 3, 5, 7
+    vals = jnp.arange(U * N * V, dtype=jnp.float32).reshape(U, N, V)
+    depth = jnp.asarray([1, 2, 3, 1, 2], jnp.int32)
+    out = A.take_at_depth(vals, depth)
+    for i in range(N):
+        np.testing.assert_array_equal(
+            np.asarray(out[i]), np.asarray(vals[int(depth[i]) - 1, i]))
+
+
+# --------------------------------------------------------------------- #
+# Engine behavior (tiny random-init qwen-family model).
+# --------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-0.5b").reduced(),
+        n_layers=4, vocab=64, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, exit_every=1)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def tiny_requests(n=6):
+    return [
+        AnytimeRequest(prompt=(1 + i % 4, 2), n_tokens=3,
+                       release=0.3 * i, deadline=0.3 * i + 2.5)
+        for i in range(n)
+    ]
+
+
+def make_engine(tiny_model, policy="anytime"):
+    cfg, params = tiny_model
+    return AnytimeServeEngine(
+        cfg, params,
+        serve_cfg=AnytimeConfig(
+            policy=policy, batch_slots=2, max_steps=160,
+            prompt_len=2, max_new_tokens=4))
+
+
+def result_arrays(res):
+    return (res.status, res.finish, res.tardiness, res.agree,
+            res.tokens, res.depth_sum)
+
+
+def test_engine_serves_and_segments_bit_exact(tiny_model):
+    eng = make_engine(tiny_model)
+    reqs = tiny_requests()
+    res1 = eng.run(reqs, n_segments=1)
+    res4 = eng.run(reqs, n_segments=4)
+    assert res1.completed == len(reqs)
+    for a, b in zip(result_arrays(res1), result_arrays(res4)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_telemetry_is_neutral(tiny_model):
+    eng = make_engine(tiny_model)
+    reqs = tiny_requests()
+    plain = eng.run(reqs)
+    with_tel = eng.run(reqs, telemetry=TelemetryConfig(level="full"))
+    assert plain.telemetry is None
+    assert with_tel.telemetry is not None
+    for a, b in zip(result_arrays(plain), result_arrays(with_tel)):
+        np.testing.assert_array_equal(a, b)
+    # the exit-depth histogram saw every generated token
+    hist = np.asarray(jax.device_get(with_tel.telemetry.exit_hist))
+    assert hist.sum() == with_tel.tokens.sum()
+
+
+def test_engine_edf_runs_full_depth(tiny_model):
+    """Fixed-depth EDF charges every token the full stack and therefore
+    agrees with full depth by construction."""
+    eng = make_engine(tiny_model, policy="edf")
+    res = eng.run(tiny_requests())
+    assert res.completed == res.n_requests
+    assert res.mean_depth == pytest.approx(eng.n_units)
+    assert res.agreement == pytest.approx(1.0)
+
+
+def test_engine_depth_monotone_in_threshold(tiny_model):
+    """The engine-level threshold sweep mirrors select_depth: a permissive
+    threshold exits shallow, an unreachable one runs full depth."""
+    eng = make_engine(tiny_model)
+    reqs = tiny_requests()
+    depths = []
+    for thr in (-1e9, 1.0, 1e9):
+        knobs = eng.default_knobs(
+            exit_thr=jnp.full((eng.n_units,), thr, jnp.float32))
+        depths.append(eng.run(reqs, knobs=knobs).mean_depth)
+    assert depths[0] <= depths[1] + 1e-9 <= depths[2] + 2e-9
+    assert depths[0] == pytest.approx(eng.mandatory)
+    assert depths[2] == pytest.approx(eng.n_units)
+
+
+def test_engine_tune_smoke(tiny_model):
+    """adapt.tune over the engine's score_fn: the vmapped objective scores
+    a population and returns in-bounds knobs."""
+    eng = make_engine(tiny_model)
+    reqs = tiny_requests(4)
+    space = adapt.anytime_space(eng)
+    objective = adapt.make_anytime_objective(eng, reqs)
+    result = adapt.tune(objective, space, budget=6, driver="random",
+                        seed=0)
+    assert set(result.best_params) == set(space.names)
+    assert np.isfinite(result.best_score)
+    knobs = adapt.knobs_from_params(eng, result.best_params)
+    res = eng.run(reqs, knobs=knobs)
+    assert res.score == pytest.approx(float(result.best_score), abs=1e-6)

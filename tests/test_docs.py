@@ -1,0 +1,42 @@
+"""Documentation hygiene in tier-1: every relative link in README.md and
+docs/*.md must resolve inside the repo.
+
+The heavier example `--help` smoke (subprocess per module) lives in the CI
+docs lane (``python tools/check_docs.py``); the link check is cheap enough
+to gate every test run.
+"""
+import importlib.util
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_pages_exist():
+    mod = load_check_docs()
+    pages = [pathlib.Path(p).name for p in mod.doc_pages()]
+    assert "README.md" in pages
+    # the documented layer map + the tentpole how-to must be present
+    for required in ("architecture.md", "anytime_serving.md",
+                     "benchmarks.md"):
+        assert required in pages
+
+
+def test_no_broken_intra_repo_links():
+    mod = load_check_docs()
+    failures = mod.check_links()
+    assert not failures, "\n".join(failures)
+
+
+def test_readme_links_every_docs_page():
+    readme = (REPO / "README.md").read_text(encoding="utf-8")
+    for page in sorted((REPO / "docs").glob("*.md")):
+        assert f"docs/{page.name}" in readme, (
+            f"README.md does not link docs/{page.name}")

@@ -1,0 +1,137 @@
+"""Repo documentation checks, run as the CI docs lane.
+
+Two gates, both fast and dependency-free:
+
+1. **Intra-repo links** — every relative markdown link in `README.md`
+   and `docs/*.md` must resolve to an existing file or directory
+   (anchors are stripped; external `http(s)://` / `mailto:` links are
+   skipped — this gate is about repo rot, not the internet).
+2. **Example smoke** — every `examples/*.py` module must exit 0 on
+   `--help` with `PYTHONPATH=src`.  This catches import-time breakage
+   and argparse rot in the documented entrypoints without paying for a
+   full run.
+
+Usage::
+
+    python tools/check_docs.py            # both gates
+    python tools/check_docs.py --links    # links only
+    python tools/check_docs.py --examples # example smoke only
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must resolve too.  Nested parens don't occur in our docs.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_pages():
+    pages = [os.path.join(REPO, "README.md")]
+    docs_dir = os.path.join(REPO, "docs")
+    if os.path.isdir(docs_dir):
+        pages.extend(
+            os.path.join(docs_dir, n)
+            for n in sorted(os.listdir(docs_dir))
+            if n.endswith(".md")
+        )
+    return pages
+
+
+def check_links() -> list[str]:
+    """Return a list of "page:line: broken link" failure strings."""
+    failures = []
+    for page in doc_pages():
+        base = os.path.dirname(page)
+        rel_page = os.path.relpath(page, REPO)
+        with open(page, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                for target in _LINK_RE.findall(line):
+                    if target.startswith(_EXTERNAL):
+                        continue
+                    path = target.split("#", 1)[0]
+                    if not path:  # pure in-page anchor
+                        continue
+                    resolved = os.path.normpath(os.path.join(base, path))
+                    if not os.path.exists(resolved):
+                        failures.append(
+                            f"{rel_page}:{lineno}: broken link -> {target}"
+                        )
+                    elif os.path.commonpath([resolved, REPO]) != REPO:
+                        failures.append(
+                            f"{rel_page}:{lineno}: link escapes repo -> {target}"
+                        )
+    return failures
+
+
+def check_examples() -> list[str]:
+    """Return failures from running every examples/*.py with --help."""
+    failures = []
+    ex_dir = os.path.join(REPO, "examples")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    for name in sorted(os.listdir(ex_dir)):
+        if not name.endswith(".py"):
+            continue
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ex_dir, name), "--help"],
+            capture_output=True,
+            text=True,
+            env=env,
+            cwd=REPO,
+            timeout=120,
+        )
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-12:]
+            failures.append(
+                f"examples/{name} --help exited {proc.returncode}:\n  "
+                + "\n  ".join(tail)
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--links", action="store_true", help="link check only")
+    ap.add_argument(
+        "--examples", action="store_true", help="example --help smoke only"
+    )
+    args = ap.parse_args(argv)
+    run_links = args.links or not args.examples
+    run_examples = args.examples or not args.links
+
+    failures = []
+    if run_links:
+        link_failures = check_links()
+        n_pages = len(doc_pages())
+        print(
+            f"links: {n_pages} pages checked, {len(link_failures)} broken"
+        )
+        failures.extend(link_failures)
+    if run_examples:
+        ex_failures = check_examples()
+        n_ex = len(
+            [n for n in os.listdir(os.path.join(REPO, "examples"))
+             if n.endswith(".py")]
+        )
+        print(f"examples: {n_ex} modules smoked, {len(ex_failures)} failed")
+        failures.extend(ex_failures)
+
+    for f in failures:
+        print(f"FAIL: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
